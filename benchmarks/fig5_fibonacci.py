@@ -1,0 +1,43 @@
+"""Paper Figure 5: gain from expressing divide-and-conquer recursion as
+bubbles, vs thread count, on both evaluation machines.
+
+Paper: Bi-Xeon HT stabilises at 30-40% gain from 16 threads; NUMA 4x4
+Itanium II reaches 40% at 32 threads and up to 80% at 512.
+Output CSV: name,us_per_call(gain %),derived
+"""
+
+from __future__ import annotations
+
+from repro.core import (BubblePolicy, SimplePolicy, Simulator, bi_xeon_ht,
+                        fibonacci_workload, novascale_16)
+
+
+def gain(n_threads: int, topo_fn, gs: int, mem: float = 0.6) -> float:
+    ts = {}
+    for with_b in (False, True):
+        topo = topo_fn()
+        pol = (BubblePolicy(topo) if with_b
+               else SimplePolicy(topo, disorder=4.0))
+        root = fibonacci_workload(n_threads, with_bubbles=with_b,
+                                  group_size=gs)
+        r = Simulator(topo, pol, mem_fraction=mem, contention=0.5).run(root)
+        ts[with_b] = r.time
+    return (ts[False] - ts[True]) / ts[False] * 100
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for n in (16, 32, 128, 512):
+        g = gain(n, novascale_16, gs=4)
+        paper = {32: "paper ~40%", 512: "paper up to 80%"}.get(n, "")
+        rows.append((f"fig5/numa4x4_n{n}", g, paper))
+    for n in (8, 16, 64):
+        g = gain(n, bi_xeon_ht, gs=2)
+        rows.append((f"fig5/bixeon_n{n}", g,
+                     "paper 30-40% stabilised" if n >= 16 else ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, d in run():
+        print(f"{name},{v:.1f},{d}")

@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: the three chosen cells, one iteration per run.
+
+Each invocation lowers ONE (cell, variant) and appends the result to
+benchmarks/results/perf_iterations/.  EXPERIMENTS.md §Perf is written from
+these JSONs.
+
+  python -m benchmarks.perf_iterations --list
+  python -m benchmarks.perf_iterations --run yi_sp
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import dryrun
+from repro.launch.mesh import make_mesh, make_production_mesh
+
+OUT = Path(__file__).resolve().parent / "results" / "perf_iterations"
+
+def prod():
+    return make_production_mesh()
+
+def ep2d():
+    return make_mesh((16, 8, 2), ("data", "expert", "ffn"))
+
+# (name, arch, shape, strategy, mesh factory)
+ITERS = {
+    # --- cell 1: yi-6b train_4k (representative dense; collective-bound) ---
+    "yi_sp":        ("yi-6b", "train_4k", "bubbles_sp", prod),
+    "yi_fsdp_sp":   ("yi-6b", "train_4k", "fsdp_sp", prod),
+    "yi_simple":    ("yi-6b", "train_4k", "simple", prod),
+    "yi_bound":     ("yi-6b", "train_4k", "bound", prod),
+    # --- cell 2: grok-1-314b train_4k (worst roofline fraction) ---
+    "grok_ep2d":    ("grok-1-314b", "train_4k", "ep2d", ep2d),
+    "grok_ep2d_sp": ("grok-1-314b", "train_4k", "ep2d_sp", ep2d),
+    "grok_fsdp_sp": ("grok-1-314b", "train_4k", "fsdp_sp", prod),
+    "grok_bfsdp_sp": ("grok-1-314b", "train_4k", "bubbles_fsdp_sp", prod),
+    "dsk_final": ("deepseek-moe-16b", "train_4k", "bubbles", prod),
+    "grok_gather": ("grok-1-314b", "train_4k", "bubbles", prod),
+    "grok_gather_sp": ("grok-1-314b", "train_4k", "bubbles_sp", prod),
+    "dsk_gather": ("deepseek-moe-16b", "train_4k", "bubbles", prod),
+    "dsk_prefill_gather": ("deepseek-moe-16b", "prefill_32k", "bubbles", prod),
+    "grok_decode_gather": ("grok-1-314b", "decode_32k", "bubbles", prod),
+    "dsk_prefill_final": ("deepseek-moe-16b", "prefill_32k", "bubbles", prod),
+    "grok_decode_cap": ("grok-1-314b", "decode_32k", "bubbles", prod),
+    "grok_decode_ep2d": ("grok-1-314b", "decode_32k", "ep2d", ep2d),
+    # --- cell 3: deepseek prefill_32k (most collective-bound serving) ---
+    "dsk_train_shared": ("deepseek-moe-16b", "train_4k", "bubbles", prod),
+    "dsk_train_sp": ("deepseek-moe-16b", "train_4k", "bubbles_sp", prod),
+    "dsk_prefill_shared": ("deepseek-moe-16b", "prefill_32k", "bubbles", prod),
+    "dsk_prefill_sp": ("deepseek-moe-16b", "prefill_32k", "bubbles_sp", prod),
+    "dsk_ep2d_sp":  ("deepseek-moe-16b", "train_4k", "ep2d_sp",
+                     lambda: make_mesh((4, 32, 2), ("data", "expert", "ffn"))),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run", default=None)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list or not args.run:
+        for k, (a, s, st, _) in ITERS.items():
+            print(f"{k:20s} {a} x {s} [{st}]")
+        return
+    name = args.run
+    arch, shape, strategy, mesh_fn = ITERS[name]
+    cfg = get_config(arch)
+    mesh = mesh_fn()
+    print(f"RUN {name}: {arch} x {shape} [{strategy}] "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    out = dryrun.run_cell(cfg, shape, mesh, strategy)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{name}.json").write_text(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

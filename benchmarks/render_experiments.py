@@ -1,0 +1,86 @@
+"""Render the data-driven sections of EXPERIMENTS.md from result JSONs.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+R = Path(__file__).resolve().parent / "results"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "?"
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(mesh_filter: str) -> str:
+    rows = []
+    for f in sorted(glob.glob(str(R / "dryrun" / "*.json"))):
+        d = json.load(open(f))
+        pods = "2pod" if "pod" in d["mesh"] else "1pod"
+        if pods != mesh_filter or d["strategy"] != "bubbles":
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | "
+            f"{r['t_compute_s']*1e3:.1f} | {r['t_memory_s']*1e3:.1f} | "
+            f"{r['t_collective_s']*1e3:.1f} | **{r['bottleneck'][:4]}** | "
+            f"{r['model_flops']:.2e} | {r['useful_fraction']:.2f} | "
+            f"{r['mfu_at_roofline']*100:.1f}% | "
+            f"{fmt_bytes(m['argument_bytes_per_chip'])} | "
+            f"{'Y' if m['fits'] else 'N'} |")
+    head = ("| arch | shape | t_comp ms | t_mem ms | t_coll ms | bneck | "
+            "MODEL_FLOPS | useful | MFU@roof | args GiB/chip | fits |\n"
+            "|---|---|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def collective_summary(mesh_filter: str) -> str:
+    rows = []
+    for f in sorted(glob.glob(str(R / "dryrun" / "*.json"))):
+        d = json.load(open(f))
+        pods = "2pod" if "pod" in d["mesh"] else "1pod"
+        if pods != mesh_filter or d["strategy"] != "bubbles":
+            continue
+        c = d["collectives"]
+        parts = [f"{k}:{v['count']}x/{v['bytes']/2**30:.1f}GiB"
+                 for k, v in c.items()]
+        rows.append(f"| {d['arch']} | {d['shape']} | {' '.join(parts)} |")
+    return ("| arch | shape | collective schedule (per-chip bytes, depth-2 "
+            "unrolled probe) |\n|---|---|---|\n" + "\n".join(rows))
+
+
+def perf_iteration_table() -> str:
+    rows = []
+    for f in sorted(glob.glob(str(R / "perf_iterations" / "*.json"))):
+        d = json.load(open(f))
+        name = Path(f).stem
+        r = d["roofline"]
+        m = d.get("memory", {})
+        mesh = d.get("mesh", {})
+        rows.append(
+            f"| {name} | {d.get('arch','?')} {d.get('shape','')} | "
+            f"{d.get('strategy','?')} {tuple(mesh.values())} | "
+            f"{r['t_step_s']*1e3:.0f} | {r['bottleneck'][:4]} | "
+            f"{r['useful_fraction']:.2f} | {r['mfu_at_roofline']*100:.2f}% | "
+            f"{'Y' if m.get('fits') else 'N'} |")
+    return ("| iteration | cell | strategy/mesh | t_step ms | bneck | useful "
+            "| MFU@roof | fits |\n|---|---|---|---|---|---|---|---|\n"
+            + "\n".join(rows))
+
+
+if __name__ == "__main__":
+    print("## 1-pod roofline (bubbles strategy)\n")
+    print(roofline_table("1pod"))
+    print("\n## 2-pod roofline (bubbles strategy)\n")
+    print(roofline_table("2pod"))
+    print("\n## collectives (1pod)\n")
+    print(collective_summary("1pod"))
+    print("\n## perf iterations\n")
+    print(perf_iteration_table())

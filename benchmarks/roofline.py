@@ -1,0 +1,58 @@
+"""Roofline bench: aggregates the dry-run cells into the §Roofline table.
+
+Reads ``benchmarks/results/dryrun/*.json`` (written by
+``repro.launch.dryrun``).  Emits one row per (arch × shape × mesh):
+roofline step time with the dominant term named, plus strategy-comparison
+rows (simple/bound/bubbles) for any cells lowered with multiple strategies
+— the fleet-scale analogue of the paper's Table 2.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells() -> list[dict]:
+    return [json.load(open(f)) for f in sorted(glob.glob(str(RESULTS / "*.json")))]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline/no_cells", 0.0,
+                 "run: python -m repro.launch.dryrun")]
+    for d in cells:
+        r = d["roofline"]
+        pods = "2pod" if "pod" in d["mesh"] else "1pod"
+        name = f"roofline/{d['arch']}/{d['shape']}/{pods}/{d['strategy']}"
+        derived = (f"{r['bottleneck']}-bound mfu={r['mfu_at_roofline']:.3f} "
+                   f"useful={r['useful_fraction']:.2f} "
+                   f"fits={d['memory']['fits']}")
+        rows.append((name, r["t_step_s"] * 1e3, derived))
+
+    # strategy comparisons (Table-2 analogue) where present
+    by_cell: dict = {}
+    for d in cells:
+        pods = "2pod" if "pod" in d["mesh"] else "1pod"
+        by_cell.setdefault((d["arch"], d["shape"], pods), {})[
+            d["strategy"]] = d["roofline"]["t_step_s"]
+    for (arch, shape, pods), strat in by_cell.items():
+        if len(strat) > 1 and "bubbles" in strat:
+            for s, t in strat.items():
+                if s == "bubbles":
+                    continue
+                rows.append((
+                    f"roofline_strategy/{arch}/{shape}/{pods}/{s}_vs_bubbles",
+                    t / strat["bubbles"],
+                    f"step-time ratio {s}/bubbles (>1 = bubbles faster)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, d in run():
+        print(f"{name},{v:.3f},{d}")

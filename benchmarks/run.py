@@ -1,0 +1,31 @@
+"""Benchmark aggregator: one module per paper table/figure + roofline.
+
+Prints ``name,value,derived`` CSV rows (value unit depends on the bench:
+us/call for Table 1, speedup for Table 2, gain-% for Fig 5, roofline step
+ms for the dry-run table).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import fig5_fibonacci, roofline, table1_cost, \
+        table2_conduction
+
+    failed = 0
+    for mod in (table1_cost, table2_conduction, fig5_fibonacci, roofline):
+        try:
+            for name, v, d in mod.run():
+                print(f"{name},{v:.4f},{d}")
+        except Exception:
+            traceback.print_exc()
+            failed += 1
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 2: conduction/advection speedups on the simulated NovaScale.
+
+Reproduces the simple / bound / bubbles comparison (16 Itanium II, 4 NUMA
+nodes, NUMA factor 3) for the two §5.2 applications: heat conduction
+(mem_fraction 0.25) and advection (0.4 — more memory-bound per unit work).
+
+Paper values: conduction 10.58 / 15.82 / 15.80; advection 9.11/12.40/12.40.
+Output CSV: name,us_per_call(speedup),derived
+"""
+
+from __future__ import annotations
+
+from repro.core import (BoundPolicy, BubblePolicy, PerCpuPolicy, SimplePolicy,
+                        Simulator, novascale_16, stripes_workload)
+
+PAPER = {
+    ("conduction", "simple"): 10.58, ("conduction", "bound"): 15.82,
+    ("conduction", "bubbles"): 15.80,
+    ("advection", "simple"): 9.11, ("advection", "bound"): 12.40,
+    ("advection", "bubbles"): 12.40,
+}
+
+
+def _run(policy_cls, mem, group=None, **kw):
+    topo = novascale_16()
+    pol = policy_cls(topo, **kw)
+    root = stripes_workload(16, work=100.0, group=group)
+    sim = Simulator(topo, pol, jitter=0.1, mem_fraction=mem, contention=0.5)
+    return sim.run(root, cycles=8).speedup
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for app, mem in (("conduction", 0.25), ("advection", 0.4)):
+        for name, cls, kw, grp in (
+                ("simple", SimplePolicy, {"disorder": 4.0}, None),
+                ("percpu", PerCpuPolicy, {}, None),
+                ("bound", BoundPolicy, {}, None),
+                ("bubbles", BubblePolicy, {}, 4)):
+            s = _run(cls, mem, group=grp, **kw)
+            paper = PAPER.get((app, name))
+            rows.append((f"table2/{app}_{name}", s,
+                         f"paper: {paper}" if paper else "extra baseline"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, d in run():
+        print(f"{name},{v:.2f},{d}")

@@ -1,0 +1,55 @@
+"""Batched serving with bubble gang scheduling + regeneration.
+
+Demonstrates the serving engine on a reduced config:
+* SLA priorities (paper §3.3.2: a processor takes the highest-priority
+  task even if less-prioritised ones are more local),
+* gangs (shared-prefix request groups co-scheduled like Figure 1),
+* regeneration of a stalled gang (paper §3.3.3).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serving import ServingEngine
+
+
+def main():
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, n_slots=4, cache_len=64)
+    rng = np.random.default_rng(0)
+
+    print("submitting 3 SLA classes x 4 requests (two shared-prefix gangs)")
+    for i in range(12):
+        prompt = rng.integers(1, cfg.vocab, 12)
+        gang = f"prefix{i % 2}" if i < 8 else None
+        rid = eng.submit(prompt, max_new_tokens=6, prio=i % 3, gang=gang)
+
+    t0 = time.time()
+    done = eng.run(max_steps=600)
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    by_prio = {}
+    for rank, r in enumerate(done):
+        by_prio.setdefault(r.prio, []).append(rank)
+    print(f"completed {len(done)}/12 requests, {toks} tokens, "
+          f"{eng.steps} engine steps, {toks/max(dt,1e-9):.1f} tok/s")
+    for p in sorted(by_prio, reverse=True):
+        print(f"  prio {p}: completion ranks {by_prio[p]}")
+    print("scheduler stats:", eng.sched.stats)
+    assert len(done) == 12
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .store import latest_step, manifest_extra, restore, save
+
+__all__ = ["save", "restore", "latest_step", "manifest_extra"]

@@ -1,0 +1,26 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from importlib import import_module
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "recurrentgemma-9b", "grok-1-314b", "deepseek-moe-16b", "chatglm3-6b",
+    "yi-6b", "internlm2-20b", "h2o-danube-3-4b", "seamless-m4t-medium",
+    "rwkv6-3b", "llava-next-34b",
+]
+
+
+def _modname(arch: str) -> str:
+    return arch.replace("-", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    mod = import_module(f"repro.configs.{_modname(arch)}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

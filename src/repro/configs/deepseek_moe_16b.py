@@ -1,0 +1,13 @@
+"""deepseek-moe-16b — fine-grained MoE, 2 shared + 64 routed top-6.
+
+[arXiv:2401.06066; hf]  28L d_model=2048 16H (GQA kv=16, i.e. MHA)
+d_ff=1408 (per expert) vocab=102400.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1_408, vocab=102_400,
+    n_experts=64, top_k=6, n_shared_experts=2,
+)

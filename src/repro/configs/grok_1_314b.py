@@ -1,0 +1,13 @@
+"""grok-1-314b — 8-expert top-2 MoE.  [hf:xai-org/grok-1; unverified]
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072, MoE 8e top-2.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32_768, vocab=131_072,
+    n_experts=8, top_k=2,
+    logits_softcap=30.0,
+)

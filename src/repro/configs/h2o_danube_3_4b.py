@@ -1,0 +1,14 @@
+"""h2o-danube-3-4b — llama+mistral mix with sliding-window attention.
+
+[arXiv:2401.16818; unverified]  24L d_model=3840 32H (GQA kv=8)
+d_ff=10240 vocab=32000; SWA window 4096 makes it 500k-decode capable.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+    d_ff=10_240, vocab=32_000,
+    head_dim=120,
+    window=4_096,
+)

@@ -1,0 +1,15 @@
+"""llava-next-34b — VLM: anyres-tiled vision frontend + dense LM backbone.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]  60L d_model=7168
+56H (GQA kv=8) d_ff=20480 vocab=64000.  The vision tower is a STUB per
+the brief: ``input_specs`` provides precomputed patch embeddings
+(anyres tiling ≈ 5 tiles x 576 patches = 2880 tokens).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20_480, vocab=64_000,
+    frontend="vision", frontend_tokens=2_880,
+)

@@ -1,0 +1,18 @@
+"""recurrentgemma-9b — RG-LRU + local attention hybrid, 1:2 pattern.
+
+[arXiv:2402.19427; unverified]  38L d_model=4096 16H (GQA kv=1, i.e. MQA)
+d_ff=12288 vocab=256000.  Griffin pattern: two recurrent blocks per local
+(sliding-window) attention block; window 2048.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1,
+    d_ff=12288, vocab=256_000,
+    head_dim=256,
+    window=2_048,
+    block_pattern=("rec", "rec", "attn"),
+    lru_width=4096,
+    logits_softcap=30.0,
+)

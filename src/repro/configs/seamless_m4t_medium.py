@@ -1,0 +1,16 @@
+"""seamless-m4t-medium — encoder-decoder multimodal backbone.
+
+[arXiv:2308.11596; hf]  12L d_model=1024 16H (kv=16, MHA) d_ff=4096
+vocab=256206.  The speech/text frontend is a STUB per the brief:
+``input_specs`` provides precomputed frame embeddings; this config is the
+transformer backbone only (12 enc + 12 dec layers).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4_096, vocab=256_206,
+    enc_layers=12,
+    frontend="audio", frontend_tokens=4_096,
+)

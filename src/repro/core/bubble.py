@@ -1,0 +1,198 @@
+"""Bubble model: the application-side structure description.
+
+The paper (Thibault 2005) asks the application to model the general layout of
+its threads as nested sets called *bubbles*.  A bubble is a coset with respect
+to an affinity relation; nesting expresses refinement of one relation by
+another (data sharing ⊃ collective operations ⊃ SMT symbiosis, ...).
+
+Here a bubble tree describes any schedulable structure:
+
+* in the **simulator** (faithful reproduction) the leaves are threads with an
+  amount of work and a data-set id;
+* in the **placement planner** the leaves are model components (a stack of
+  attention heads, an expert, an embedding shard) with a parallel width;
+* in the **serving engine** the leaves are decode requests and bubbles are
+  gangs of requests that share a prefix / SLA class.
+
+Tasks carry integer priorities (higher = more urgent, exactly as in the
+paper's Figure 1) and bubbles carry a *burst level* hint naming the topology
+level at which they should explode.  ``burst_level=None`` lets the scheduler
+pick (the paper's "in the long run, once we get good heuristics").
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional
+
+_ids = itertools.count()
+
+
+@dataclass
+class Task:
+    """Anything that can sit on a run queue: a thread or a bubble."""
+
+    name: str = ""
+    prio: int = 0                      # higher wins (paper §3.3.2)
+    parent: Optional["Bubble"] = None
+
+    def __post_init__(self) -> None:
+        self.tid = next(_ids)
+        if not self.name:
+            self.name = f"{type(self).__name__.lower()}{self.tid}"
+
+    # -- tree queries ------------------------------------------------------
+    def is_bubble(self) -> bool:
+        return isinstance(self, Bubble)
+
+    def depth(self) -> int:
+        d, node = 0, self.parent
+        while node is not None:
+            d, node = d + 1, node.parent
+        return d
+
+    def root(self) -> "Task":
+        node = self
+        while node.parent is not None:
+            node = node.parent
+        return node
+
+
+@dataclass
+class Thread(Task):
+    """A leaf task.
+
+    ``work`` is an abstract amount of computation (simulator time units,
+    FLOPs for the planner, or remaining decode tokens for serving).
+    ``data`` names the data set the thread touches — threads sharing ``data``
+    benefit from being scheduled under the same topology component (the
+    paper's *data sharing* affinity).  ``width`` is the parallel width the
+    leaf can be split across (1 for a true thread; >1 for e.g. a head-stack
+    component in the planner).
+    """
+
+    work: float = 1.0
+    data: Optional[str] = None
+    width: int = 1
+    fn: Optional[Callable[..., Any]] = None      # payload for runnable threads
+    # -- mutable scheduler state --
+    remaining: float = field(default=0.0)
+    last_cpu: Optional[int] = None               # affinity memo (paper §2.2)
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        self.remaining = float(self.work)
+
+
+@dataclass
+class Bubble(Task):
+    """A nested set of tasks (threads and/or bubbles).
+
+    ``burst_level`` — name of the topology level where the bubble should
+    burst ("machine", "node", "chip", ... or mesh-axis names for the
+    planner).  ``None`` = scheduler's choice.
+    ``timeslice`` — simulator ticks before the bubble is regenerated
+    (paper §3.3.3); ``None`` disables preemptive regeneration.
+    """
+
+    children: list[Task] = field(default_factory=list)
+    burst_level: Optional[str] = None
+    timeslice: Optional[float] = None
+    # -- mutable scheduler state --
+    burst: bool = field(default=False)
+    home_list: Any = field(default=None)          # list where it was released
+    released_at: float = field(default=0.0)
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        for c in self.children:
+            c.parent = self
+
+    # -- construction ------------------------------------------------------
+    def insert(self, task: Task) -> "Bubble":
+        """paper: ``marcel_bubble_inserttask`` (Figure 4)."""
+        task.parent = self
+        self.children.append(task)
+        return self
+
+    # -- queries -----------------------------------------------------------
+    def threads(self) -> Iterator[Thread]:
+        for c in self.children:
+            if isinstance(c, Bubble):
+                yield from c.threads()
+            else:
+                yield c  # type: ignore[misc]
+
+    def bubbles(self) -> Iterator["Bubble"]:
+        yield self
+        for c in self.children:
+            if isinstance(c, Bubble):
+                yield from c.bubbles()
+
+    def total_work(self) -> float:
+        return sum(t.remaining for t in self.threads())
+
+    def total_width(self) -> int:
+        return sum(t.width for t in self.threads())
+
+    def n_threads(self) -> int:
+        return sum(1 for _ in self.threads())
+
+    def done(self) -> bool:
+        return all(t.remaining <= 0 for t in self.threads())
+
+    def pretty(self, indent: int = 0) -> str:
+        pad = "  " * indent
+        head = f"{pad}({self.name} prio={self.prio}"
+        if self.burst_level:
+            head += f" burst@{self.burst_level}"
+        lines = [head + ")"]
+        for c in self.children:
+            if isinstance(c, Bubble):
+                lines.append(c.pretty(indent + 1))
+            else:
+                t = c  # type: ignore[assignment]
+                lines.append(
+                    f"{pad}  [{t.name} prio={t.prio} work={getattr(t, 'work', '?')}"
+                    f" data={getattr(t, 'data', None)} w={getattr(t, 'width', 1)}]"
+                )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# convenience constructors
+# ---------------------------------------------------------------------------
+
+def bubble(*children: Task, name: str = "", prio: int = 0,
+           burst_level: Optional[str] = None,
+           timeslice: Optional[float] = None) -> Bubble:
+    return Bubble(name=name, prio=prio, children=list(children),
+                  burst_level=burst_level, timeslice=timeslice)
+
+
+def thread(work: float = 1.0, *, name: str = "", prio: int = 0,
+           data: Optional[str] = None, width: int = 1,
+           fn: Optional[Callable[..., Any]] = None) -> Thread:
+    return Thread(name=name, prio=prio, work=work, data=data, width=width,
+                  fn=fn)
+
+
+def balanced_tree(fanouts: list[int], work: float = 1.0,
+                  data_by_group: bool = True, prefix: str = "g") -> Bubble:
+    """Build a uniform bubble tree: fanouts=[4,4] → 4 bubbles of 4 threads.
+
+    Mirrors the paper's NovaScale experiment ("hence 4 bubbles of 4 threads").
+    """
+    def build(level: int, path: str) -> Task:
+        if level == len(fanouts):
+            return thread(work, name=f"t{path}",
+                          data=(path.rsplit(".", 1)[0] if data_by_group else path))
+        b = bubble(name=f"{prefix}{path}")
+        for i in range(fanouts[level]):
+            b.insert(build(level + 1, f"{path}.{i}" if path else str(i)))
+        return b
+
+    root = build(0, "")
+    assert isinstance(root, Bubble)
+    return root

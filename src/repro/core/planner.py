@@ -1,0 +1,185 @@
+"""Static bubble scheduling: bubble tree → mesh placement plan.
+
+This is the paper's mechanism applied at *compile* time to a TPU mesh.  The
+model definition emits a bubble tree whose leaves are **logical dimensions**
+of the computation (batch, heads, d_ff, experts, vocab, seq, ...), each with
+a parallel *width* (how many ways it can be split) and whose nesting encodes
+affinity (everything inside one layer bubble wants to live close together;
+the batch bubble is independent of parameter bubbles).
+
+The machine side is the mesh-axis hierarchy, outer→inner — on the production
+meshes ``("pod","data","model")``: crossing ``pod`` is DCN (most expensive),
+crossing ``data`` is long ICI routes, ``model`` is the tight neighborhood.
+
+The planner plays the scheduler's game statically:
+
+* a bubble **sinks** below an axis when sharding its contents across that
+  axis would break the affinity it expresses (its tensors would be spread
+  over the expensive boundary) or when its width cannot fill the axis;
+* a bubble **bursts** at an axis when its width fills it, releasing its
+  children; the axis is consumed by sharding the bubble's released dims.
+
+The output is a :class:`Plan` mapping logical dims → mesh axes, the exact
+analogue of "which list does each task end up on".  ``distributed.sharding``
+turns plans + per-tensor logical-dim annotations into PartitionSpecs.
+
+The paper's Table-2 strategies map to plan *sources*:
+
+* ``simple``  — opportunist: everything data-parallel (batch over all axes);
+* ``bound``   — a hand-written per-arch axis table (non-portable);
+* ``bubbles`` — derived from the model's bubble tree by this planner.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from .bubble import Bubble, Task
+
+
+@dataclass
+class Dim(Task):
+    """A leaf of the planner tree: one logical dimension of the computation.
+
+    ``width``  — the extent that can be split (e.g. n_kv_heads, n_experts,
+                 global_batch).
+    ``min_level`` — outermost axis this dim may be sharded on (affinity
+                 ceiling): batch tolerates ``pod``; parameter dims usually
+                 set ``min_level="model"`` so their collectives stay on the
+                 tight neighborhood.
+    ``weight`` — relative communication volume of sharding this dim; used to
+                 break ties when several dims compete for one axis.
+    """
+
+    width: int = 1
+    min_level: Optional[str] = None
+    weight: float = 1.0
+    # activation dims (batch, seq) co-occur with every parameter dim in the
+    # layer activations, so the planner never lets them share a mesh axis
+    # with a parameter dim (and vice versa)
+    is_activation: bool = False
+
+
+@dataclass(frozen=True)
+class MeshAxis:
+    name: str
+    size: int
+
+
+@dataclass
+class Plan:
+    """dim name → tuple of mesh axis names (possibly empty = replicated)."""
+
+    assignment: dict[str, tuple[str, ...]] = field(default_factory=dict)
+    log: list[str] = field(default_factory=list)
+    strategy: str = "bubbles"
+
+    def axes_of(self, dim: Optional[str]) -> Optional[tuple[str, ...]]:
+        if dim is None:
+            return None
+        return self.assignment.get(dim) or None
+
+    def pretty(self) -> str:
+        rows = [f"  {d:12s} -> {ax or '(replicated)'}"
+                for d, ax in sorted(self.assignment.items())]
+        return f"Plan[{self.strategy}]\n" + "\n".join(rows)
+
+
+def _level_order(axes: Sequence[MeshAxis]) -> dict[str, int]:
+    return {a.name: i for i, a in enumerate(axes)}
+
+
+def plan_bubbles(root: Bubble, axes: Sequence[MeshAxis]) -> Plan:
+    """Run static bubble scheduling over the mesh-axis hierarchy.
+
+    Walk the axes outer→inner.  Dims under the same immediate bubble share
+    tensors, so they *compete* for each axis (one dim of a tensor per mesh
+    axis); dims under sibling bubbles execute as separate operations and may
+    share an axis freely — exactly the bubble-as-affinity-scope semantics.
+    Among competitors whose ``min_level`` permits the axis and whose
+    remaining width divides it, the heaviest (then widest) dim wins.  A dim
+    may win several consecutive axes (batch over ``("pod","data")``) while
+    its width keeps dividing.
+    """
+    plan = Plan(strategy="bubbles")
+    order = _level_order(axes)
+
+    # collect dims with their affinity ceilings and competition groups; a
+    # Dim nested under a bubble with burst_level=L inherits L as its
+    # min_level unless it sets its own.
+    dims: list[Dim] = []
+    group_of: dict[int, int] = {}       # dim tid -> id of immediate bubble
+
+    def collect(node: Task, inherited: Optional[str], parent_id: int) -> None:
+        if isinstance(node, Dim):
+            node._eff_level = node.min_level or inherited  # type: ignore
+            dims.append(node)
+            group_of[node.tid] = parent_id
+        elif isinstance(node, Bubble):
+            nxt = node.burst_level or inherited
+            for c in node.children:
+                collect(c, nxt, node.tid)
+
+    collect(root, None, -1)
+    for d in dims:
+        plan.assignment.setdefault(d.name, tuple())
+
+    remaining = {d.tid: d.width for d in dims}
+    claimed: dict[tuple[int, str], str] = {}   # (group, axis) -> dim name
+    act_axes: set[str] = set()                 # axes won by activation dims
+    param_axes: set[str] = set()               # axes won by parameter dims
+    for ax in axes:
+        by_group: dict[int, list[Dim]] = {}
+        for d in dims:
+            lvl = getattr(d, "_eff_level", None)
+            if lvl is not None and order.get(lvl, len(axes)) > order[ax.name]:
+                continue                 # must sink below this axis
+            if remaining[d.tid] % ax.size != 0 or remaining[d.tid] < ax.size:
+                continue
+            # activation/parameter exclusivity (both kinds share the layer
+            # activation tensors)
+            if d.is_activation and ax.name in param_axes:
+                continue
+            if not d.is_activation and ax.name in act_axes:
+                continue
+            by_group.setdefault(group_of[d.tid], []).append(d)
+        if not by_group:
+            plan.log.append(f"axis {ax.name}(x{ax.size}): unfilled")
+            continue
+        # heaviest groups first, so contested axes go to the dims that
+        # benefit most (params on the inner axis beat batch spillover)
+        ordered = sorted(by_group.items(),
+                         key=lambda kv: -max(d.weight for d in kv[1]))
+        for grp, cands in ordered:
+            if (grp, ax.name) in claimed:
+                continue
+            cands = [d for d in cands
+                     if (ax.name not in param_axes if d.is_activation
+                         else ax.name not in act_axes)]
+            if not cands:
+                continue
+            win = max(cands, key=lambda d: (d.weight, remaining[d.tid]))
+            claimed[(grp, ax.name)] = win.name
+            (act_axes if win.is_activation else param_axes).add(ax.name)
+            plan.assignment[win.name] += (ax.name,)
+            remaining[win.tid] //= ax.size
+            plan.log.append(
+                f"axis {ax.name}(x{ax.size}): burst '{win.name}' "
+                f"(remaining width {remaining[win.tid]})")
+    return plan
+
+
+def plan_simple(batch_dim: str, axes: Sequence[MeshAxis]) -> Plan:
+    """Opportunist baseline: pure data parallelism, parameters replicated."""
+    p = Plan(strategy="simple")
+    p.assignment[batch_dim] = tuple(a.name for a in axes)
+    p.log.append(f"pure DP: {batch_dim} over {p.assignment[batch_dim]}")
+    return p
+
+
+def plan_bound(table: dict[str, tuple[str, ...]]) -> Plan:
+    """Predetermined baseline: a hand-written axis table (non-portable)."""
+    p = Plan(strategy="bound", assignment=dict(table))
+    p.log.append("hand-written table")
+    return p

@@ -1,0 +1,235 @@
+"""Scheduling policies compared in the paper's evaluation (§5.2, Table 2).
+
+* :class:`SimplePolicy` — the *opportunist* schedule: one global task list,
+  Self-Scheduling with a last-cpu affinity memo (Linux 2.4 / Windows 2000
+  style, paper §2.2).
+* :class:`PerCpuPolicy` — per-cpu lists with steal-from-most-loaded
+  (AFS/LDS, Linux 2.6 style) — an extra baseline beyond the paper's table.
+* :class:`BoundPolicy` — the *predetermined* schedule: threads bound to
+  cpus by hand, non-portable (paper §2.1).
+* :class:`BubblePolicy` — our subject: the bubble scheduler of §3.3.
+
+Every policy exposes the same small driver interface used by the simulator:
+``submit`` (initial placement), ``next(cpu)``, ``on_yield`` (thread finished
+its quantum / its cycle), ``on_barrier`` (all threads hit the barrier; the
+workload re-arms them).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Optional
+
+from .bubble import Bubble, Thread
+from .runqueues import QueueHierarchy
+from .scheduler import BubbleScheduler
+from .topology import Topology
+
+
+def _h(*parts) -> float:
+    """Deterministic pseudo-random in [0,1) — no global RNG state."""
+    b = hashlib.blake2b("|".join(map(str, parts)).encode(), digest_size=8)
+    return int.from_bytes(b.digest(), "big") / 2**64
+
+
+class Policy:
+    name = "abstract"
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        # lock domain of the last successful pick — the simulator charges
+        # contention when several cpus pick from the same domain in one tick
+        # ("a unique thread list for the whole machine is a bottleneck").
+        self.last_domain = None
+
+    def submit(self, root: Bubble) -> None:
+        raise NotImplementedError
+
+    def next(self, cpu: int, now: float) -> Optional[Thread]:
+        raise NotImplementedError
+
+    def on_yield(self, cpu: int, t: Thread, done: bool, now: float) -> None:
+        pass
+
+    def on_barrier(self, root: Bubble, now: float) -> None:
+        """All threads finished the cycle; they are re-armed by the caller."""
+        raise NotImplementedError
+
+    def lookup_cost(self) -> tuple[int, int]:
+        """(total scan steps, total lookups) — Table 1 instrumentation."""
+        return (0, 1)
+
+
+class SimplePolicy(Policy):
+    """Single global list + affinity memo limited to a scan window.
+
+    The window models the O(1)-ish head inspection a real SS scheduler can
+    afford: a cpu takes its previous thread if it sits within the first
+    ``window`` entries, else it takes the head — whatever its data home.
+    """
+
+    name = "simple"
+
+    def __init__(self, topo: Topology, window: int = 2,
+                 disorder: float = 3.0):
+        super().__init__(topo)
+        self.queue: list[Thread] = []
+        self.window = window
+        self.disorder = disorder   # barrier wake-order noise, in queue slots
+        self._steps = 0
+        self._lookups = 0
+
+    def submit(self, root: Bubble) -> None:
+        self.queue.extend(t for t in root.threads() if t.remaining > 0)
+
+    def next(self, cpu: int, now: float) -> Optional[Thread]:
+        self._lookups += 1
+        if not self.queue:
+            return None
+        self.last_domain = "global"
+        for i, t in enumerate(self.queue[: self.window]):
+            self._steps += 1
+            if t.last_cpu == cpu:
+                self.queue.pop(i)
+                t.last_cpu = cpu
+                return t
+        t = self.queue.pop(0)
+        t.last_cpu = cpu
+        return t
+
+    def on_barrier(self, root: Bubble, now: float) -> None:
+        # barrier wake: arrival order correlates with prior placement (a
+        # thread tends to wake where it slept) perturbed by wake latency —
+        # modelled as a deterministic jittered sort on last_cpu.
+        ts = [t for t in root.threads()]
+        ts.sort(key=lambda t: (t.last_cpu or 0) +
+                self.disorder * (_h(t.tid, now) - 0.5) * 2.0)
+        self.queue = ts
+
+    def lookup_cost(self) -> tuple[int, int]:
+        return (self._steps, max(self._lookups, 1))
+
+
+class PerCpuPolicy(Policy):
+    """Per-cpu lists, steal from the most loaded (AFS/LDS; Linux 2.6)."""
+
+    name = "percpu"
+
+    def __init__(self, topo: Topology):
+        super().__init__(topo)
+        self.queues: list[list[Thread]] = [[] for _ in range(topo.n_cpus)]
+        self._steps = 0
+        self._lookups = 0
+
+    def submit(self, root: Bubble) -> None:
+        # new work charged to the least loaded cpu (paper §2.2)
+        for t in root.threads():
+            if t.remaining <= 0:
+                continue
+            tgt = t.last_cpu if t.last_cpu is not None else \
+                min(range(len(self.queues)), key=lambda c: len(self.queues[c]))
+            self.queues[tgt].append(t)
+
+    def next(self, cpu: int, now: float) -> Optional[Thread]:
+        self._lookups += 1
+        self._steps += 1
+        if self.queues[cpu]:
+            t = self.queues[cpu].pop(0)
+            t.last_cpu = cpu
+            self.last_domain = f"cpu{cpu}"
+            return t
+        # steal from the most loaded list
+        victim = max(range(len(self.queues)), key=lambda c: len(self.queues[c]))
+        self._steps += len(self.queues)
+        if self.queues[victim]:
+            t = self.queues[victim].pop()
+            t.last_cpu = cpu
+            self.last_domain = f"cpu{victim}"
+            return t
+        return None
+
+    def on_barrier(self, root: Bubble, now: float) -> None:
+        self.submit(root)
+
+    def lookup_cost(self) -> tuple[int, int]:
+        return (self._steps, max(self._lookups, 1))
+
+
+class BoundPolicy(Policy):
+    """Predetermined: thread i bound to cpu i mod n — perfect but
+    non-portable (the paper's *bound* row)."""
+
+    name = "bound"
+
+    def __init__(self, topo: Topology):
+        super().__init__(topo)
+        self.queues: list[list[Thread]] = [[] for _ in range(topo.n_cpus)]
+        self.binding: dict[int, int] = {}
+
+    def submit(self, root: Bubble) -> None:
+        for i, t in enumerate(root.threads()):
+            if t.remaining <= 0:
+                continue
+            cpu = self.binding.setdefault(t.tid, i % self.topo.n_cpus)
+            self.queues[cpu].append(t)
+
+    def next(self, cpu: int, now: float) -> Optional[Thread]:
+        if self.queues[cpu]:
+            t = self.queues[cpu].pop(0)
+            t.last_cpu = cpu
+            self.last_domain = f"cpu{cpu}"
+            return t
+        return None
+
+    def on_barrier(self, root: Bubble, now: float) -> None:
+        self.submit(root)
+
+
+class BubblePolicy(Policy):
+    """The paper's contribution, driving :class:`BubbleScheduler`."""
+
+    name = "bubbles"
+
+    def __init__(self, topo: Topology, *, respect_hints: bool = True):
+        super().__init__(topo)
+        self.sched = BubbleScheduler(topo, respect_hints=respect_hints)
+        self.root: Optional[Bubble] = None
+        self.running: dict[int, Thread] = {}
+
+    def submit(self, root: Bubble) -> None:
+        self.root = root
+        self.sched.wake_up_bubble(root)
+
+    def next(self, cpu: int, now: float) -> Optional[Thread]:
+        t = self.sched.next_thread(cpu, now)
+        if t is not None:
+            self.running[cpu] = t
+            lq = self.sched.last_queue
+            self.last_domain = lq.comp.name if lq else None
+        return t
+
+    def on_yield(self, cpu: int, t: Thread, done: bool, now: float) -> None:
+        self.running.pop(cpu, None)
+        self.sched.thread_returned(t)
+
+    def on_barrier(self, root: Bubble, now: float) -> None:
+        # cycle boundary = the bubble's time slice: regenerate so the whole
+        # group is re-distributed coherently from its home lists (§3.3.3).
+        for b in root.bubbles():
+            b.burst = False
+        # re-wake sub-bubbles from their home lists (affinity kept); fall
+        # back to the global list for bubbles never burst.
+        for b in root.children:
+            if isinstance(b, Bubble):
+                (b.home_list or self.sched.queues.global_queue()).push(b)
+            else:
+                (root.home_list or self.sched.queues.global_queue()).push(b)
+        self.sched.stats.regenerations += 1
+
+    def lookup_cost(self) -> tuple[int, int]:
+        q = self.sched.queues
+        return (q.lookup_steps, max(q.lookups, 1))
+
+
+POLICIES = {p.name: p for p in
+            (SimplePolicy, PerCpuPolicy, BoundPolicy, BubblePolicy)}

@@ -1,0 +1,177 @@
+"""Hierarchical task lists ("run queues") — the machine-side scheduler state.
+
+Each component of each level of the topology owns exactly one task list
+(paper §3.2).  A task sitting on a list may be executed by any cpu covered by
+that list's component; placing a task lower narrows its scheduling area and
+increases locality, placing it higher widens load-balancing freedom.
+
+The lookup implements the paper's two-pass scheme (§4):
+
+* **pass 1** scans the lists covering a cpu from most local to most global,
+  without locks, remembering the list holding the highest-priority task;
+* **pass 2** "locks" that list and re-validates that a task of that priority
+  is still there (another cpu may have raced us); on failure the scan
+  restarts.
+
+We are single-controller so locks are simulated (a claim counter) — keeping
+the structure lets the simulator reproduce the paper's cost measurements
+(Table 1: the *Yield* column is exactly this lookup) and models the races a
+multi-controller serving deployment would see.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .bubble import Bubble, Task
+from .topology import Component, Topology
+
+
+@dataclass
+class RunQueue:
+    comp: Component
+    tasks: deque = field(default_factory=deque)
+    version: int = 0          # bumped on every mutation (pass-2 validation)
+    lock_count: int = 0       # accounting only (single controller)
+
+    @property
+    def level(self) -> str:
+        return self.comp.level.name
+
+    def push(self, task: Task, front: bool = False) -> None:
+        (self.tasks.appendleft if front else self.tasks.append)(task)
+        self.version += 1
+
+    def remove(self, task: Task) -> bool:
+        try:
+            self.tasks.remove(task)
+        except ValueError:
+            return False
+        self.version += 1
+        return True
+
+    def best_prio(self) -> Optional[int]:
+        return max((t.prio for t in self.tasks), default=None)
+
+    def pop_best(self, min_prio: Optional[int] = None) -> Optional[Task]:
+        """Claim the highest-priority task (FIFO among equals)."""
+        best, best_p = None, None
+        for t in self.tasks:
+            if best_p is None or t.prio > best_p:
+                best, best_p = t, t.prio
+        if best is None or (min_prio is not None and best_p < min_prio):
+            return None
+        self.tasks.remove(best)
+        self.version += 1
+        return best
+
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+
+class QueueHierarchy:
+    """One RunQueue per topology component + the two-pass lookup + stealing."""
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self.queues: dict[int, RunQueue] = {}
+
+        def attach(comp: Component) -> None:
+            self.queues[id(comp)] = RunQueue(comp)
+            for c in comp.children:
+                attach(c)
+
+        attach(topo.root)
+        # per-cpu covering chains, local→global, precomputed once
+        self._cover = {cpu: [self.queues[id(c)] for c in topo.covering(cpu)]
+                       for cpu in range(topo.n_cpus)}
+        self.lookup_steps = 0        # instrumentation for Table 1
+        self.lookups = 0
+        self.retries = 0
+
+    # -- placement ---------------------------------------------------------
+    def queue_of(self, comp: Component) -> RunQueue:
+        return self.queues[id(comp)]
+
+    def global_queue(self) -> RunQueue:
+        return self.queues[id(self.topo.root)]
+
+    def covering(self, cpu: int) -> list[RunQueue]:
+        return self._cover[cpu]
+
+    # -- the paper's two-pass lookup ----------------------------------------
+    def find(self, cpu: int) -> Optional[tuple[RunQueue, Task]]:
+        """Find + claim the max-priority task among lists covering ``cpu``.
+
+        Ties break toward the most local list (scanned first) — that is what
+        gives the hierarchy its locality benefit.  Complexity is linear in
+        the number of hierarchical levels (paper §4).
+        """
+        self.lookups += 1
+        while True:
+            best_q, best_p, snap = None, None, 0
+            for q in self._cover[cpu]:                      # pass 1, no lock
+                self.lookup_steps += 1
+                p = q.best_prio()
+                if p is not None and (best_p is None or p > best_p):
+                    best_q, best_p, snap = q, p, q.version
+            if best_q is None:
+                return None
+            best_q.lock_count += 1                           # pass 2, locked
+            if best_q.version != snap:
+                task = best_q.pop_best(min_prio=best_p)
+                if task is None:                             # raced: restart
+                    self.retries += 1
+                    continue
+            else:
+                task = best_q.pop_best()
+            return task and (best_q, task)
+
+    # -- stealing (HAFS-style, used by bubble regeneration) ------------------
+    def steal(self, cpu: int) -> Optional[tuple[RunQueue, Task]]:
+        """Idle cpu pulls a *bubble* (preferred) or thread from the most
+        loaded queue outside its covering chain, nearest level first."""
+        chain = set(id(q.comp) for q in self._cover[cpu])
+        path = self.topo.cpus[cpu].path()            # root→leaf
+        for anc in path[::-1][1:]:                   # walk upward
+            candidates: list[RunQueue] = []
+            for sib in anc.children:
+                if id(sib) in chain:
+                    continue
+                for comp in self._subtree(sib):
+                    q = self.queues[id(comp)]
+                    if len(q):
+                        candidates.append(q)
+            if candidates:
+                q = max(candidates, key=lambda q: sum(
+                    t.total_work() if isinstance(t, Bubble)
+                    else getattr(t, "remaining", 1.0) for t in q.tasks))
+                # prefer whole bubbles: stealing a coherent group keeps
+                # affinity intact (paper §3.3.3)
+                for t in list(q.tasks):
+                    if isinstance(t, Bubble):
+                        q.remove(t)
+                        return q, t
+                t = q.pop_best()
+                if t is not None:
+                    return q, t
+        return None
+
+    @staticmethod
+    def _subtree(comp: Component):
+        yield comp
+        for c in comp.children:
+            yield from QueueHierarchy._subtree(c)
+
+    # -- introspection -------------------------------------------------------
+    def snapshot(self) -> dict[str, list[str]]:
+        out = {}
+        for q in self.queues.values():
+            if len(q):
+                out[q.comp.name] = [t.name for t in q.tasks]
+        return out
+
+    def total_tasks(self) -> int:
+        return sum(len(q) for q in self.queues.values())

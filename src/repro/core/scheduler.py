@@ -1,0 +1,190 @@
+"""The bubble scheduler: marrying the bubble tree and the queue hierarchy.
+
+Implements §3.3 of the paper:
+
+* **bubble evolution** — a woken bubble starts on the global list, sinks
+  through the hierarchy toward its burst level, then bursts, releasing its
+  children onto the list where it burst (Figure 3);
+* **priorities** — cpus schedule the highest-priority task among the lists
+  covering them, even if less-prioritised tasks are more local (§3.3.2);
+* **regeneration** — after a bubble's time slice, its threads are pulled
+  back in, the bubble closes and is pushed back on its home list (§3.3.3);
+  idle cpus may steal whole bubbles, keeping affinity intact.
+
+The scheduler is driven from the outside (the simulator, the serving engine,
+or the placement planner): there is "no global scheduling: processors just
+call the scheduler code themselves" (§4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .bubble import Bubble, Task, Thread
+from .runqueues import QueueHierarchy, RunQueue
+from .topology import Component, Topology
+
+
+@dataclass
+class SchedStats:
+    bursts: int = 0
+    sinks: int = 0
+    regenerations: int = 0
+    steals: int = 0
+    migrations: int = 0          # thread ran on a different cpu than last time
+    schedules: int = 0
+
+
+class BubbleScheduler:
+    """Per-cpu scheduling over a :class:`QueueHierarchy`.
+
+    ``auto_burst_threshold`` drives the default burst heuristic: a bubble
+    sinks while it still fits (thread-width-wise) under one component of the
+    next level down, and bursts once sinking further would leave cpus of the
+    current component idle.  An explicit ``bubble.burst_level`` overrides the
+    heuristic — the paper's "stricter guiding hints".
+    """
+
+    def __init__(self, topo: Topology, *, respect_hints: bool = True):
+        self.topo = topo
+        self.queues = QueueHierarchy(topo)
+        self.respect_hints = respect_hints
+        self.stats = SchedStats()
+        self.last_queue: Optional[RunQueue] = None   # lock-domain of last pick
+
+    # -- application API (paper Figure 4) ------------------------------------
+    def wake_up_bubble(self, b: Bubble, at: Optional[RunQueue] = None) -> None:
+        q = at or self.queues.global_queue()
+        b.home_list = q
+        q.push(b)
+
+    def submit_thread(self, t: Thread) -> None:
+        self.queues.global_queue().push(t)
+
+    # -- burst-level decision --------------------------------------------------
+    def _should_burst(self, b: Bubble, q: RunQueue, cpu: int) -> bool:
+        if self.respect_hints and b.burst_level is not None:
+            return q.level == b.burst_level or self._is_leaf(q)
+        if self._is_leaf(q):
+            return True
+        # heuristic: burst once the bubble can no longer sink without
+        # shrinking its scheduling area below its parallel width
+        child = self._child_toward(q.comp, cpu)
+        return child is None or b.total_width() > self._capacity(child)
+
+    def _is_leaf(self, q: RunQueue) -> bool:
+        return not q.comp.children
+
+    @staticmethod
+    def _capacity(comp: Component) -> int:
+        return sum(1 for _ in comp.leaves())
+
+    def _child_toward(self, comp: Component, cpu: int) -> Optional[Component]:
+        """The child of ``comp`` on the path toward ``cpu``."""
+        path = self.topo.cpus[cpu].path()
+        try:
+            i = path.index(comp)
+        except ValueError:
+            return None
+        return path[i + 1] if i + 1 < len(path) else None
+
+    # -- the scheduler entry point ----------------------------------------------
+    def next_thread(self, cpu: int, now: float = 0.0,
+                    allow_steal: bool = True) -> Optional[Thread]:
+        """Called by an (idle or preempting) cpu.  Returns a runnable thread.
+
+        While looking for threads, also "pulls down" bubbles from high list
+        levels and makes them burst on a more local level (§4).
+        """
+        for _ in range(64 * len(self.topo.levels)):       # progress bound
+            found = self.queues.find(cpu)
+            if found is None:
+                if allow_steal:
+                    stolen = self.queues.steal(cpu)
+                    if stolen is not None:
+                        _, task = stolen
+                        self.stats.steals += 1
+                        # re-home the stolen task near us and retry
+                        self._place_near(task, cpu)
+                        allow_steal = True
+                        continue
+                return None
+            q, task = found
+            self.last_queue = q
+            if isinstance(task, Thread):
+                self.stats.schedules += 1
+                if task.last_cpu is not None and task.last_cpu != cpu:
+                    self.stats.migrations += 1
+                task.last_cpu = cpu
+                return task
+            b = task
+            if b.done():
+                continue
+            if self._should_burst(b, q, cpu):
+                self._burst(b, q, now)
+            else:
+                child = self._child_toward(q.comp, cpu)
+                assert child is not None
+                self.queues.queue_of(child).push(b)
+                self.stats.sinks += 1
+        return None
+
+    def _burst(self, b: Bubble, q: RunQueue, now: float) -> None:
+        b.burst = True
+        b.home_list = q
+        b.released_at = now
+        for c in b.children:
+            if isinstance(c, Thread) and c.remaining <= 0:
+                continue
+            q.push(c)
+        self.stats.bursts += 1
+
+    def _place_near(self, task: Task, cpu: int) -> None:
+        """Place a stolen task on the closest list that can hold it."""
+        chain = self.queues.covering(cpu)                 # local → global
+        if isinstance(task, Bubble):
+            width = task.total_width()
+            for q in chain:
+                if self._capacity(q.comp) >= width or q is chain[-1]:
+                    q.push(task, front=True)
+                    return
+        chain[0].push(task, front=True)
+
+    # -- regeneration (§3.3.3) ---------------------------------------------------
+    def regenerate(self, b: Bubble, running: dict[int, Thread]) -> None:
+        """Close a burst bubble: pull its tasks off all queues, push the
+        closed bubble back at the end of its home list.
+
+        Threads currently being executed "go back in the bubble by
+        themselves" — the simulator calls :meth:`thread_returned` when a
+        running thread next yields.
+        """
+        if not b.burst:
+            return
+        live = set(id(t) for t in running.values())
+        for sub in b.bubbles():
+            for q in self.queues.queues.values():
+                for t in list(q.tasks):
+                    if t.parent is sub and id(t) not in live:
+                        q.remove(t)
+            sub.burst = False
+        self.stats.regenerations += 1
+        home = b.home_list or self.queues.global_queue()
+        b.waiting_running = [t for t in b.threads()
+                             if id(t) in live and t.remaining > 0]
+        if not b.waiting_running:
+            home.push(b)
+        else:
+            b.pending_home = home
+
+    def thread_returned(self, t: Thread) -> None:
+        """A running thread yielded after its bubble was regenerated."""
+        b = t.parent
+        while b is not None:
+            wr = getattr(b, "waiting_running", None)
+            if wr and t in wr:
+                wr.remove(t)
+                if not wr:
+                    getattr(b, "pending_home").push(b)
+            b = b.parent

@@ -1,0 +1,224 @@
+"""Discrete-event simulator of a hierarchical machine (paper reproduction).
+
+Reproduces the paper's evaluation setting on CPU, with the NUMA factor as the
+only hardware parameter: a thread progressing on cpu *c* while its data is
+homed under another component of level *L* advances at ``1/L.factor`` speed
+(the paper's NovaScale: "accessing the memory of another node is about 3
+times slower", §5.2).
+
+Data homing is **first touch** (the default Linux/Solaris policy the paper
+mentions in §2.3): the first cpu to run a thread homes that thread's data at
+its own position; migrating the thread later does *not* migrate the data.
+
+The simulator advances in fixed quanta; each busy cpu runs its thread for one
+quantum per tick (all speeds relative).  Workloads with barrier cycles
+(conduction/advection) re-arm all threads at each barrier, which is also each
+policy's rebalancing opportunity — exactly the structure of the paper's
+"cycles of fully parallel computing followed by global communication barrier".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .bubble import Bubble, Thread, bubble, thread
+from .policies import Policy, _h
+from .topology import Topology
+
+
+@dataclass
+class SimResult:
+    policy: str
+    time: float                  # simulated time units
+    busy: float                  # total busy cpu-time
+    ideal: float                 # total work (= busy time at speed 1)
+    migrations: int
+    lookup_steps: float          # mean scan steps per scheduler call
+    cycles: int = 1
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def speedup(self) -> float:
+        """vs a single cpu running all work locally."""
+        return self.ideal / self.time if self.time else float("inf")
+
+    @property
+    def efficiency(self) -> float:
+        return self.speedup / self.extra.get("n_cpus", 1)
+
+
+class Simulator:
+    def __init__(self, topo: Topology, policy: Policy, *,
+                 quantum: float = 1.0, jitter: float = 0.0,
+                 mem_fraction: float = 1.0, contention: float = 0.0):
+        self.topo = topo
+        self.policy = policy
+        self.quantum = quantum
+        self.jitter = jitter            # per-(thread,cycle) work heterogeneity
+        self.mem_fraction = mem_fraction  # share of time that is memory-bound
+        # lock contention: extra stall (in quanta) per *earlier* picker from
+        # the same lock domain within one tick — the paper's "unique thread
+        # list for the whole machine is a bottleneck" (§2.2).
+        self.contention = contention
+        self.homes: dict[str, int] = {}  # data id -> home cpu (first touch)
+        self.migrations = 0
+
+    # -- speed model ---------------------------------------------------------
+    def _speed(self, cpu: int, t: Thread) -> float:
+        """Remote data slows only the memory-bound fraction of the work:
+        slowdown = 1 + mem_fraction * (factor - 1).  mem_fraction=1.0 is a
+        pure memory-latency-bound thread; the paper's stencil codes sit
+        around 0.25 (calibrated so *simple* lands at the paper's 10.58)."""
+        if t.data is None:
+            return 1.0
+        home = self.homes.setdefault(t.data, cpu)     # first touch
+        f = self.topo.distance_factor(cpu, home)
+        return 1.0 / (1.0 + self.mem_fraction * (f - 1.0))
+
+    # -- one barrier-delimited cycle ------------------------------------------
+    def run_cycle(self, root: Bubble, now: float, cycle: int) -> float:
+        """Run until every thread of ``root`` has remaining<=0.  Returns the
+        elapsed time (the cycle makespan)."""
+        threads = list(root.threads())
+        pending = sum(1 for t in threads if t.remaining > 0)
+        running: list[Optional[Thread]] = [None] * self.topo.n_cpus
+        stall = [0.0] * self.topo.n_cpus
+        t0 = now
+        guard = 0
+        while pending > 0:
+            guard += 1
+            assert guard < 10_000_000, "simulator wedged"
+            idle = True
+            tick_picks: dict = {}
+            for cpu in range(self.topo.n_cpus):
+                if stall[cpu] > 0:                  # lock-contention stall
+                    stall[cpu] -= 1.0
+                    idle = False
+                    continue
+                cur = running[cpu]
+                if cur is None:
+                    cur = self.policy.next(cpu, now)
+                    if cur is None:
+                        continue
+                    if cur.remaining <= 0:          # stale entry: drop
+                        self.policy.on_yield(cpu, cur, True, now)
+                        continue
+                    running[cpu] = cur
+                    if self.contention:
+                        dom = self.policy.last_domain
+                        prev = tick_picks.get(dom, 0)
+                        tick_picks[dom] = prev + 1
+                        stall[cpu] = self.contention * prev
+                idle = False
+                cur.remaining -= self.quantum * self._speed(cpu, cur)
+                if cur.remaining <= 0:
+                    cur.remaining = 0.0
+                    running[cpu] = None
+                    self.policy.on_yield(cpu, cur, True, now)
+                    pending -= 1
+            now += self.quantum
+            if idle and pending > 0:
+                # nothing runnable anywhere — should not happen with work
+                # conserving policies; advance time to avoid livelock.
+                now += self.quantum
+        return now - t0
+
+    # -- full workload ---------------------------------------------------------
+    def run(self, root: Bubble, cycles: int = 1) -> SimResult:
+        ideal = 0.0
+        for t in root.threads():
+            ideal += t.work * cycles
+        self.policy.submit(root)
+        now, total = 0.0, 0.0
+        mig0 = self._policy_migrations()
+        for cyc in range(cycles):
+            if cyc > 0:
+                for t in root.threads():
+                    w = t.work
+                    if self.jitter:
+                        w *= 1.0 + self.jitter * (_h(t.tid, cyc) - 0.5)
+                    t.remaining = w
+                self.policy.on_barrier(root, now)
+            elapsed = self.run_cycle(root, now, cyc)
+            total += elapsed
+            now += elapsed
+        steps, lookups = self.policy.lookup_cost()
+        return SimResult(
+            policy=self.policy.name, time=total, busy=total, ideal=ideal,
+            migrations=self._policy_migrations() - mig0,
+            lookup_steps=steps / lookups, cycles=cycles,
+            extra={"n_cpus": self.topo.n_cpus, "homes": dict(self.homes)},
+        )
+
+    def _policy_migrations(self) -> int:
+        sched = getattr(self.policy, "sched", None)
+        return sched.stats.migrations if sched else 0
+
+
+# ---------------------------------------------------------------------------
+# the paper's workloads
+# ---------------------------------------------------------------------------
+
+def stripes_workload(n_threads: int, work: float = 100.0,
+                     group: Optional[int] = None) -> Bubble:
+    """Conduction/advection (§5.2): mesh split into stripes, one thread per
+    stripe, cycles of parallel compute + barrier.  ``group`` = threads per
+    bubble; ``None`` = flat (the *simple*/*bound* versions)."""
+    if group is None:
+        root = bubble(name="app")
+        for i in range(n_threads):
+            root.insert(thread(work, name=f"stripe{i}", data=f"stripe{i}"))
+        return root
+    root = bubble(name="app")
+    for g in range(n_threads // group):
+        b = bubble(name=f"node_group{g}")
+        for i in range(group):
+            j = g * group + i
+            b.insert(thread(work, name=f"stripe{j}", data=f"stripe{j}"))
+        root.insert(b)
+    return root
+
+
+def fibonacci_workload(n_threads: int, with_bubbles: bool,
+                       leaf_work: float = 8.0,
+                       group_size: int = 4) -> Bubble:
+    """Divide-and-conquer Fibonacci (Fig 5): recursive thread creation.
+
+    Sibling subtrees share data with their parent (the spawned computations
+    read the parent's frame and write their results there); the sharing is
+    tightest for the smallest subtrees, modelled as one data set per subtree
+    of ``group_size`` leaves.  With bubbles, the natural recursion is
+    expressed; without, every thread lands in one flat list — exactly the
+    paper's "adding bubbles that express the natural recursion".
+    """
+    import math
+    depth = max(1, int(math.ceil(math.log2(max(n_threads, 2)))))
+    group_depth = max(0, int(math.log2(max(group_size, 1))))
+
+    def build(d: int, path: str) -> Bubble:
+        b = bubble(name=f"fib{path}")
+        grp = path[: max(1, len(path) - group_depth)]
+        if d == 0:
+            b.insert(thread(leaf_work, name=f"leaf{path}", data=f"sub{grp}"))
+            return b
+        # two recursive calls + the combining continuation; the join runs
+        # after its children, so it adds no *concurrent* width (width=0)
+        b.insert(build(d - 1, path + "0"))
+        b.insert(build(d - 1, path + "1"))
+        b.insert(thread(leaf_work * 0.1, name=f"join{path}", data=f"sub{grp}",
+                        width=0))
+        return b
+
+    tree = build(depth, "r")
+    if with_bubbles:
+        return tree
+    # Without bubbles the threads reach the global list in *creation* order,
+    # which interleaves subtrees (children are spawned while other subtrees
+    # are already executing) — modelled as a deterministic interleave.
+    flat = bubble(name="fib_flat")
+    leaves = sorted(tree.threads(), key=lambda t: _h(t.tid, "creation"))
+    for t in leaves:
+        t.parent = None
+        flat.insert(t)
+    return flat

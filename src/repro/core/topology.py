@@ -1,0 +1,210 @@
+"""Machine-side model: hierarchical topology of computing resources.
+
+The paper models a hierarchical machine as a tree whose levels are
+{machine, NUMA node, chip, core, SMT} and attaches one task list to every
+component of every level (Figure 2).  We generalise:
+
+* a :class:`Topology` is a list of :class:`Level` s, root (whole machine)
+  first, leaves (schedulable processors) last;
+* each level has a name, a fanout, and a *distance factor* — the relative
+  cost of accessing data homed under a *different* component of this level
+  (the paper's NUMA factor ≈ 3 on the NovaScale; our "DCN factor" between
+  TPU pods).
+
+Topologies are purely descriptive — the simulator, the run-queue hierarchy
+and the placement planner all consume them.  TPU meshes map naturally:
+``axes ("pod","data","model")`` → levels pod/data/model with leaf = chip.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional, Sequence
+
+
+@dataclass(frozen=True)
+class Level:
+    name: str
+    fanout: int          # children per component of the level above
+    factor: float = 1.0  # cross-component access penalty (NUMA factor)
+
+
+@dataclass
+class Component:
+    """One node of the machine tree; owns one run queue (attached later)."""
+
+    level: Level
+    index: int                      # global index within its level
+    parent: Optional["Component"] = None
+    children: list["Component"] = field(default_factory=list)
+    # leaf-only: global cpu id
+    cpu: Optional[int] = None
+
+    @property
+    def name(self) -> str:
+        return f"{self.level.name}{self.index}"
+
+    def leaves(self) -> Iterator["Component"]:
+        if not self.children:
+            yield self
+        else:
+            for c in self.children:
+                yield from c.leaves()
+
+    def path(self) -> list["Component"]:
+        """Root → self."""
+        out, node = [], self
+        while node is not None:
+            out.append(node)
+            node = node.parent
+        return out[::-1]
+
+
+class Topology:
+    """A full machine tree built from a level specification.
+
+    ``levels[0]`` must be the root level with fanout 1 (the machine itself).
+    """
+
+    def __init__(self, levels: Sequence[Level]):
+        assert levels and levels[0].fanout == 1, "root level must have fanout 1"
+        self.levels = list(levels)
+        self._by_level: dict[str, list[Component]] = {l.name: [] for l in levels}
+
+        def build(depth: int, parent: Optional[Component]) -> Component:
+            lvl = self.levels[depth]
+            comp = Component(level=lvl, index=len(self._by_level[lvl.name]),
+                             parent=parent)
+            self._by_level[lvl.name].append(comp)
+            if depth + 1 < len(self.levels):
+                comp.children = [build(depth + 1, comp)
+                                 for _ in range(self.levels[depth + 1].fanout)]
+            return comp
+
+        self.root = build(0, None)
+        self.cpus: list[Component] = list(self.root.leaves())
+        for i, leaf in enumerate(self.cpus):
+            leaf.cpu = i
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def n_cpus(self) -> int:
+        return len(self.cpus)
+
+    def components(self, level: str) -> list[Component]:
+        return self._by_level[level]
+
+    def level_names(self) -> list[str]:
+        return [l.name for l in self.levels]
+
+    def level_index(self, name: str) -> int:
+        return self.level_names().index(name)
+
+    def covering(self, cpu: int) -> list[Component]:
+        """Components whose lists 'cover' this cpu — local→global order.
+
+        The paper's lookup walks "from the most local one to the most global
+        one" (§3.3.2); we return that order.
+        """
+        return self.cpus[cpu].path()[::-1]
+
+    def common_level(self, cpu_a: int, cpu_b: int) -> Level:
+        """Deepest level under which both cpus sit (for distance factors)."""
+        pa, pb = self.cpus[cpu_a].path(), self.cpus[cpu_b].path()
+        last = pa[0].level
+        for a, b in zip(pa, pb):
+            if a is not b:
+                return last
+            last = a.level
+        return last
+
+    def distance_factor(self, cpu: int, home_cpu: int) -> float:
+        """Access-cost multiplier for cpu touching data homed at home_cpu.
+
+        1.0 when they share the innermost component; otherwise the factor of
+        the deepest level they do NOT share — e.g. 3.0 across NUMA nodes on
+        the paper's NovaScale.
+        """
+        if cpu == home_cpu:
+            return 1.0
+        pa = self.cpus[cpu].path()
+        pb = self.cpus[home_cpu].path()
+        for a, b in zip(pa, pb):
+            if a is not b:
+                return a.level.factor
+        return 1.0
+
+    def describe(self) -> str:
+        parts = [f"{l.name}(x{l.fanout}" +
+                 (f", factor={l.factor}" if l.factor != 1.0 else "") + ")"
+                 for l in self.levels]
+        return " > ".join(parts) + f" = {self.n_cpus} cpus"
+
+
+# ---------------------------------------------------------------------------
+# canned topologies
+# ---------------------------------------------------------------------------
+
+def novascale_16() -> Topology:
+    """The paper's evaluation machine: ccNUMA Bull NovaScale, 16 Itanium II,
+    4 NUMA nodes, NUMA factor ≈ 3 (§5.2)."""
+    return Topology([
+        Level("machine", 1),
+        Level("node", 4, factor=3.0),
+        Level("cpu", 4),
+    ])
+
+
+def bi_xeon_ht() -> Topology:
+    """The paper's Fig 5(a) machine: 2 HyperThreaded Pentium IV Xeons.
+
+    The chip-crossing factor models the cost of losing L2-cache sharing
+    between the sibling hyperthreads (FSB round-trips on every miss) —
+    the Netburst-era penalty is large, ≈2.5× on cache-hot codes.
+    """
+    return Topology([
+        Level("machine", 1),
+        Level("chip", 2, factor=2.5),
+        Level("smt", 2, factor=1.1),
+    ])
+
+
+def numa_4x4_smt() -> Topology:
+    """Figure 2's high-depth machine: 2 nodes x 2 chips x 2 cores x 2 SMT."""
+    return Topology([
+        Level("machine", 1),
+        Level("node", 2, factor=3.0),
+        Level("chip", 2, factor=1.4),
+        Level("core", 2, factor=1.1),
+        Level("smt", 2, factor=1.02),
+    ])
+
+
+def tpu_pod_slice(pods: int = 1, data: int = 16, model: int = 16,
+                  dcn_factor: float = 12.0, ici_factor: float = 2.5) -> Topology:
+    """TPU fleet hierarchy matching the production meshes.
+
+    Leaf = chip.  ``dcn_factor`` is the pod-crossing penalty (DCN vs ICI
+    bandwidth ratio ≈ 50GB/s·links vs data-center network), the direct
+    analogue of the paper's NUMA factor.
+    """
+    levels = [Level("job", 1)]
+    if pods > 1:
+        levels.append(Level("pod", pods, factor=dcn_factor))
+    levels += [Level("data", data, factor=ici_factor),
+               Level("model", model, factor=1.0)]
+    return Topology(levels)
+
+
+def from_mesh_axes(axis_names: Sequence[str], axis_sizes: Sequence[int],
+                   factors: Optional[Sequence[float]] = None) -> Topology:
+    """Build a Topology mirroring a jax mesh's axis hierarchy (outer→inner)."""
+    if factors is None:
+        # outermost axes are the most expensive to cross
+        defaults = {"pod": 12.0, "data": 2.5, "model": 1.0}
+        factors = [defaults.get(n, 2.0) for n in axis_names]
+    levels = [Level("job", 1)] + [
+        Level(n, s, factor=f)
+        for n, s, f in zip(axis_names, axis_sizes, factors)
+    ]
+    return Topology(levels)

@@ -1,0 +1,118 @@
+"""Scheduler tracing — the analysis tool the paper names as future work.
+
+    "It will then be useful to develop analysis tools based on tracing the
+    scheduler at runtime, so as to check and refine scheduling strategies."
+    (paper §6)
+
+:class:`Tracer` hooks a :class:`BubbleScheduler` (monkeypatch-free: the
+scheduler calls are wrapped) and records an event stream — schedules,
+bursts, sinks, steals, regenerations — with timestamps and queue levels.
+``timeline()`` renders a per-cpu ASCII gantt; ``locality_report()``
+aggregates where each bubble's threads actually ran versus where their
+data lives (the check the paper wants: did the strategy keep affinity?).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Optional
+
+from .bubble import Bubble, Thread
+from .scheduler import BubbleScheduler
+
+
+@dataclasses.dataclass
+class Event:
+    t: float
+    cpu: int
+    kind: str          # schedule | burst | sink | steal | regenerate
+    task: str
+    level: Optional[str] = None
+
+
+class Tracer:
+    def __init__(self, sched: BubbleScheduler):
+        self.sched = sched
+        self.events: list[Event] = []
+        self._wrap()
+
+    def _wrap(self) -> None:
+        sched = self.sched
+        orig_next = sched.next_thread
+        orig_burst = sched._burst
+        orig_regen = sched.regenerate
+        tracer = self
+
+        def next_thread(cpu, now=0.0, allow_steal=True):
+            steals0 = sched.stats.steals
+            sinks0 = sched.stats.sinks
+            t = orig_next(cpu, now, allow_steal)
+            if sched.stats.steals > steals0:
+                tracer.events.append(Event(now, cpu, "steal", "?"))
+            if sched.stats.sinks > sinks0:
+                lq = sched.last_queue
+                tracer.events.append(Event(
+                    now, cpu, "sink", "?", lq.level if lq else None))
+            if t is not None:
+                lq = sched.last_queue
+                tracer.events.append(Event(
+                    now, cpu, "schedule", t.name, lq.level if lq else None))
+            return t
+
+        def _burst(b, q, now):
+            tracer.events.append(Event(now, -1, "burst", b.name, q.level))
+            return orig_burst(b, q, now)
+
+        def regenerate(b, running):
+            tracer.events.append(Event(0.0, -1, "regenerate", b.name))
+            return orig_regen(b, running)
+
+        sched.next_thread = next_thread          # type: ignore
+        sched._burst = _burst                    # type: ignore
+        sched.regenerate = regenerate            # type: ignore
+
+    # -- reports --------------------------------------------------------------
+    def schedules(self) -> list[Event]:
+        return [e for e in self.events if e.kind == "schedule"]
+
+    def timeline(self, width: int = 64) -> str:
+        """Per-cpu lane of scheduled task initials over event order."""
+        lanes: dict[int, list[str]] = defaultdict(list)
+        for e in self.schedules():
+            lanes[e.cpu].append(e.task[-1] if e.task else "?")
+        out = []
+        for cpu in sorted(lanes):
+            lane = "".join(lanes[cpu])[:width]
+            out.append(f"cpu{cpu:<3d} |{lane}")
+        return "\n".join(out)
+
+    def level_histogram(self) -> dict[str, int]:
+        """At which hierarchy level did threads get picked up?  A healthy
+        bubble schedule picks mostly from local levels."""
+        hist: dict[str, int] = defaultdict(int)
+        for e in self.schedules():
+            hist[e.level or "?"] += 1
+        return dict(hist)
+
+    def locality_report(self, topo, homes: dict[str, int],
+                        threads: list[Thread]) -> dict:
+        """Fraction of schedules that ran a thread on its data's home
+        component, per level."""
+        by_thread = {t.name: t for t in threads}
+        local = total = 0
+        for e in self.schedules():
+            t = by_thread.get(e.task)
+            if t is None or t.data is None or t.data not in homes:
+                continue
+            total += 1
+            if topo.distance_factor(e.cpu, homes[t.data]) == 1.0:
+                local += 1
+        return {"local": local, "total": total,
+                "fraction": local / total if total else None}
+
+    def summary(self) -> dict:
+        kinds: dict[str, int] = defaultdict(int)
+        for e in self.events:
+            kinds[e.kind] += 1
+        return dict(kinds)

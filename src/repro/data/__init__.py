@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, PrefetchBuffer, ShardedTokenStream
+
+__all__ = ["DataConfig", "PrefetchBuffer", "ShardedTokenStream"]

@@ -1,0 +1,3 @@
+from . import hlo, sharding
+
+__all__ = ["hlo", "sharding"]

@@ -1,0 +1,127 @@
+"""Fault tolerance: elastic re-meshing, checkpoint-restart, stragglers.
+
+The bubble model makes elasticity a *re-plan*: the application's bubble tree
+is machine-independent, so when the fleet shrinks (a pod or a host goes
+away) we rebuild the mesh from survivors, run the planner against the new
+axis hierarchy, and restore the latest checkpoint with the new shardings —
+the exact analogue of bubble regeneration after a processor disappears
+("idle processors move bubbles down on their side and have them re-burst,
+getting a new distribution suited to the new workload while keeping
+affinity intact", §3.3.3).
+
+Straggler mitigation is bubble regeneration at step granularity: per-host
+step times feed an EWMA detector; a persistent straggler's work-bubbles are
+regenerated (pulled back to the parent queue) and stolen by healthy hosts.
+The detector + policy are here; the serving engine and the train driver
+call into them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.planner import MeshAxis, Plan, plan_bubbles
+from repro.core.bubble import Bubble
+
+
+@dataclasses.dataclass
+class FleetSpec:
+    """Declarative fleet: which (pod, data, model) coordinates are alive."""
+    pods: int
+    data: int
+    model: int
+    dead_pods: frozenset = frozenset()
+    dead_hosts: frozenset = frozenset()     # (pod, data-slice) pairs
+
+    def alive_shape(self) -> tuple[int, ...]:
+        pods = self.pods - len(self.dead_pods)
+        data = self.data - len({d for _, d in self.dead_hosts})
+        if pods <= 0 or data <= 0:
+            raise RuntimeError("fleet exhausted")
+        if pods > 1:
+            return (pods, data, self.model)
+        return (data, self.model)
+
+    def alive_axes(self) -> tuple[str, ...]:
+        return (("pod", "data", "model") if self.pods - len(self.dead_pods) > 1
+                else ("data", "model"))
+
+
+def rebuild_mesh(spec: FleetSpec, devices: Optional[Sequence] = None):
+    """Mesh over surviving devices (largest rectangular slice)."""
+    shape = spec.alive_shape()
+    axes = spec.alive_axes()
+    n = int(np.prod(shape))
+    devices = (devices or jax.devices())
+    if len(devices) < n:
+        raise RuntimeError(f"not enough devices: need {n}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def replan(tree: Bubble, mesh) -> Plan:
+    axes = [MeshAxis(n, s) for n, s in
+            zip(mesh.axis_names, mesh.devices.shape)]
+    return plan_bubbles(tree, axes)
+
+
+def elastic_restart(tree: Bubble, spec: FleetSpec, ckpt_dir, like, *,
+                    make_shardings: Callable, devices=None):
+    """Full recovery path: survivors → mesh → plan → shardings → restore.
+
+    ``make_shardings(plan, mesh) -> pytree of NamedSharding`` matching
+    ``like``.  Returns (mesh, plan, restored_tree, step)."""
+    from repro import checkpoint as ckpt
+    mesh = rebuild_mesh(spec, devices)
+    plan = replan(tree, mesh)
+    sh = make_shardings(plan, mesh)
+    step = ckpt.latest_step(ckpt_dir)
+    if step is None:
+        raise RuntimeError(f"no checkpoint under {ckpt_dir}")
+    restored, manifest = ckpt.restore(ckpt_dir, step, like, shardings=sh)
+    return mesh, plan, restored, step
+
+
+# ---------------------------------------------------------------------------
+# straggler detection (EWMA of per-host step times)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerDetector:
+    threshold: float = 1.5          # x median EWMA
+    alpha: float = 0.3
+    min_samples: int = 3
+    ewma: dict = dataclasses.field(default_factory=dict)
+    count: dict = dataclasses.field(default_factory=dict)
+
+    def observe(self, host: str, step_time: float) -> None:
+        prev = self.ewma.get(host)
+        self.ewma[host] = (step_time if prev is None
+                           else self.alpha * step_time + (1 - self.alpha) * prev)
+        self.count[host] = self.count.get(host, 0) + 1
+
+    def stragglers(self) -> list[str]:
+        ready = {h: t for h, t in self.ewma.items()
+                 if self.count[h] >= self.min_samples}
+        if len(ready) < 2:
+            return []
+        med = float(np.median(list(ready.values())))
+        return [h for h, t in ready.items() if t > self.threshold * med]
+
+
+def regenerate_straggler_bubbles(sched, straggler_cpus: Sequence[int]):
+    """Pull every bubble homed on a straggler's queues back to the parent
+    level so healthy cpus pick it up (paper §3.3.3 regeneration).  Returns
+    the number of bubbles moved."""
+    moved = 0
+    for cpu in straggler_cpus:
+        chain = sched.queues.covering(cpu)      # local → global
+        for q, parent in zip(chain[:-1], chain[1:]):
+            for t in list(q.tasks):
+                q.remove(t)
+                parent.push(t)
+                moved += 1
+    return moved

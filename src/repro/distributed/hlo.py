@@ -1,0 +1,179 @@
+"""Compiled-HLO analysis: collective bytes + roofline terms.
+
+``collective_bytes`` parses the post-SPMD optimized HLO text and sums the
+per-shard result sizes of every collective op.  Shapes in post-partitioning
+HLO are already per-device, so the sums are per-chip traffic.  All-reduce is
+counted twice (reduce-scatter + all-gather phases of a ring); the (n-1)/n
+ring factor is folded to 1 — a ≤7% overstatement on 16-wide rings, noted in
+EXPERIMENTS.md.
+
+``roofline`` turns cost_analysis + collective bytes into the three terms
+(seconds) against the v5e-class hardware constants from the brief.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# hardware constants (per chip) — TPU v5e-class, from the brief
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~per-chip injection)
+DCN_BW = 6.25e9              # bytes/s per chip across pods (50 Gbit/s)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>.+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]\w*?)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    by_op: dict = field(default_factory=dict)       # op -> (count, bytes)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b for _, b in self.by_op.values())
+
+    @property
+    def weighted_bytes(self) -> float:
+        """All-reduce counted 2x (RS+AG phases)."""
+        out = 0.0
+        for op, (_, b) in self.by_op.items():
+            out += b * (2.0 if op == "all-reduce" else 1.0)
+        return out
+
+    def summary(self) -> dict:
+        return {op: {"count": c, "bytes": b}
+                for op, (c, b) in sorted(self.by_op.items())}
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:          # async pair: count only the start
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("out"))
+        c, b = stats.by_op.get(op, (0, 0))
+        stats.by_op[op] = (c + 1, b + nbytes)
+    return stats
+
+
+def cross_pod_bytes(hlo_text: str, pod_pairs: set[tuple[int, int]]) -> int:
+    """Best-effort: bytes of collectives whose replica groups span pods.
+
+    ``pod_pairs`` unused in the regex fallback; we approximate by checking
+    whether any replica group in the op line contains device ids from more
+    than one pod (ids >= 256 and < 256 together)."""
+    total = 0
+    group_re = re.compile(r"replica_groups=\{([^}]*)\}")
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        g = group_re.search(line)
+        if not g:
+            continue
+        spans = False
+        for grp in g.group(1).split("},{"):
+            ids = [int(x) for x in re.findall(r"\d+", grp)]
+            if ids and (min(ids) < 256 <= max(ids)):
+                spans = True
+                break
+        if spans:
+            total += _shape_bytes(m.group("out"))
+    return total
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip HLO bytes accessed
+    coll_bytes: float            # per-chip collective bytes (weighted)
+    dcn_bytes: float = 0.0       # subset crossing pods
+    model_flops: float = 0.0     # analytic 6*N*D (global)
+    chips: int = 1
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        ici = (self.coll_bytes - self.dcn_bytes) / ICI_BW
+        dcn = self.dcn_bytes / DCN_BW
+        return ici + dcn
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_step(self) -> float:
+        """Roofline step time = max of the three (full overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs)."""
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * self.flops)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline step time."""
+        if self.t_step <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.t_step) / PEAK_FLOPS
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "dcn_bytes_per_chip": self.dcn_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_step_s": self.t_step,
+            "bottleneck": self.bottleneck,
+            "useful_fraction": self.useful_fraction,
+            "mfu_at_roofline": self.mfu,
+        }

@@ -1,0 +1,218 @@
+"""Plan → PartitionSpec trees: the bubble scheduler's output made executable.
+
+``param_specs``   — every parameter, from its logical-dim annotation.
+``opt_specs``     — optimizer state: parameter sharding + ZeRO-1 (the first
+                    still-unsharded heavy dim additionally sharded over
+                    ``data``), the analogue of the paper's "distribute the
+                    memory where the bubble lives".
+``batch_specs``   — input batch (batch dim over the plan's batch axes).
+``state_specs``   — decode caches: batch over data axes, kv-time/heads over
+                    the model axis as the plan dictates.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.planner import Plan
+from repro.models import api
+from repro.models.config import ModelConfig
+
+# dims eligible for the extra ZeRO-1 ``data`` sharding of optimizer state,
+# in preference order (first match on each tensor wins)
+_ZERO_DIMS = ("d_model", "d_ff", "lru", "heads_flat", "vocab", "experts")
+
+
+def _spec_from_dims(dims: tuple, plan: Plan,
+                    mesh_axes: set[str]) -> P:
+    used: set[str] = set()
+    entries = []
+    for d in dims:
+        ax = plan.axes_of(d)
+        if ax:
+            ax = tuple(a for a in ax if a in mesh_axes and a not in used)
+        if ax:
+            entries.append(ax if len(ax) > 1 else ax[0])
+            used.update(ax)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def param_specs(cfg: ModelConfig, plan: Plan, mesh: Mesh,
+                extra_storage: tuple = ()):
+    """``extra_storage``: mesh axes added FSDP-style to the first eligible
+    unsharded heavy dim of each parameter (storage sharding; XLA inserts
+    the per-layer all-gather)."""
+    mesh_axes = set(mesh.axis_names)
+    dims_tree = api.dims(cfg)
+
+    def one(dims):
+        spec = _spec_from_dims(dims, plan, mesh_axes)
+        for ax in extra_storage:
+            if ax in mesh_axes:
+                spec = _zero_spec(dims, spec, mesh_axes, axis=ax)
+        return spec
+
+    return jax.tree.map(one, dims_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _zero_spec(dims: tuple, base: P, mesh_axes: set[str],
+               axis: str = "data") -> P:
+    """Add ZeRO/FSDP ``axis`` sharding to the first eligible unsharded dim."""
+    if axis not in mesh_axes:
+        return base
+    used = set()
+    for e in base:
+        if e is None:
+            continue
+        used.update(e if isinstance(e, tuple) else (e,))
+    if axis in used:
+        return base
+    entries = list(base)
+    for pref in _ZERO_DIMS:
+        for i, d in enumerate(dims):
+            if d == pref and entries[i] is None:
+                entries[i] = axis
+                return P(*entries)
+    return base
+
+
+def opt_specs(cfg: ModelConfig, plan: Plan, mesh: Mesh):
+    """AdamWState sharding: step replicated; master/m/v = param + ZeRO."""
+    mesh_axes = set(mesh.axis_names)
+    dims_tree = api.dims(cfg)
+    pspecs = param_specs(cfg, plan, mesh)
+    zero = jax.tree.map(
+        lambda dims, base: _zero_spec(dims, base, mesh_axes),
+        dims_tree, pspecs, is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x))
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), master=zero, m=zero, v=zero)
+
+
+def _batch_axes(plan: Plan) -> Any:
+    ax = plan.axes_of("batch")
+    if not ax:
+        return None
+    return ax if len(ax) > 1 else ax[0]
+
+
+def batch_specs(cfg: ModelConfig, plan: Plan, batch_tree) -> Any:
+    """Shard the leading (batch) dim of every input leaf."""
+    b = _batch_axes(plan)
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        return P(*((b,) + (None,) * (nd - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def state_specs(cfg: ModelConfig, plan: Plan, state_tree) -> Any:
+    """Decode-state sharding.
+
+    Stacked state leaves have a leading repeats axis.  Layout per kind:
+      KVCache k/v  (R, B, C, K, hd) — batch over data; the cache *time* axis
+        over the model axis (flash-decode partitioning) for MHA/GQA, since
+        kv heads rarely fill the model axis.
+      pos          (R, B)           — batch only.
+      LRU/RWKV     (R, B, ...)      — batch over data, widest feature dim
+        over model when divisible.
+    """
+    b = _batch_axes(plan)
+    b_set = set(b) if isinstance(b, tuple) else ({b} if b else set())
+    model_ax = None
+    for cand in ("heads", "lru", "heads_flat", "d_ff"):
+        ax = plan.axes_of(cand)
+        if ax and ax[-1] not in b_set:
+            model_ax = ax[-1]
+            break
+
+    def spec(leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        if nd >= 4 and model_ax is not None:
+            # (R, B, C, K, hd) kv cache or (R, B, H, hd, hd) wkv state:
+            # shard the largest non-batch axis over model if divisible
+            axes: list = [None, b] + [None] * (nd - 2)
+            sizes = [(i, shp[i]) for i in range(2, nd)]
+            sizes.sort(key=lambda t: -t[1])
+            msize = _axis_size(model_ax)
+            for i, s in sizes:
+                if msize and s % msize == 0:
+                    axes[i] = model_ax
+                    break
+            return P(*axes)
+        if nd >= 2:
+            return P(None, b, *([None] * (nd - 2)))
+        return P(*([None] * nd))
+
+    def _axis_size(name):
+        return _MESH_SIZES.get(name)
+
+    return jax.tree.map(spec, state_tree)
+
+
+# set by shardings() so state_specs can check divisibility
+_MESH_SIZES: dict[str, int] = {}
+
+
+def sharded_bytes(specs_tree, shardings_tree) -> int:
+    """Exact per-chip bytes of a ShapeDtypeStruct tree under shardings.
+
+    The CPU backend's ``memory_analysis`` reports zeros, so argument sizes
+    for the dry-run are computed analytically (they are exact: per-chip
+    shard bytes = global bytes / prod(sizes of axes used by the spec))."""
+    total = 0
+    for sds, sh in zip(jax.tree.leaves(specs_tree),
+                       jax.tree.leaves(shardings_tree,
+                                       is_leaf=lambda x: isinstance(
+                                           x, NamedSharding))):
+        n = 1
+        for d in sds.shape:
+            n *= d
+        n *= jnp.dtype(sds.dtype).itemsize
+        div = 1
+        sizes = dict(zip(sh.mesh.axis_names, sh.mesh.devices.shape))
+        for entry in sh.spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                div *= sizes[ax]
+        total += -(-n // div)        # ceil
+    return total
+
+
+def shardings(cfg: ModelConfig, plan: Plan, mesh: Mesh, shape: str,
+              extra_storage: tuple = ()):
+    """One-stop bundle for a workload cell: NamedShardings for every
+    argument of the step function."""
+    global _MESH_SIZES
+    _MESH_SIZES = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def named(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+
+    kind = api.SHAPES[shape]["kind"]
+    out: dict[str, Any] = {"params": named(
+        param_specs(cfg, plan, mesh, extra_storage=extra_storage))}
+    specs = api.input_specs(cfg, shape)
+    if kind == "train":
+        out["opt"] = named(opt_specs(cfg, plan, mesh))
+        out["batch"] = named(batch_specs(cfg, plan, specs))
+    elif kind == "prefill":
+        out["batch"] = named(batch_specs(cfg, plan, specs))
+    else:  # decode
+        tok = {"token": specs["token"]}
+        out["token"] = named(batch_specs(cfg, plan, tok))["token"]
+        out["states"] = named(state_specs(cfg, plan, specs["states"]))
+        if "enc" in specs:
+            out["enc"] = named(batch_specs(cfg, plan,
+                                           {"enc": specs["enc"]}))["enc"]
+    return out

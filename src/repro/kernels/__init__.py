@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots of the assigned archs.
+
+* ``flash_attention`` — causal/SWA GQA attention (prefill)
+* ``rglru``           — RG-LRU linear recurrence (RecurrentGemma)
+* ``rwkv6``           — WKV with data-dependent decay (Finch)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
+``ops.py``; tests sweep shapes/dtypes in interpret mode.
+"""
+
+from . import flash_attention, ops, ref, rglru, rwkv6
+
+__all__ = ["flash_attention", "rglru", "rwkv6", "ops", "ref"]

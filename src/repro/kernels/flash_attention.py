@@ -1,0 +1,127 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA pre-repeated).
+
+TPU adaptation of the flash algorithm: Q/K/V tiles live in VMEM with
+MXU-aligned (128-multiple) block shapes; the KV axis is the innermost grid
+dimension, which Pallas TPU iterates sequentially per (batch, head, q-block),
+so the online-softmax state (m, l, acc) is carried in VMEM scratch across KV
+steps — the HBM→VMEM pipeline streams K/V tiles while the MXU consumes them.
+
+Layout: (B, H, S, hd).  ``hd`` up to 256 fits a lane tile; block sizes are
+clamped to the sequence and padded shapes are the caller's responsibility
+(``ops.mha`` pads).  Validated in interpret mode against ``ref.sdpa_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = None
+    if causal:
+        mask = k_pos <= q_pos
+    if window is not None:
+        wmask = k_pos > (q_pos - window)
+        mask = wmask if mask is None else (mask & wmask)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (bq,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                      # (bq, bk)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_bhsd(q, k, v, *, causal: bool = True,
+               window: Optional[int] = None, scale: float = 1.0,
+               bq: int = 256, bk: int = 256,
+               interpret: Optional[bool] = None):
+    """q,k,v: (B,H,S,hd) with equal head counts (repeat GQA beforehand)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=_scratch(bq, hd),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(bq, hd):
+    """VMEM online-softmax state: acc (bq,hd), m (bq,), l (bq,)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return [pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32)]
+
+
+def mha(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+        scale: float = 1.0, bq: int = 256, bk: int = 256,
+        interpret: Optional[bool] = None):
+    """(B,S,H,hd) GQA entry point: repeats KV heads, handles layout."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        g = H // K
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_bhsd(qt, kt, vt, causal=causal, window=window, scale=scale,
+                     bq=bq, bk=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op auto-selects interpret mode on CPU (the kernels are TPU-targeted;
+interpret executes the kernel body in Python for validation) and exposes the
+same signature as its ``ref.py`` oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import flash_attention as _fa
+from . import rglru as _rglru
+from . import rwkv6 as _rwkv6
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bk"))
+def mha(q, k, v, *, causal=True, window=None, scale=1.0, bq=256, bk=256):
+    return _fa.mha(q, k, v, causal=causal, window=window, scale=scale,
+                   bq=bq, bk=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def lru_scan(a, b, *, chunk=256):
+    return _rglru.lru_scan(a, b, chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv(r, k, v, w, u, *, chunk=128):
+    return _rwkv6.wkv(r, k, v, w, u, chunk=chunk)

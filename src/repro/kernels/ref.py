@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sdpa_ref(q, k, v, *, causal=True, window: Optional[int] = None,
+             scale=1.0):
+    """(B,S,H,hd) GQA attention, materialised softmax."""
+    from repro.models.attention import _mask, _sdpa
+    B, S = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    m = _mask(pos, pos, window) if causal else None
+    return _sdpa(q, k, v, m, scale)
+
+
+def lru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan.  (B,S,N) f32."""
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(
+        comb, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h
+
+
+def wkv_ref(r, k, v, w, u):
+    """RWKV6 time-mix oracle.  All (B,S,H,hd) f32; u (H,hd).
+    Returns (y, S_final)."""
+    B, S, H, hd = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+
+    def step(S_, inp):
+        r_, k_, v_, w_ = inp
+        kv = k_[..., :, None] * v_[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", r_, S_ + u[None, :, :, None] * kv)
+        S_ = w_[..., :, None] * S_ + kv
+        return S_, out
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    Sf, y = jax.lax.scan(step, S0, (rf.swapaxes(0, 1), kf.swapaxes(0, 1),
+                                    vf.swapaxes(0, 1), wf.swapaxes(0, 1)))
+    return y.swapaxes(0, 1), Sf

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for RWKV6 (Finch) WKV with data-dependent decay.
+
+Per head the state is an (hd, hd) matrix S with the recurrence
+    y_t = r_t · (S + u ⊙ k_t v_tᵀ),      S ← diag(w_t) S + k_t v_tᵀ.
+
+TPU adaptation: grid (B, H, chunks) with the chunk axis innermost
+(sequential), S carried in VMEM scratch (hd×hd = 64×64 fp32 = 16 KiB —
+comfortably VMEM-resident).  The inner time loop forms rank-1 updates in
+VREGs; r/k/v/w chunk tiles stream HBM→VMEM once.  The final state is
+emitted so prefill hands off to decode.
+
+Validated in interpret mode against the lax.scan oracle ``ref.wkv_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sfin_ref, s_ref, *,
+            chunk: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)     # (chunk, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)           # (hd,)
+
+    def step(t, carry):
+        S, out = carry                          # S: (hd, hd)
+        kv = k[t][:, None] * v[t][None, :]      # rank-1 (hd, hd)
+        y = ((S + u[:, None] * kv) * r[t][:, None]).sum(axis=0)   # (hd,)
+        S = w[t][:, None] * S + kv
+        out = jax.lax.dynamic_update_index_in_dim(out, y, t, 0)
+        return S, out
+
+    out0 = jnp.zeros((chunk, r.shape[1]), jnp.float32)
+    S, out = jax.lax.fori_loop(0, chunk, step, (s_ref[...], out0))
+    s_ref[...] = S
+    y_ref[0, :, 0] = out.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _done():
+        sfin_ref[0, 0] = S.astype(sfin_ref.dtype)
+
+
+def wkv(r, k, v, w, u, *, chunk: int = 128,
+        interpret: Optional[bool] = None):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd) → (y (B,S,H,hd) f32, S_final
+    (B,H,hd,hd) f32)."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    from jax.experimental.pallas import tpu as pltpu
+    kern = functools.partial(_kernel, chunk=chunk, nc=nc)
+    y, sfin = pl.pallas_call(
+        kern,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, hd), lambda ib, ih, ic: (ih, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, sfin

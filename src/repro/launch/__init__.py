@@ -1,0 +1,3 @@
+# launch entry points: mesh.py (topology), dryrun.py (multi-pod lowering),
+# train.py / serve.py (drivers).  Import lazily — dryrun must set XLA_FLAGS
+# before any jax import.

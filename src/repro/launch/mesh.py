@@ -1,0 +1,51 @@
+"""Production meshes.
+
+All constructors are FUNCTIONS so importing this module never touches jax
+device state (device count is locked at first jax init — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any import).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(devices)} — run under launch/dryrun.py which sets "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[list] = None):
+    """Arbitrary mesh over the first prod(shape) devices."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    devices = (devices or jax.devices())[:n]
+    return jax.sharding.Mesh(np.asarray(devices).reshape(tuple(shape)), axes)
+
+
+def single_device_mesh(axes: Sequence[str] = ("data", "model")):
+    """1x1 mesh for CPU tests of the sharded code paths."""
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape((1,) * len(axes)), axes)
+
+
+def mesh_axes(mesh) -> list[tuple[str, int]]:
+    return list(zip(mesh.axis_names, mesh.devices.shape))

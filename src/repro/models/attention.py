@@ -1,0 +1,174 @@
+"""GQA attention: training/prefill (full sequence) and cached decode.
+
+The full-sequence path optionally routes through the Pallas flash-attention
+kernel (``repro.kernels``); the einsum reference is the default (and the
+path used by the multi-pod dry-run — the kernel is TPU-targeted and
+validated in interpret mode by the tests).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rope
+from .schema import ParamDef, Schema, normal
+
+
+def attn_schema(cfg: ModelConfig) -> Schema:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.pdtype
+    s = normal(0.02)
+    return {
+        "wq": ParamDef((d, h, hd), ("d_model", "heads", "head_dim"), s, dt),
+        "wk": ParamDef((d, k, hd), ("d_model", "kv_heads", "head_dim"), s, dt),
+        "wv": ParamDef((d, k, hd), ("d_model", "kv_heads", "head_dim"), s, dt),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "d_model"), s, dt),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, K, hd)
+    v: jax.Array          # (B, C, K, hd)
+    pos: jax.Array        # (B,) int32 — next write position (= tokens seen)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int,
+               dtype=None) -> KVCache:
+    k = cfg.n_kv_heads
+    dt = dtype or cfg.cdtype
+    return KVCache(
+        k=jnp.zeros((batch, length, k, cfg.hd), dt),
+        v=jnp.zeros((batch, length, k, cfg.hd), dt),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _mask(q_pos, k_pos, window: Optional[int], cross: bool = False):
+    """(..., S_q, S_k) boolean mask: causal + optional sliding window."""
+    if cross:
+        return None
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,S,H,hd) k/v (B,T,K,hd) — grouped by repeating kv heads."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    qg = q.reshape(B, S, K, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def attention(params, x, positions, cfg: ModelConfig, *,
+              kv: Optional[tuple[jax.Array, jax.Array]] = None,
+              causal: bool = True, use_kernel: bool = False,
+              return_kv: bool = False):
+    """Full-sequence (train/prefill) attention.  ``kv`` overrides the
+    self-attention keys/values for cross-attention (enc-dec)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+        cross = False
+    else:
+        xkv, _ = kv
+        k = jnp.einsum("btd,dhk->bthk", xkv, params["wk"])
+        v = jnp.einsum("btd,dhk->bthk", xkv, params["wv"])
+        cross = True
+    scale = cfg.hd ** -0.5
+    S = q.shape[1]
+    if use_kernel and not cross and causal:
+        from repro.kernels import flash_attention
+        out = flash_attention.mha(q, k, v, causal=True, window=cfg.window,
+                                  scale=scale)
+    elif not cross and causal and S >= 1024 and S % 256 == 0:
+        # chunked flash formulation: O(S·block) memory, GQA pre-repeated so
+        # every tensor shards over heads (the dry-run / production jnp path)
+        from .flash import flash_attention as flash_jnp
+        g = q.shape[2] // k.shape[2]
+        kr = jnp.repeat(k, g, axis=2) if g > 1 else k
+        vr = jnp.repeat(v, g, axis=2) if g > 1 else v
+        out = flash_jnp(q, kr, vr, causal=True, window=cfg.window,
+                        scale=scale)
+    else:
+        k_pos = jnp.arange(k.shape[1])[None] if cross else positions
+        m = (_mask(positions, k_pos, cfg.window, cross)
+             if causal else None)
+        out = _sdpa(q, k, v, m, scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
+                  cache_len: int) -> KVCache:
+    """Pack full-sequence K/V into a decode cache (ring layout for SWA)."""
+    B, S = k.shape[:2]
+    C = cache_len
+    if S >= C:
+        # keep the last C tokens; token at original position t sits at ring
+        # slot t % C, i.e. a roll of the last-C slice by S % C
+        kk = jnp.roll(k[:, -C:], S % C, axis=1)
+        vv = jnp.roll(v[:, -C:], S % C, axis=1)
+    else:
+        pad = [(0, 0), (0, C - S), (0, 0), (0, 0)]
+        kk, vv = jnp.pad(k, pad), jnp.pad(v, pad)
+    return KVCache(k=kk, v=vv,
+                   pos=jnp.full((B,), S, jnp.int32))
+
+
+def decode_attention(params, x, cache: KVCache, cfg: ModelConfig):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D).  The cache key/value time axis is the shardable dim for
+    long-context decode (flash-decode style: XLA partitions the softmax
+    reduction over the sharded axis with all-reduces).
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    knew = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    vnew = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    pos = cache.pos                                    # (B,)
+    q = rope(q, pos[:, None], cfg.rope_theta, cfg.rope_fraction)
+    knew = rope(knew, pos[:, None], cfg.rope_theta, cfg.rope_fraction)
+
+    C = cache.k.shape[1]
+    slot = (pos % C)[:, None, None, None]              # ring buffer for SWA
+    idx = slot * jnp.ones((B, 1, 1, 1), jnp.int32)
+    onehot = jax.nn.one_hot(idx[:, 0, 0, 0], C, dtype=cache.k.dtype)  # (B,C)
+    k = cache.k * (1 - onehot[:, :, None, None]) + \
+        onehot[:, :, None, None] * knew.astype(cache.k.dtype)
+    v = cache.v * (1 - onehot[:, :, None, None]) + \
+        onehot[:, :, None, None] * vnew.astype(cache.v.dtype)
+
+    # valid positions: written and (if SWA) within the window
+    tpos = jnp.arange(C)[None, :]                      # ring slots
+    written = tpos <= jnp.minimum(pos[:, None], C - 1)
+    scale = cfg.hd ** -0.5
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    g = H // K
+    qg = q.reshape(B, 1, K, g, cfg.hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    scores = jnp.where(written[:, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    out = out.reshape(B, 1, H, cfg.hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, KVCache(k=k, v=v, pos=pos + 1)

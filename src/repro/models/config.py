@@ -1,0 +1,114 @@
+"""Model configuration — one dataclass covering all assigned families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                   # query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # -- MoE --
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    # -- attention flavour --
+    head_dim: Optional[int] = None            # default d_model // n_heads
+    window: Optional[int] = None              # sliding-window attention
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0                # chatglm applies RoPE to half
+    # -- hybrid (recurrentgemma): repeating block pattern --
+    block_pattern: tuple[str, ...] = ("attn",)   # e.g. ("rec","rec","attn")
+    lru_width: Optional[int] = None
+    conv_width: int = 4                        # temporal conv in rec blocks
+    # -- encoder-decoder --
+    enc_layers: int = 0                        # 0 = decoder-only
+    # -- modality frontend stub --
+    frontend: Optional[str] = None             # "audio" | "vision" | None
+    frontend_tokens: int = 0                   # frames/patches per sample
+    # -- numerics --
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    logits_softcap: float = 0.0
+    # -- serving --
+    max_cache: int = 32_768
+    # -- lowering control --
+    # unroll layer scans (used by dry-run metric variants: XLA cost_analysis
+    # does not descend into while-loop bodies, so per-layer costs are read
+    # from shallow unrolled lowerings and extrapolated)
+    scan_unroll: bool = False
+    # -- distribution hints (set by the launcher, not by arch configs) --
+    # sp_axis: mesh axis to sequence-shard the residual carry on between
+    # blocks (Megatron-SP style); batch_axes: the activation batch axes
+    sp_axis: Optional[str] = None
+    batch_axes: tuple = ()
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports 500k-token decode (bounded state)."""
+        return (self.family in ("ssm", "hybrid")
+                or self.window is not None)
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (embedding included)."""
+        from . import lm
+        return lm.count_params(self)
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: shared + top_k experts only)."""
+        from . import lm
+        return lm.count_params(self, active_only=True)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2 + (len(self.block_pattern) > 1)),
+            d_model=64,
+            n_heads=min(self.n_heads, 4) or 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=128,
+            vocab=256,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            head_dim=16 if self.n_heads else None,
+            window=min(self.window, 32) if self.window else None,
+            lru_width=64 if self.lru_width else None,
+            enc_layers=min(self.enc_layers, 2),
+            frontend_tokens=min(self.frontend_tokens, 16),
+            max_cache=128,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+        if len(self.block_pattern) > 1:
+            small["n_layers"] = len(self.block_pattern)
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,141 @@
+"""Flash attention in pure JAX: chunked online-softmax with custom VJP.
+
+This is the memory-honest formulation of attention the dry-run lowers
+(O(S·block) live memory instead of the O(S²) materialised score matrix) and
+the numerical oracle the Pallas TPU kernel (``repro.kernels.flash_attention``)
+mirrors block-for-block.
+
+Layout: q, k, v are (B, S, H, hd) with KV already repeated to H query heads
+(GQA repeat happens in the caller), so every tensor shards cleanly over the
+``model`` axis on the head dimension — no GQA reshape to confuse GSPMD.
+
+The custom VJP stores only (q, k, v, out, logsumexp); the backward pass
+recomputes per-block scores exactly like the flash-attention paper, so
+nothing O(S²) is ever live, in either pass.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_count(s: int, blk: int) -> int:
+    assert s % blk == 0, (s, blk)
+    return s // blk
+
+
+def _mask_block(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(Sq_blk, Sk_blk) bool mask for one block pair."""
+    m = None
+    if causal:
+        m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = k_pos[None, :] > (q_pos[:, None] - window)
+        m = w if m is None else (m & w)
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash(q, k, v, causal: bool = True, window: Optional[int] = None,
+          scale: float = 1.0, block: int = 512):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, scale, block)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, scale, block):
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    nkv = _block_count(T, block)
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)            # (B,H,T,hd)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    q_pos = jnp.arange(S)
+
+    def body(carry, blk_idx):
+        acc, m, l = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(kf, blk_idx * block, block, 2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vf, blk_idx * block, block, 2)
+        k_pos = blk_idx * block + jnp.arange(block)
+        s_blk = jnp.einsum("bhsd,bhtd->bhst", qf, k_blk)        # (B,H,S,blk)
+        msk = _mask_block(q_pos, k_pos, causal, window)
+        if msk is not None:
+            s_blk = jnp.where(msk[None, None], s_blk, NEG_INF)
+        m_new = jnp.maximum(m, s_blk.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s_blk - m_new[..., None])
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhst,bhtd->bhsd",
+                                                     p, v_blk)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nkv))
+    lsafe = jnp.maximum(l, 1e-30)
+    out = (acc / lsafe[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    lse = m + jnp.log(lsafe)                                    # (B,H,S)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, scale, block):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, scale, block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, scale, block, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    nkv = _block_count(T, block)
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    do = dout.astype(jnp.float32).transpose(0, 2, 1, 3)          # (B,H,S,hd)
+    of = out.astype(jnp.float32).transpose(0, 2, 1, 3)
+    D = (do * of).sum(-1)                                        # (B,H,S)
+    q_pos = jnp.arange(S)
+
+    def body(dq, blk_idx):
+        k_blk = jax.lax.dynamic_slice_in_dim(kf, blk_idx * block, block, 2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vf, blk_idx * block, block, 2)
+        k_pos = blk_idx * block + jnp.arange(block)
+        s_blk = jnp.einsum("bhsd,bhtd->bhst", qf, k_blk)
+        msk = _mask_block(q_pos, k_pos, causal, window)
+        if msk is not None:
+            s_blk = jnp.where(msk[None, None], s_blk, NEG_INF)
+        p = jnp.exp(s_blk - lse[..., None])                      # (B,H,S,blk)
+        dv_blk = jnp.einsum("bhst,bhsd->bhtd", p, do)
+        dp = jnp.einsum("bhsd,bhtd->bhst", do, v_blk)
+        ds = p * (dp - D[..., None])
+        dq = dq + jnp.einsum("bhst,bhtd->bhsd", ds, k_blk) * scale
+        dk_blk = jnp.einsum("bhst,bhsd->bhtd", ds, qf) * 1.0
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(body, dq0, jnp.arange(nkv))
+    dk = dk_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, T, hd)
+    dv = dv_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, T, hd)
+    return (dq.transpose(0, 2, 1, 3).astype(q.dtype),
+            dk.transpose(0, 2, 1, 3).astype(k.dtype),
+            dv.transpose(0, 2, 1, 3).astype(v.dtype))
+
+
+flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=1.0,
+                    block=512):
+    """Public entry: picks a block size that divides the sequence."""
+    T = k.shape[1]
+    blk = block
+    while T % blk:
+        blk //= 2
+    blk = max(blk, 1)
+    return flash(q, k, v, causal, window, scale, blk)

@@ -1,0 +1,113 @@
+"""Shared neural layers (pure JAX, functional params)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .schema import ParamDef, Schema, normal, ones, zeros
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_schema(d: int, dtype) -> Schema:
+    return {"scale": ParamDef((d,), ("d_model",), ones(), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         fraction: float = 1.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = jnp.arange(half, dtype=jnp.float32)
+    inv = theta ** (-freqs / half)
+    ang = positions[..., None, None].astype(jnp.float32) * inv  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half].astype(jnp.float32), xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None,
+               ff_dim: str = "d_ff") -> Schema:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.pdtype
+    s = normal(0.02)
+    return {
+        "wi": ParamDef((d, f), ("d_model", ff_dim), s, dt),
+        "wg": ParamDef((d, f), ("d_model", ff_dim), s, dt),
+        "wo": ParamDef((f, d), (ff_dim, "d_model"), s, dt),
+    }
+
+
+def mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    g = jnp.einsum("...d,df->...f", x, params["wg"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_schema(cfg: ModelConfig) -> Schema:
+    return {"table": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "d_model"),
+                              normal(1.0), cfg.pdtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_schema(cfg: ModelConfig) -> Schema:
+    return {"w": ParamDef((cfg.d_model, cfg.vocab), ("d_model", "vocab"),
+                          normal(0.02), cfg.pdtype)}
+
+
+def unembed(params, x, softcap: float = 0.0):
+    logits = jnp.einsum("...d,dv->...v", x, params["w"]).astype(jnp.float32)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits: jax.Array, labels: jax.Array,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy.  logits (..., V) fp32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,434 @@
+"""Causal LM assembly: pattern-stacked blocks under ``lax.scan``.
+
+A model is a repeating *block pattern* (dense: ``("attn",)``;
+RecurrentGemma: ``("rec","rec","attn")``; RWKV6: ``("rwkv",)``), each block
+being pre-norm residual sublayers.  Parameters for each pattern position are
+stacked over the repeat count and scanned, so the lowered HLO is one block
+per pattern position regardless of depth — critical for dry-run compile
+times on 512 devices and the idiom XLA pipelines best.
+
+Public entry points (pure functions of (params, batch)):
+
+* ``loss_fn``     — next-token loss (training forward)
+* ``prefill``     — full-sequence forward returning last logits + decode
+                    state with genuinely populated caches
+* ``decode_step`` — one token in, one token out, state carried
+
+Encoder-decoder (seamless-m4t) and modality frontends (llava/seamless) are
+layered on the same machinery at the bottom of the file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (KVCache, attn_schema, attention, decode_attention,
+                        init_cache, prefill_cache)
+from .config import ModelConfig
+from .layers import (embed, embed_schema, mlp, mlp_schema, rmsnorm,
+                     rmsnorm_schema, unembed, unembed_schema, xent_loss)
+from .moe import moe_ffn, moe_schema
+from .recurrent import (LRUState, RWKVState, init_lru_state, init_rwkv_state,
+                        rglru_block, rglru_schema, rglru_step,
+                        rwkv6_channel_mix, rwkv6_channel_mix_schema,
+                        rwkv6_schema, rwkv6_time_mix, rwkv6_time_mix_step)
+from .schema import (ParamDef, Schema, init_params, map_schema, n_params,
+                     normal, param_dims, param_shapes, stacked)
+
+# ---------------------------------------------------------------------------
+# schemas
+# ---------------------------------------------------------------------------
+
+
+def _ffn_schema(cfg: ModelConfig) -> Schema:
+    return moe_schema(cfg) if cfg.n_experts else mlp_schema(cfg)
+
+
+def block_schema(cfg: ModelConfig, kind: str) -> Schema:
+    d = cfg.d_model
+    dt = cfg.pdtype
+    if kind == "attn":
+        return {"ln1": rmsnorm_schema(d, dt), "attn": attn_schema(cfg),
+                "ln2": rmsnorm_schema(d, dt), "ffn": _ffn_schema(cfg)}
+    if kind == "rec":
+        return {"ln1": rmsnorm_schema(d, dt), "rec": rglru_schema(cfg),
+                "ln2": rmsnorm_schema(d, dt), "ffn": mlp_schema(cfg)}
+    if kind == "rwkv":
+        return {"ln1": rmsnorm_schema(d, dt), "tmix": rwkv6_schema(cfg),
+                "ln2": rmsnorm_schema(d, dt),
+                "cmix": rwkv6_channel_mix_schema(cfg)}
+    if kind == "xattn":      # decoder block with cross attention
+        return {"ln1": rmsnorm_schema(d, dt), "attn": attn_schema(cfg),
+                "lnx": rmsnorm_schema(d, dt), "xattn": attn_schema(cfg),
+                "ln2": rmsnorm_schema(d, dt), "ffn": _ffn_schema(cfg)}
+    raise ValueError(kind)
+
+
+def _stages(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    """Split n_layers into (pattern, repeats) stages; remainder layers form
+    a trailing stage with a truncated pattern."""
+    pat = cfg.block_pattern
+    groups, rem = divmod(cfg.n_layers, len(pat))
+    out: list[tuple[tuple[str, ...], int]] = []
+    if groups:
+        out.append((pat, groups))
+    if rem:
+        out.append((pat[:rem], 1))
+    return out
+
+
+def lm_schema(cfg: ModelConfig) -> Schema:
+    if cfg.enc_layers:
+        return encdec_schema(cfg)
+    sch: Schema = {"embed": embed_schema(cfg)}
+    for si, (pat, reps) in enumerate(_stages(cfg)):
+        stage: Schema = {}
+        for pi, kind in enumerate(pat):
+            stage[f"b{pi}_{kind}"] = map_schema(
+                lambda pd: stacked(pd, reps), block_schema(cfg, kind))
+        sch[f"stage{si}"] = stage
+    sch["final_norm"] = rmsnorm_schema(cfg.d_model, cfg.pdtype)
+    sch["lm_head"] = unembed_schema(cfg)
+    if cfg.frontend:
+        sch["frontend"] = {"proj": ParamDef(
+            (cfg.d_model, cfg.d_model), (None, "d_model"), normal(0.02),
+            cfg.pdtype)}
+    return sch
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    c = cfg
+    if active_only and cfg.n_experts:
+        c = dataclasses.replace(cfg, n_experts=max(cfg.top_k, 1))
+    return n_params(lm_schema(c))
+
+
+# ---------------------------------------------------------------------------
+# single-block forward / step
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(params, y, cfg: ModelConfig):
+    if cfg.n_experts:
+        return moe_ffn(params, y, cfg)
+    return mlp(params, y), jnp.zeros((), jnp.float32)
+
+
+def block_fwd(params, x, positions, cfg: ModelConfig, kind: str, *,
+              enc: Optional[jax.Array] = None, cache_len: int = 0,
+              use_kernel: bool = False):
+    """Full-sequence block → (x, aux_loss, decode_state_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    state = None
+    if kind in ("attn", "xattn"):
+        h, (k, v) = attention(params["attn"], rmsnorm(params["ln1"], x),
+                              positions, cfg, use_kernel=use_kernel,
+                              return_kv=True)
+        if cache_len:
+            state = prefill_cache(k, v, cfg, cache_len)
+        x = x + h
+        if kind == "xattn":
+            assert enc is not None
+            h = attention(params["xattn"], rmsnorm(params["lnx"], x),
+                          positions, cfg, kv=(enc, None))
+            x = x + h
+        h, aux = _ffn_apply(params["ffn"], rmsnorm(params["ln2"], x), cfg)
+        return x + h, aux, state
+    if kind == "rec":
+        h, st = rglru_block(params["rec"], rmsnorm(params["ln1"], x), cfg,
+                            use_kernel=use_kernel)
+        state = st if cache_len else None
+        x = x + h
+        h = mlp(params["ffn"], rmsnorm(params["ln2"], x))
+        return x + h, aux, state
+    if kind == "rwkv":
+        h, st = rwkv6_time_mix(params["tmix"], rmsnorm(params["ln1"], x),
+                               cfg, use_kernel=use_kernel)
+        x = x + h
+        y = rmsnorm(params["ln2"], x)
+        yprev = jnp.pad(y, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        if cache_len:
+            state = RWKVState(S=st.S, shift=st.shift, cshift=y[:, -1])
+        h = rwkv6_channel_mix(params["cmix"], y, yprev)
+        return x + h, aux, state
+    raise ValueError(kind)
+
+
+def block_step(params, x, st, cfg: ModelConfig, kind: str, *,
+               enc: Optional[jax.Array] = None):
+    """One-token block → (x, new_state)."""
+    if kind in ("attn", "xattn"):
+        h, new = decode_attention(params["attn"], rmsnorm(params["ln1"], x),
+                                  st, cfg)
+        x = x + h
+        if kind == "xattn":
+            assert enc is not None
+            pos = (new.pos - 1)[:, None]
+            h = attention(params["xattn"], rmsnorm(params["lnx"], x), pos,
+                          cfg, kv=(enc, None))
+            x = x + h
+        h, _ = _ffn_apply(params["ffn"], rmsnorm(params["ln2"], x), cfg)
+        return x + h, new
+    if kind == "rec":
+        h, new = rglru_step(params["rec"], rmsnorm(params["ln1"], x), st, cfg)
+        x = x + h
+        h = mlp(params["ffn"], rmsnorm(params["ln2"], x))
+        return x + h, new
+    if kind == "rwkv":
+        h, new = rwkv6_time_mix_step(params["tmix"],
+                                     rmsnorm(params["ln1"], x), st, cfg)
+        x = x + h
+        y = rmsnorm(params["ln2"], x)
+        yprev = st.cshift[:, None].astype(y.dtype)
+        h = rwkv6_channel_mix(params["cmix"], y, yprev)
+        new = RWKVState(S=new.S, shift=new.shift, cshift=y[:, 0])
+        return x + h, new
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# decode-state construction
+# ---------------------------------------------------------------------------
+
+def _cache_len(cfg: ModelConfig, target: int) -> int:
+    if cfg.window is not None:
+        return min(cfg.window, target)
+    return target
+
+
+def init_state(cfg: ModelConfig, batch: int, cache_len: int,
+               start_pos: int = 0):
+    """Fresh (empty) decode state for every stage/pattern position.
+
+    ``start_pos`` pre-advances the positions (used by dry-run decode shapes:
+    a cache that is semantically full at position ``start_pos``)."""
+    def stk(make, reps):
+        one = make()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one)
+    C = _cache_len(cfg, cache_len)
+    states = []
+    for pat, reps in _stages(cfg):
+        st = []
+        for kind in pat:
+            if kind in ("attn", "xattn"):
+                def mk():
+                    c = init_cache(cfg, batch, C)
+                    return KVCache(c.k, c.v,
+                                   jnp.full((batch,), start_pos, jnp.int32))
+                st.append(stk(mk, reps))
+            elif kind == "rec":
+                st.append(stk(lambda: init_lru_state(cfg, batch), reps))
+            else:
+                st.append(stk(lambda: init_rwkv_state(cfg, batch), reps))
+        states.append(tuple(st))
+    return states
+
+
+# ---------------------------------------------------------------------------
+# stacked forward (scan over repeats)
+# ---------------------------------------------------------------------------
+
+def _scan_stage(params_stage, x, positions, cfg, pat, *, enc=None,
+                cache_len=0, use_kernel=False, remat=False):
+    """Full-seq forward through one stage.  Returns (x, aux, states)."""
+    def body(carry, layer_params):
+        x, aux = carry
+        if cfg.sp_axis is not None:
+            # sequence parallelism: the residual carry lives sharded over
+            # the model axis between blocks (activation memory / axis size;
+            # XLA turns the TP all-reduces into reduce-scatter/all-gather)
+            from jax.sharding import PartitionSpec as _P
+            b = tuple(cfg.batch_axes) or None
+            x = jax.lax.with_sharding_constraint(
+                x, _P(b, cfg.sp_axis, None))
+        sts = []
+        for pi, kind in enumerate(pat):
+            x, a, st = block_fwd(layer_params[f"b{pi}_{kind}"], x, positions,
+                                 cfg, kind, enc=enc, cache_len=cache_len,
+                                 use_kernel=use_kernel)
+            aux = aux + a
+            sts.append(st)
+        return (x, aux), (tuple(sts) if cache_len else None)
+
+    if remat:
+        # store only the per-layer carry; recompute block internals in the
+        # backward pass (activation-checkpointing at block granularity)
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    reps = jax.tree.leaves(params_stage)[0].shape[0]
+    (x, aux), states = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params_stage,
+        unroll=reps if cfg.scan_unroll else 1)
+    return x, aux, states
+
+
+def _scan_stage_step(params_stage, x, states, cfg, pat, *, enc=None):
+    """One-token step through one stage; states = tuple per pattern pos."""
+    def body(x, inp):
+        layer_params, layer_states = inp
+        new_states = []
+        for pi, kind in enumerate(pat):
+            x, ns = block_step(layer_params[f"b{pi}_{kind}"], x,
+                               layer_states[pi], cfg, kind, enc=enc)
+            new_states.append(ns)
+        return x, tuple(new_states)
+
+    x, new = jax.lax.scan(body, x, (params_stage, states))
+    return x, new
+
+
+def backbone(params, x, positions, cfg: ModelConfig, *, enc=None,
+             cache_len=0, use_kernel=False, remat=False):
+    aux = jnp.zeros((), jnp.float32)
+    all_states = []
+    for si, (pat, _) in enumerate(_stages(cfg)):
+        x, a, st = _scan_stage(params[f"stage{si}"], x, positions, cfg, pat,
+                               enc=enc, cache_len=cache_len,
+                               use_kernel=use_kernel, remat=remat)
+        aux = aux + a
+        all_states.append(st)
+    return rmsnorm(params["final_norm"], x), aux, all_states
+
+
+def backbone_step(params, x, states, cfg: ModelConfig, *, enc=None):
+    new_states = []
+    for si, (pat, _) in enumerate(_stages(cfg)):
+        x, ns = _scan_stage_step(params[f"stage{si}"], x, states[si], cfg,
+                                 pat, enc=enc)
+        new_states.append(ns)
+    return rmsnorm(params["final_norm"], x), new_states
+
+
+# ---------------------------------------------------------------------------
+# top-level entry points
+# ---------------------------------------------------------------------------
+
+def _inputs_to_h(params, batch: dict, cfg: ModelConfig):
+    """tokens (+ optional frontend embeddings) → (B,S,D) activations."""
+    h = embed(params["embed"], batch["tokens"]).astype(cfg.cdtype)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    if cfg.frontend and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(cfg.cdtype)
+        fe = jnp.einsum("bpd,de->bpe", fe, params["frontend"]["proj"])
+        h = jnp.concatenate([fe, h], axis=1)
+    return h
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, *,
+            use_kernel: bool = False, remat: bool = False) -> jax.Array:
+    """Training loss.  batch: tokens (B,S), labels (B,S), optional
+    frontend_embeds (B,P,D)."""
+    if cfg.enc_layers:
+        return _encdec_loss(params, batch, cfg, use_kernel=use_kernel,
+                            remat=remat)
+    h = _inputs_to_h(params, batch, cfg)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    h, aux, _ = backbone(params, h, positions, cfg, use_kernel=use_kernel,
+                         remat=remat)
+    P = h.shape[1] - batch["tokens"].shape[1]
+    if P > 0:
+        h = h[:, P:]
+    logits = unembed(params["lm_head"], h, cfg.logits_softcap)
+    return xent_loss(logits, batch["labels"]) + 0.01 * aux
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int, *,
+            use_kernel: bool = False):
+    """Returns (last-token logits (B,V), decode states with populated
+    caches/recurrent states)."""
+    if cfg.enc_layers:
+        raise ValueError("use encdec_prefill for encoder-decoder models")
+    h = _inputs_to_h(params, batch, cfg)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    C = _cache_len(cfg, cache_len)
+    h, _, states = backbone(params, h, positions, cfg, cache_len=C,
+                            use_kernel=use_kernel)
+    logits = unembed(params["lm_head"], h[:, -1], cfg.logits_softcap)
+    return logits, states
+
+
+def decode_step(params, token: jax.Array, states, cfg: ModelConfig, *,
+                enc: Optional[jax.Array] = None):
+    """token: (B,1) int32 → (logits (B,V), new states)."""
+    h = embed(params["embed"], token).astype(cfg.cdtype)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    h, new_states = backbone_step(params, h, states, cfg, enc=enc)
+    logits = unembed(params["lm_head"], h[:, 0], cfg.logits_softcap)
+    return logits, new_states
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (seamless-m4t backbone)
+# ---------------------------------------------------------------------------
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, n_layers=cfg.enc_layers, enc_layers=0,
+                               frontend=None, window=None,
+                               block_pattern=("attn",))
+
+
+def _dec_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, enc_layers=0, frontend=None,
+                               block_pattern=("xattn",))
+
+
+def encdec_schema(cfg: ModelConfig) -> Schema:
+    ec = _enc_cfg(cfg)
+    sch: Schema = {"encoder": {}}
+    for si, (pat, reps) in enumerate(_stages(ec)):
+        stage: Schema = {}
+        for pi, kind in enumerate(pat):
+            stage[f"b{pi}_{kind}"] = map_schema(
+                lambda pd: stacked(pd, reps), block_schema(ec, kind))
+        sch["encoder"][f"stage{si}"] = stage
+    sch["encoder"]["final_norm"] = rmsnorm_schema(cfg.d_model, cfg.pdtype)
+    sch.update(lm_schema(_dec_cfg(cfg)))
+    return sch
+
+
+def encode(params, batch, cfg: ModelConfig, *, use_kernel=False):
+    """Bidirectional encoder over stub frame embeddings (B,T,D)."""
+    ec = _enc_cfg(cfg)
+    h = batch["frontend_embeds"].astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+
+    for si, (pat, _) in enumerate(_stages(ec)):
+        def body(x, layer_params):
+            p = layer_params["b0_attn"]
+            y = attention(p["attn"], rmsnorm(p["ln1"], x), positions, ec,
+                          causal=False)
+            x = x + y
+            y = mlp(p["ffn"], rmsnorm(p["ln2"], x))
+            return x + y, None
+        reps = jax.tree.leaves(params["encoder"][f"stage{si}"])[0].shape[0]
+        h, _ = jax.lax.scan(body, h, params["encoder"][f"stage{si}"],
+                            unroll=reps if ec.scan_unroll else 1)
+    return rmsnorm(params["encoder"]["final_norm"], h)
+
+
+def _encdec_loss(params, batch, cfg: ModelConfig, *, use_kernel=False,
+                 remat=False):
+    enc = encode(params, batch, cfg, use_kernel=use_kernel)
+    dc = _dec_cfg(cfg)
+    h = embed(params["embed"], batch["tokens"]).astype(cfg.cdtype)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    h, aux, _ = backbone(params, h, positions, dc, enc=enc,
+                         use_kernel=use_kernel, remat=remat)
+    logits = unembed(params["lm_head"], h, cfg.logits_softcap)
+    return xent_loss(logits, batch["labels"]) + 0.01 * aux
+
+
+def encdec_prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Encode source; return (enc, fresh decoder states)."""
+    enc = encode(params, batch, cfg)
+    states = init_state(_dec_cfg(cfg), enc.shape[0], cache_len)
+    return enc, states
+
+
+def encdec_decode_step(params, token, states, enc, cfg: ModelConfig):
+    return decode_step(params, token, states, _dec_cfg(cfg), enc=enc)

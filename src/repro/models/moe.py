@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch.
+
+Dispatch is gather/scatter (argsort of expert assignments → fixed-capacity
+expert buffers), NOT the Mesh-TensorFlow one-hot einsum: the one-hot
+dispatch tensor is O(T·E·C) and reaches tens of TB at the assigned shapes
+(grok train_4k: T=65k per chip), while sort-based dispatch is O(T·K).
+The expert buffers keep a static (E, C, D) shape so the expert matmuls are
+ordinary einsums shardable over the experts axis (EP).  Overflowing tokens
+beyond capacity are dropped (standard Switch behaviour); their gates are
+zeroed so the combine stays correct.
+
+Covers grok-1 (8e top-2) and DeepSeekMoE (2 shared + 64 routed top-6,
+fine-grained d_ff).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import mlp, mlp_schema
+from .schema import ParamDef, Schema, normal
+
+
+def moe_schema(cfg: ModelConfig) -> Schema:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.pdtype
+    s = normal(0.02)
+    sch: Schema = {
+        "router": ParamDef((d, e), ("d_model", "experts"), s, dt),
+        "wi": ParamDef((e, d, f), ("experts", "d_model", "d_ff"), s, dt),
+        "wg": ParamDef((e, d, f), ("experts", "d_model", "d_ff"), s, dt),
+        "wo": ParamDef((e, f, d), ("experts", "d_ff", "d_model"), s, dt),
+    }
+    if cfg.n_shared_experts:
+        sch["shared"] = mlp_schema(cfg, d_ff=cfg.d_ff * cfg.n_shared_experts,
+                                   ff_dim="d_ff_shared")
+    return sch
+
+
+def _capacity(tokens: int, cfg: ModelConfig, factor: float = 1.25) -> int:
+    """Per-row expert capacity.  Floor is top_k (a row can always place all
+    its assignments somewhere), NOT a fixed 8 — at decode (S=1) a floor of 8
+    inflates expert compute by E*8/K (measured 32-85x on grok/deepseek)."""
+    cap = int(tokens * cfg.top_k / cfg.n_experts * factor)
+    aligned = (cap + 7) // 8 * 8
+    return max(cfg.top_k, aligned)
+
+
+def moe_ffn(params, x, cfg: ModelConfig, *,
+            capacity_factor: float = 1.5) -> tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) → (B,S,D), aux load-balance loss (scalar fp32).
+
+    Dispatch is ROW-LOCAL: every batch row dispatches into its own
+    per-expert capacity slice, so the buffers keep a leading batch dim
+    (B, E, C, D) and GSPMD shards the expert compute over BOTH the data
+    axis (rows) and the experts axis (EP).  A flat (E, T·K/E, D) buffer has
+    no batch dim, which replicates the expert matmuls across the data axis
+    — measured 13-16x redundant compute per chip on the production mesh
+    (EXPERIMENTS.md §Perf, iteration 1)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(S, cfg, capacity_factor)     # per-row capacity
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"]) \
+        .astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style), global over the batch
+    me = probs.mean((0, 1))                                # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0) / (B * S * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- row-local, GATHER-only dispatch ---------------------------------
+    # No scatters: GSPMD cannot partition a batched scatter and falls back
+    # to full replication (measured: 72 GiB fp32 all-gathers of the global
+    # dispatch buffer per layer on grok — EXPERIMENTS §Perf cell 2 iter 5).
+    # Sort once, then express both dispatch and combine as gathers.
+    SK = S * K
+    e_flat = gate_idx.reshape(B, SK)
+    order = jnp.argsort(e_flat, axis=1)                    # stable per row
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    tok_sorted = order // K                                # (B, SK)
+
+    # expert segment boundaries in the sorted stream
+    eids = jnp.arange(E)
+    starts = jax.vmap(lambda es: jnp.searchsorted(es, eids, side="left"))(
+        e_sorted)                                          # (B, E)
+    ends = jax.vmap(lambda es: jnp.searchsorted(es, eids, side="right"))(
+        e_sorted)                                          # (B, E)
+
+    # dispatch: buf[b,e,c] = x[b, tok_sorted[b, starts[b,e]+c]] (if valid)
+    idx = starts[:, :, None] + jnp.arange(C)[None, None]   # (B, E, C)
+    valid = idx < ends[:, :, None]
+    idx = jnp.minimum(idx, SK - 1).reshape(B, E * C)
+    src_tok = jnp.take_along_axis(tok_sorted, idx, axis=1)  # (B, E*C)
+    buf = jnp.take_along_axis(x, src_tok[..., None], axis=1)  # (B,E*C,D)
+    buf = buf.reshape(B, E, C, D) * valid[..., None].astype(x.dtype)
+
+    h = jnp.einsum("becd,edf->becf", buf, params["wi"])
+    g = jnp.einsum("becd,edf->becf", buf, params["wg"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("becf,efd->becd", h, params["wo"])    # (B,E,C,D)
+    out_flat = out.reshape(B, E * C, D)
+
+    # ---- combine (gathers only) -------------------------------------------
+    # invert the sort with a second argsort; slot of assignment j is
+    # e*C + (rank within segment), dropped if rank >= C
+    inv = jnp.argsort(order, axis=1)                       # (B, SK)
+    pos_sorted = jnp.arange(SK)[None] - jnp.take_along_axis(
+        starts, e_sorted, axis=1)                          # rank in segment
+    pos = jnp.take_along_axis(pos_sorted, inv, axis=1)     # (B, SK) unsorted
+    kept = pos < C
+    rows = jnp.where(kept, e_flat * C + pos, 0)
+    gathered = jnp.take_along_axis(out_flat, rows[..., None], axis=1)
+    w = (gate_vals.reshape(B, SK) * kept).astype(x.dtype)
+    y = (gathered * w[..., None]).reshape(B, S, K, D).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], x)
+    return y, aux

@@ -1,0 +1,261 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma) and RWKV6 (Finch).
+
+Both expose a full-sequence form (train/prefill; associative-scan or
+time-scan) and a single-step form carrying explicit state (decode).  The
+Pallas kernels in ``repro.kernels`` implement the chunked TPU versions of
+the same math; these jnp forms are the oracles and the dry-run path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .schema import ParamDef, Schema, normal, uniform_range, zeros
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_LRU_C = 8.0
+
+
+def rglru_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    n = cfg.lru_width or d
+    dt = cfg.pdtype
+    s = normal(0.02)
+    return {
+        "wx": ParamDef((d, n), ("d_model", "lru"), s, dt),       # rec branch
+        "wg": ParamDef((d, n), ("d_model", "lru"), s, dt),       # gate branch
+        "conv": ParamDef((cfg.conv_width, n), (None, "lru"), s, dt),
+        "gates": ParamDef((n, 2 * n), ("lru", "lru_gates"), s, dt),
+        "lam": ParamDef((n,), ("lru",), uniform_range(2.0, 4.0), jnp.float32),
+        "wo": ParamDef((n, d), ("lru", "d_model"), s, dt),
+    }
+
+
+class LRUState(NamedTuple):
+    h: jax.Array          # (B, N) fp32 recurrence state
+    conv: jax.Array       # (B, W-1, N) conv tail
+
+
+def init_lru_state(cfg: ModelConfig, batch: int) -> LRUState:
+    n = cfg.lru_width or cfg.d_model
+    return LRUState(h=jnp.zeros((batch, n), jnp.float32),
+                    conv=jnp.zeros((batch, cfg.conv_width - 1, n), cfg.cdtype))
+
+
+def _lru_coeffs(params, xb):
+    """Gate computations shared by scan and step forms.  xb: (..., N)."""
+    gates = jnp.einsum("...n,nm->...m", xb, params["gates"])
+    r, i = jnp.split(jax.nn.sigmoid(gates.astype(jnp.float32)), 2, axis=-1)
+    log_a = -_LRU_C * r * jax.nn.softplus(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) normaliser keeps the state scale input-independent
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xb.astype(jnp.float32))
+    return a, b
+
+
+def _causal_conv(params, xb, tail=None):
+    """Depthwise causal temporal conv.  xb: (B,S,N); tail: (B,W-1,N)."""
+    w = params["conv"].astype(xb.dtype)                 # (W, N)
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xb.shape[0], W - 1, xb.shape[2]), xb.dtype)
+    xp = jnp.concatenate([tail, xb], axis=1)            # (B, S+W-1, N)
+    out = sum(xp[:, i:i + xb.shape[1]] * w[i] for i in range(W))
+    return out, xp[:, -(W - 1):]
+
+
+def rglru_block(params, x, cfg: ModelConfig, *, use_kernel: bool = False):
+    """Full-sequence Griffin recurrent block.  x: (B,S,D) → (B,S,D), and the
+    final :class:`LRUState` so prefill can hand off to decode."""
+    xb = jnp.einsum("bsd,dn->bsn", x, params["wx"])
+    g = jnp.einsum("bsd,dn->bsn", x, params["wg"])
+    xb, tail = _causal_conv(params, xb)
+    a, b = _lru_coeffs(params, xb)
+    if use_kernel:
+        from repro.kernels import rglru as _k
+        h = _k.lru_scan(a, b)
+    else:
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsn,nd->bsd", y, params["wo"])
+    return out, LRUState(h=h[:, -1], conv=tail)
+
+
+def rglru_step(params, x, state: LRUState, cfg: ModelConfig):
+    """One-token decode.  x: (B,1,D) → (B,1,D), new state."""
+    xb = jnp.einsum("bsd,dn->bsn", x, params["wx"])
+    g = jnp.einsum("bsd,dn->bsn", x, params["wg"])
+    xb, tail = _causal_conv(params, xb, state.conv)
+    a, b = _lru_coeffs(params, xb[:, 0])
+    h = a * state.h + b
+    y = h[:, None].astype(x.dtype) * \
+        jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsn,nd->bsd", y, params["wo"])
+    return out, LRUState(h=h, conv=tail)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix + channel mix
+# ---------------------------------------------------------------------------
+
+def _rwkv_heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.head_dim or 64
+    return cfg.d_model // hd, hd
+
+
+def rwkv6_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    H, hd = _rwkv_heads(cfg)
+    dt = cfg.pdtype
+    s = normal(0.02)
+    lora = 64
+    return {
+        "mix": ParamDef((5, d), (None, "d_model"), normal(0.5), dt),
+        "wr": ParamDef((d, d), ("d_model", "heads_flat"), s, dt),
+        "wk": ParamDef((d, d), ("d_model", "heads_flat"), s, dt),
+        "wv": ParamDef((d, d), ("d_model", "heads_flat"), s, dt),
+        "wg": ParamDef((d, d), ("d_model", "heads_flat"), s, dt),
+        "w0": ParamDef((d,), ("d_model",), uniform_range(-7.0, -5.0), jnp.float32),
+        "w_lora_a": ParamDef((d, lora), ("d_model", None), s, dt),
+        "w_lora_b": ParamDef((lora, d), (None, "d_model"), s, dt),
+        "u": ParamDef((H, hd), ("heads", "head_dim"), normal(0.3), jnp.float32),
+        "wo": ParamDef((d, d), ("heads_flat", "d_model"), s, dt),
+        "ln_x": ParamDef((d,), ("d_model",), zeros(), jnp.float32),
+    }
+
+
+class RWKVState(NamedTuple):
+    S: jax.Array          # (B, H, hd, hd) fp32 wkv state
+    shift: jax.Array      # (B, D) previous post-ln1 input (time mix)
+    cshift: jax.Array     # (B, D) previous post-ln2 input (channel mix)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    H, hd = _rwkv_heads(cfg)
+    z = jnp.zeros((batch, cfg.d_model), cfg.cdtype)
+    return RWKVState(S=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                     shift=z, cshift=z)
+
+
+def _rwkv_proj(params, x, xprev):
+    """Token-shift mixes + projections.  x: (B,S,D), xprev shifted x."""
+    mix = params["mix"].astype(x.dtype)                  # (5, D)
+    def mixed(i):
+        return x + (xprev - x) * mix[i]
+    r = jnp.einsum("bsd,de->bse", mixed(0), params["wr"])
+    k = jnp.einsum("bsd,de->bse", mixed(1), params["wk"])
+    v = jnp.einsum("bsd,de->bse", mixed(2), params["wv"])
+    g = jnp.einsum("bsd,de->bse", mixed(3), params["wg"])
+    wx = mixed(4)
+    lora = jnp.einsum("bsd,dl->bsl", wx, params["w_lora_a"])
+    lora = jnp.einsum("bsl,ld->bsd", jnp.tanh(lora.astype(jnp.float32))
+                      .astype(wx.dtype), params["w_lora_b"])
+    logw = params["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                          # (B,S,D) decay in (0,1)
+    return r, k, v, g, w
+
+
+def _group_norm(params, y, H):
+    """Per-head groupnorm on (B,S,H,hd) flattened output."""
+    B, S, D = y.shape
+    yh = y.reshape(B, S, H, D // H).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 1e-5)
+    yh = yh.reshape(B, S, D)
+    return (yh * (1.0 + params["ln_x"])).astype(y.dtype)
+
+
+def rwkv6_time_mix(params, x, cfg: ModelConfig, *, use_kernel: bool = False):
+    """Full-sequence WKV.  x: (B,S,D) → (B,S,D)."""
+    H, hd = _rwkv_heads(cfg)
+    B, S, D = x.shape
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv_proj(params, x, xprev)
+    rh = r.reshape(B, S, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, S, H, hd)
+    u = params["u"]
+
+    if use_kernel:
+        from repro.kernels import rwkv6 as _k
+        yh, S_final = _k.wkv(rh, kh, vh, wh, u)
+    else:
+        def step(S_, inp):
+            r_, k_, v_, w_ = inp            # (B,H,hd)
+            kv = k_[..., :, None] * v_[..., None, :]        # (B,H,hd,hd)
+            out = jnp.einsum("bhk,bhkv->bhv", r_,
+                             S_ + u[None, :, :, None] * kv)
+            S_ = w_[..., :, None] * S_ + kv
+            return S_, out
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        S_final, y = jax.lax.scan(step, S0,
+                                  (rh.swapaxes(0, 1), kh.swapaxes(0, 1),
+                                   vh.swapaxes(0, 1), wh.swapaxes(0, 1)))
+        yh = y.swapaxes(0, 1)               # (B,S,H,hd)
+
+    y = yh.reshape(B, S, D).astype(x.dtype)
+    y = _group_norm(params, y, H)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"])
+    return out, RWKVState(S=S_final, shift=x[:, -1].astype(x.dtype),
+                          cshift=jnp.zeros_like(x[:, -1]))
+
+
+def rwkv6_time_mix_step(params, x, state: RWKVState, cfg: ModelConfig):
+    """One-token decode.  x: (B,1,D)."""
+    H, hd = _rwkv_heads(cfg)
+    B, _, D = x.shape
+    xprev = state.shift[:, None].astype(x.dtype)
+    r, k, v, g, w = _rwkv_proj(params, x, xprev)
+    r_ = r.reshape(B, H, hd).astype(jnp.float32)
+    k_ = k.reshape(B, H, hd).astype(jnp.float32)
+    v_ = v.reshape(B, H, hd).astype(jnp.float32)
+    w_ = w.reshape(B, H, hd)
+    u = params["u"]
+    kv = k_[..., :, None] * v_[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r_, state.S + u[None, :, :, None] * kv)
+    S = w_[..., :, None] * state.S + kv
+    y = out.reshape(B, 1, D).astype(x.dtype)
+    y = _group_norm(params, y, H)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, params["wo"])
+    return y, RWKVState(S=S, shift=x[:, 0].astype(state.shift.dtype),
+                        cshift=state.cshift)
+
+
+def rwkv6_channel_mix_schema(cfg: ModelConfig) -> Schema:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype
+    s = normal(0.02)
+    return {
+        "mix": ParamDef((2, d), (None, "d_model"), normal(0.5), dt),
+        "wk": ParamDef((d, f), ("d_model", "d_ff"), s, dt),
+        "wv": ParamDef((f, d), ("d_ff", "d_model"), s, dt),
+        "wr": ParamDef((d, d), ("d_model", None), s, dt),
+    }
+
+
+def rwkv6_channel_mix(params, x, xprev):
+    mix = params["mix"].astype(x.dtype)
+    xk = x + (xprev - x) * mix[0]
+    xr = x + (xprev - x) * mix[1]
+    k = jnp.einsum("bsd,df->bsf", xk, params["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, params["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wr"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    return r * kv

@@ -1,0 +1,4 @@
+from . import adamw, compression
+from .adamw import AdamWConfig, AdamWState
+
+__all__ = ["adamw", "compression", "AdamWConfig", "AdamWState"]

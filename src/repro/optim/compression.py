@@ -1,0 +1,66 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+Crossing the ``pod`` axis is DCN — the "NUMA factor" of the fleet.  A
+standard distributed-optimization trick is to compress the gradient before
+the expensive hop and keep a local error-feedback accumulator so the
+quantisation error is re-injected the next step (1-bit Adam / EF-SGD
+lineage).
+
+Usage (see ``launch.train``): gradients are all-reduced over ``data``
+in full precision (cheap ICI), then quantised per-tensor to int8 with a
+fp32 scale, all-reduced over ``pod`` (16x fewer DCN bytes than fp32,
+4x fewer than bf16), dequantised, and the residual fed back.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any            # same tree as grads, bf16
+
+
+def init(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.bfloat16), params))
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, ef: EFState):
+    """grads+residual → (quantised tree of (q, scale), new residual).
+
+    Under jit the duplicated quantize calls are CSE'd; structuring as two
+    maps keeps the pytree bookkeeping trivial."""
+    def q_fn(g, r):
+        x = g.astype(jnp.float32) + r.astype(jnp.float32)
+        return quantize(x)
+
+    def r_fn(g, r):
+        x = g.astype(jnp.float32) + r.astype(jnp.float32)
+        q, s = quantize(x)
+        return (x - dequantize(q, s)).astype(jnp.bfloat16)
+
+    qs = jax.tree.map(q_fn, grads, ef.residual)
+    res = jax.tree.map(r_fn, grads, ef.residual)
+    return qs, EFState(residual=res)
+
+
+def decompress_tree(qs):
+    return jax.tree.map(lambda t: dequantize(*t),
+                        qs, is_leaf=lambda t: isinstance(t, tuple))

@@ -1,0 +1,3 @@
+from .engine import Request, ServingEngine, slots_topology
+
+__all__ = ["Request", "ServingEngine", "slots_topology"]

@@ -1,0 +1,194 @@
+"""Serving engine: continuous batching driven by the bubble scheduler.
+
+Requests are *threads* (work = tokens still to decode, data = prefix-cache
+id); requests sharing a prompt prefix or an SLA class are grouped into
+*bubbles*.  The engine owns a fixed-size decode batch (the "processors" of
+the scheduling problem are batch slots); whenever slots free up, it calls
+the bubble scheduler exactly like a cpu calling Marcel's schedule function:
+
+* a gang (bubble) bursts only when enough slots are free to co-schedule it
+  (priorities implement the paper's gang scheduling — Figure 1);
+* prefix-affine requests land in adjacent slots so their shared KV prefix
+  stays resident (the data-sharing relation);
+* a request group that stalls (client backpressure) is regenerated: pulled
+  out of the slots and re-queued as a closed bubble, keeping its affinity.
+
+The decode loop itself is one jitted ``decode_step`` over the whole batch;
+slot occupancy is a boolean mask (empty slots decode padding at negligible
+marginal cost on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bubble import Bubble, Thread, bubble, thread
+from repro.core.scheduler import BubbleScheduler
+from repro.core.topology import Level, Topology
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int
+    prio: int = 0
+    gang: Optional[str] = None         # co-schedule group (shared prefix)
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def slots_topology(n_slots: int, group: int = 4) -> Topology:
+    """Model the decode batch as a tiny hierarchy: slot groups share a KV
+    page (affinity level), slots are the leaves."""
+    groups = max(n_slots // group, 1)
+    return Topology([
+        Level("batch", 1),
+        Level("page", groups, factor=2.0),
+        Level("slot", n_slots // groups),
+    ])
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
+                 cache_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.sched = BubbleScheduler(slots_topology(n_slots))
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_thread: dict[int, Thread] = {}
+        self._reqs: dict[int, Request] = {}
+        self._next_rid = 0
+        self.states = api.lm.init_state(cfg, n_slots, cache_len)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self._decode = jax.jit(api.make_decode_fn(cfg))
+        self._prefill_cache = {}
+        self.steps = 0
+        self.completed: list[Request] = []
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
+               prio: int = 0, gang: Optional[str] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
+                      prio=prio, gang=gang)
+        self._reqs[rid] = req
+        t = thread(float(max_new_tokens), name=f"req{rid}", prio=prio,
+                   data=gang or f"req{rid}")
+        t.request = req                                   # type: ignore
+        if gang is not None:
+            g = self._gang_bubble(gang, prio)
+            g.insert(t)
+            if not getattr(g, "_woken", False):
+                self.sched.wake_up_bubble(g)
+                g._woken = True                           # type: ignore
+        else:
+            self.sched.submit_thread(t)
+        return rid
+
+    def _gang_bubble(self, gang: str, prio: int) -> Bubble:
+        key = f"gang:{gang}"
+        b = getattr(self, "_gangs", {}).get(key)
+        if b is None:
+            if not hasattr(self, "_gangs"):
+                self._gangs = {}
+            # gang bubbles less prioritised than their threads => they burst
+            # only when running threads can't fill the slots (Figure 1)
+            b = bubble(name=key, prio=prio - 1, burst_level="page")
+            self._gangs[key] = b
+        return b
+
+    # -- slot management ------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None:
+                continue
+            t = self.sched.next_thread(slot)
+            if t is None:
+                return
+            req: Request = t.request                      # type: ignore
+            self.slot_req[slot] = req
+            self.slot_thread[slot] = t
+            self._prefill_into_slot(slot, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        """Run prefill for one request and splice its state into the batch
+        state at ``slot``."""
+        prompt = jnp.asarray(req.prompt[None, :])         # (1, S)
+        logits, st = api.make_prefill_fn(self.cfg, self.cache_len)(
+            self.params, {"tokens": prompt})
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
+        req.out_tokens.append(int(tok[0]))
+        self.tokens = self.tokens.at[slot, 0].set(tok[0])
+        self.states = _splice_states(self.states, st, slot)
+
+    def _evict(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        if req is not None:
+            req.done = True
+            self.completed.append(req)
+        self.slot_req[slot] = None
+        self.slot_thread.pop(slot, None)
+
+    # -- the decode loop -------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit, decode one token for every occupied
+        slot, retire finished requests.  Returns #active slots."""
+        self._admit()
+        active = [s for s in range(self.n_slots) if self.slot_req[s]]
+        if not active:
+            return 0
+        logits, self.states = self._decode(self.params, self.tokens,
+                                           self.states)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,)
+        self.tokens = next_tok[:, None]
+        self.steps += 1
+        for s in active:
+            req = self.slot_req[s]
+            req.out_tokens.append(int(next_tok[s]))
+            t = self.slot_thread[s]
+            t.remaining -= 1.0
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self._evict(s)
+        return len(active)
+
+    def run(self, max_steps: int = 1000) -> list[Request]:
+        for _ in range(max_steps):
+            busy = self.step()
+            if busy == 0 and self.sched.queues.total_tasks() == 0:
+                break
+        return self.completed
+
+    # -- regeneration (backpressure / straggling client) ------------------------
+    def regenerate_gang(self, gang: str) -> int:
+        """Pull a gang's requests out of the slots; re-queue the closed
+        bubble (affinity preserved)."""
+        b = getattr(self, "_gangs", {}).get(f"gang:{gang}")
+        if b is None:
+            return 0
+        n = 0
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is not None and req.gang == gang and not req.done:
+                self.slot_req[s] = None
+                t = self.slot_thread.pop(s)
+                n += 1
+        self.sched.regenerate(b, running={})
+        return n
+
+
+def _splice_states(batch_states, one_states, slot: int):
+    """Write a single-sequence decode state into batch position ``slot``."""
+    def splice(b, o):
+        return b.at[:, slot:slot + 1].set(o) if b.ndim >= 2 else b
+    return jax.tree.map(splice, batch_states, one_states)

@@ -1,0 +1,5 @@
+import jax
+
+# Smoke tests and benches see the real (single) CPU device; only
+# launch/dryrun.py sets XLA_FLAGS for 512 placeholder devices.
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,94 @@
+"""Static bubble-scheduling planner tests."""
+
+import pytest
+
+from repro.configs import all_configs, get_config
+from repro.core.bubble import bubble
+from repro.core.planner import Dim, MeshAxis, plan_bound, plan_bubbles, plan_simple
+from repro.models import bubble_tree
+
+AXES1 = [MeshAxis("data", 16), MeshAxis("model", 16)]
+AXES2 = [MeshAxis("pod", 2), MeshAxis("data", 16), MeshAxis("model", 16)]
+
+
+class TestPlanner:
+    def test_batch_takes_outer_axes(self):
+        tree = bubble(bubble(Dim(name="batch", width=256), name="d"),
+                      bubble(Dim(name="d_ff", width=1024, min_level="model",
+                                 weight=2.0), name="f"))
+        p = plan_bubbles(tree, AXES2)
+        assert p.assignment["batch"] == ("pod", "data")
+        assert p.assignment["d_ff"] == ("model",)
+
+    def test_min_level_sinks_below_expensive_axes(self):
+        tree = bubble(bubble(Dim(name="w", width=512, min_level="model"),
+                             name="g"))
+        p = plan_bubbles(tree, AXES2)
+        assert p.assignment["w"] == ("model",)
+
+    def test_same_bubble_dims_compete(self):
+        tree = bubble(bubble(
+            Dim(name="experts", width=64, weight=4.0, min_level="model"),
+            Dim(name="d_ff", width=1408, weight=2.0, min_level="model"),
+            name="moe"))
+        p = plan_bubbles(tree, AXES1)
+        # experts (heavier) wins the model axis; d_ff must not share it
+        assert p.assignment["experts"] == ("model",)
+        assert p.assignment["d_ff"] == ()
+
+    def test_sibling_bubbles_share_axis(self):
+        tree = bubble(
+            bubble(Dim(name="heads", width=32, min_level="model"), name="a"),
+            bubble(Dim(name="d_ff", width=1024, min_level="model"), name="f"))
+        p = plan_bubbles(tree, AXES1)
+        assert p.assignment["heads"] == ("model",)
+        assert p.assignment["d_ff"] == ("model",)
+
+    def test_width_must_fill_axis(self):
+        tree = bubble(bubble(Dim(name="experts", width=8, weight=4.0,
+                                 min_level="model"),
+                             Dim(name="d_ff", width=32768, weight=2.0,
+                                 min_level="model"), name="moe"))
+        p = plan_bubbles(tree, AXES1)
+        # 8 experts cannot fill a 16-wide axis -> d_ff gets it (grok case)
+        assert p.assignment["experts"] == ()
+        assert p.assignment["d_ff"] == ("model",)
+
+
+class TestArchTrees:
+    @pytest.mark.parametrize("arch", list(all_configs()))
+    def test_every_arch_plans(self, arch):
+        cfg = get_config(arch)
+        tree = bubble_tree(cfg, "train_4k")
+        p = plan_bubbles(tree, AXES2)
+        assert p.assignment["batch"] == ("pod", "data")
+        # something must occupy the model axis
+        on_model = [d for d, ax in p.assignment.items() if "model" in ax]
+        assert on_model, p.pretty()
+
+    def test_deepseek_experts_win_model_axis(self):
+        cfg = get_config("deepseek-moe-16b")
+        p = plan_bubbles(bubble_tree(cfg, "train_4k"), AXES1)
+        assert p.assignment["experts"] == ("model",)
+
+    def test_grok_ffn_wins_model_axis(self):
+        cfg = get_config("grok-1-314b")
+        p = plan_bubbles(bubble_tree(cfg, "train_4k"), AXES1)
+        assert p.assignment["d_ff"] == ("model",)
+        assert p.assignment["experts"] == ()
+
+    def test_rwkv_heads_flat_sharded(self):
+        cfg = get_config("rwkv6-3b")
+        p = plan_bubbles(bubble_tree(cfg, "train_4k"), AXES1)
+        assert p.assignment["heads_flat"] == ("model",)
+
+
+class TestBaselinePlans:
+    def test_simple_plan_pure_dp(self):
+        p = plan_simple("batch", AXES2)
+        assert p.assignment["batch"] == ("pod", "data", "model")
+
+    def test_bound_plan_passthrough(self):
+        p = plan_bound({"batch": ("data",), "heads": ("model",)})
+        assert p.axes_of("heads") == ("model",)
+        assert p.axes_of("nonexistent") is None

@@ -1,0 +1,47 @@
+"""Scheduler trace tool tests (paper §6 'analysis tools based on tracing')."""
+
+from repro.core import (BubblePolicy, Simulator, balanced_tree, novascale_16,
+                        stripes_workload)
+from repro.core.scheduler import BubbleScheduler
+from repro.core.trace import Tracer
+
+
+def test_trace_records_schedules_and_bursts():
+    topo = novascale_16()
+    sched = BubbleScheduler(topo)
+    tracer = Tracer(sched)
+    root = balanced_tree([4, 4], work=5.0)
+    sched.wake_up_bubble(root)
+    for cpu in range(16):
+        t = sched.next_thread(cpu)
+        if t is not None:
+            t.remaining = 0.0
+    s = tracer.summary()
+    assert s.get("schedule", 0) == 16
+    assert s.get("burst", 0) >= 4
+    assert tracer.timeline()
+
+
+def test_locality_report_on_bubble_schedule():
+    """The bubbles policy must keep ≥90% of schedules data-local after the
+    first (first-touch) cycle — the check the paper's tool is for."""
+    topo = novascale_16()
+    pol = BubblePolicy(topo)
+    tracer = Tracer(pol.sched)
+    root = stripes_workload(16, work=50.0, group=4)
+    sim = Simulator(topo, pol, mem_fraction=0.25, contention=0.5)
+    sim.run(root, cycles=4)
+    rep = tracer.locality_report(topo, sim.homes, list(root.threads()))
+    assert rep["total"] > 0
+    assert rep["fraction"] >= 0.9, rep
+
+
+def test_level_histogram_prefers_local_levels():
+    topo = novascale_16()
+    pol = BubblePolicy(topo)
+    tracer = Tracer(pol.sched)
+    root = stripes_workload(16, work=50.0, group=4)
+    Simulator(topo, pol, mem_fraction=0.25).run(root, cycles=2)
+    hist = tracer.level_histogram()
+    # threads are released on node lists by bursting bubbles
+    assert hist.get("node", 0) + hist.get("cpu", 0) > hist.get("machine", 0)
