@@ -1,0 +1,25 @@
+# Repro of "A Flexible Thread Scheduler for Hierarchical Multiprocessor
+# Machines" — developer/CI entry points.
+#
+#   make test         tier-1 gate: the full pytest suite (hypothesis optional;
+#                     tests/_hypothesis_shim.py covers clean environments)
+#   make bench-smoke  seconds-scale benchmark sanity run (Table 2 conduction
+#                     + imbalanced stealing rows + small Fig 5 sizes)
+#   make bench        the full paper tables (slow: includes wall-clock
+#                     Table 1 and the roofline dry-run)
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench
+
+# PYTEST_ARGS lets CI trim the run (e.g. deselect the 7-minute ep_a2a
+# compile test on slow shared runners) without changing the local gate
+test:
+	$(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
+
+bench-smoke:
+	$(PYTHON) benchmarks/run.py --smoke
+
+bench:
+	$(PYTHON) benchmarks/run.py

@@ -3,35 +3,60 @@ bubbles, vs thread count, on both evaluation machines.
 
 Paper: Bi-Xeon HT stabilises at 30-40% gain from 16 threads; NUMA 4x4
 Itanium II reaches 40% at 32 threads and up to 80% at 512.
+
+The ``*_steal`` rows rerun the bubble side with :class:`StealPolicy`
+(hierarchical whole-bubble stealing + next-touch migration) — the deep
+fibonacci tree leaves closed sub-bubbles on queues, exactly the loot the
+§3.3.3 steal pass is for.
+
 Output CSV: name,us_per_call(gain %),derived
 """
 
 from __future__ import annotations
 
-from repro.core import (BubblePolicy, SimplePolicy, Simulator, bi_xeon_ht,
-                        fibonacci_workload, novascale_16)
+from repro.core import (BubblePolicy, SimplePolicy, StealPolicy, Simulator,
+                        bi_xeon_ht, fibonacci_workload, novascale_16,
+                        reset_ids)
 
 
-def gain(n_threads: int, topo_fn, gs: int, mem: float = 0.6) -> float:
-    ts = {}
-    for with_b in (False, True):
-        topo = topo_fn()
-        pol = (BubblePolicy(topo) if with_b
-               else SimplePolicy(topo, disorder=4.0))
-        root = fibonacci_workload(n_threads, with_bubbles=with_b,
-                                  group_size=gs)
-        r = Simulator(topo, pol, mem_fraction=mem, contention=0.5).run(root)
-        ts[with_b] = r.time
-    return (ts[False] - ts[True]) / ts[False] * 100
+def _time_one(n_threads: int, topo_fn, gs: int, mem: float,
+              policy_cls) -> float:
+    reset_ids()
+    topo = topo_fn()
+    with_b = policy_cls is not SimplePolicy
+    pol = (policy_cls(topo) if with_b
+           else SimplePolicy(topo, disorder=4.0))
+    root = fibonacci_workload(n_threads, with_bubbles=with_b, group_size=gs)
+    return Simulator(topo, pol, mem_fraction=mem, contention=0.5).run(root).time
 
 
-def run() -> list[tuple[str, float, str]]:
+def gain(n_threads: int, topo_fn, gs: int, mem: float = 0.6,
+         bubble_cls=BubblePolicy, baseline: float = None) -> float:
+    """Percent gain of the bubbled run over the flat SimplePolicy run.
+
+    ``baseline`` reuses an already-measured flat time (runs are
+    deterministic, so the 512-thread baseline need not be simulated once
+    per bubble policy)."""
+    if baseline is None:
+        baseline = _time_one(n_threads, topo_fn, gs, mem, SimplePolicy)
+    t = _time_one(n_threads, topo_fn, gs, mem, bubble_cls)
+    return (baseline - t) / baseline * 100
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
-    for n in (16, 32, 128, 512):
-        g = gain(n, novascale_16, gs=4)
+    numa_ns = (16, 32) if smoke else (16, 32, 128, 512)
+    xeon_ns = (8,) if smoke else (8, 16, 64)
+    for n in numa_ns:
+        base = _time_one(n, novascale_16, 4, 0.6, SimplePolicy)
+        g = gain(n, novascale_16, gs=4, baseline=base)
         paper = {32: "paper ~40%", 512: "paper up to 80%"}.get(n, "")
         rows.append((f"fig5/numa4x4_n{n}", g, paper))
-    for n in (8, 16, 64):
+        gsteal = gain(n, novascale_16, gs=4, bubble_cls=StealPolicy,
+                      baseline=base)
+        rows.append((f"fig5/numa4x4_n{n}_steal", gsteal,
+                     "bubbles + steal + next-touch"))
+    for n in xeon_ns:
         g = gain(n, bi_xeon_ht, gs=2)
         rows.append((f"fig5/bixeon_n{n}", g,
                      "paper 30-40% stabilised" if n >= 16 else ""))

@@ -3,22 +3,39 @@
 Prints ``name,value,derived`` CSV rows (value unit depends on the bench:
 us/call for Table 1, speedup for Table 2, gain-% for Fig 5, roofline step
 ms for the dry-run table).
+
+``--smoke`` runs a seconds-scale subset (conduction-only Table 2, small
+Fig 5 sizes, no wall-clock Table 1 / roofline) — the CI sanity target.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
+# make `benchmarks` and `repro` importable when invoked directly as
+# `python benchmarks/run.py`, with or without PYTHONPATH=src
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
 
 def main() -> None:
-    from benchmarks import fig5_fibonacci, roofline, table1_cost, \
-        table2_conduction
+    smoke = "--smoke" in sys.argv[1:]
+    from benchmarks import fig5_fibonacci, table2_conduction
+
+    if smoke:
+        mods = [table2_conduction, fig5_fibonacci]
+    else:
+        from benchmarks import roofline, table1_cost
+        mods = [table1_cost, table2_conduction, fig5_fibonacci, roofline]
 
     failed = 0
-    for mod in (table1_cost, table2_conduction, fig5_fibonacci, roofline):
+    for mod in mods:
         try:
-            for name, v, d in mod.run():
+            rows = mod.run(smoke=True) if smoke else mod.run()
+            for name, v, d in rows:
                 print(f"{name},{v:.4f},{d}")
         except Exception:
             traceback.print_exc()

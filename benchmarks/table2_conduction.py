@@ -5,13 +5,21 @@ nodes, NUMA factor 3) for the two §5.2 applications: heat conduction
 (mem_fraction 0.25) and advection (0.4 — more memory-bound per unit work).
 
 Paper values: conduction 10.58 / 15.82 / 15.80; advection 9.11/12.40/12.40.
+
+Beyond the paper's balanced stripes, an **imbalanced** section runs an
+uneven bubble tree (groups of 2..12 stripes, node burst hints, skewed
+stripe work) — the §3.3.3 work-stealing scenario.  Rows compare stealing
+off (``bubbles_nosteal``: idle nodes stay idle), stealing with first-touch
+memory (``bubbles``), and stealing + next-touch migration (``steal``).
+
 Output CSV: name,us_per_call(speedup),derived
 """
 
 from __future__ import annotations
 
 from repro.core import (BoundPolicy, BubblePolicy, PerCpuPolicy, SimplePolicy,
-                        Simulator, novascale_16, stripes_workload)
+                        Simulator, StealPolicy, imbalanced_stripes_workload,
+                        novascale_16, reset_ids, stripes_workload)
 
 PAPER = {
     ("conduction", "simple"): 10.58, ("conduction", "bound"): 15.82,
@@ -20,27 +28,47 @@ PAPER = {
     ("advection", "bubbles"): 12.40,
 }
 
-
-def _run(policy_cls, mem, group=None, **kw):
+def _run(policy_cls, mem, group=None, root_fn=None, **kw):
+    reset_ids()
     topo = novascale_16()
     pol = policy_cls(topo, **kw)
-    root = stripes_workload(16, work=100.0, group=group)
+    root = root_fn() if root_fn else \
+        stripes_workload(n_threads=16, work=100.0, group=group)
     sim = Simulator(topo, pol, jitter=0.1, mem_fraction=mem, contention=0.5)
-    return sim.run(root, cycles=8).speedup
+    return sim.run(root, cycles=8)
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
-    for app, mem in (("conduction", 0.25), ("advection", 0.4)):
+    apps = (("conduction", 0.25),) if smoke else \
+        (("conduction", 0.25), ("advection", 0.4))
+    for app, mem in apps:
         for name, cls, kw, grp in (
                 ("simple", SimplePolicy, {"disorder": 4.0}, None),
                 ("percpu", PerCpuPolicy, {}, None),
                 ("bound", BoundPolicy, {}, None),
-                ("bubbles", BubblePolicy, {}, 4)):
-            s = _run(cls, mem, group=grp, **kw)
+                ("bubbles", BubblePolicy, {}, 4),
+                ("steal", StealPolicy, {}, 4)):
+            s = _run(cls, mem, group=grp, **kw).speedup
             paper = PAPER.get((app, name))
             rows.append((f"table2/{app}_{name}", s,
-                         f"paper: {paper}" if paper else "extra baseline"))
+                         f"paper: {paper}" if paper else
+                         ("= bubbles on balanced load" if name == "steal"
+                          else "extra baseline")))
+    # -- imbalanced bubble tree: the work-stealing rows ----------------------
+    for name, cls, kw in (
+            ("simple", SimplePolicy, {"disorder": 4.0}),
+            ("bound", BoundPolicy, {}),
+            ("bubbles_nosteal", BubblePolicy, {"steal": False}),
+            ("bubbles", BubblePolicy, {}),
+            ("steal", StealPolicy, {})):
+        flat = cls not in (BubblePolicy, StealPolicy)
+        r = _run(cls, 0.25,
+                 root_fn=lambda flat=flat: imbalanced_stripes_workload(
+                     flat=flat), **kw)
+        rows.append((f"table2/imbalanced_{name}", r.speedup,
+                     f"time={r.time:.0f} steals={r.extra['steals']}"
+                     f" data_migrations={r.data_migrations}"))
     return rows
 
 

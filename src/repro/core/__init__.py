@@ -5,31 +5,37 @@ Public surface:
 * :mod:`repro.core.bubble` — bubble/thread tree (application structure)
 * :mod:`repro.core.topology` — hierarchical machine model
 * :mod:`repro.core.runqueues` — per-level task lists + two-pass lookup
-* :mod:`repro.core.scheduler` — the bubble scheduler (sink/burst/regenerate)
-* :mod:`repro.core.policies` — simple / percpu / bound / bubbles strategies
-* :mod:`repro.core.simulator` — discrete-event NUMA simulator (paper repro)
+* :mod:`repro.core.scheduler` — the bubble scheduler (sink/burst/regenerate
+  + the hierarchical whole-bubble steal pass)
+* :mod:`repro.core.policies` — simple / percpu / bound / bubbles / steal
+  strategies (``steal`` = bubbles + work stealing + next-touch migration)
+* :mod:`repro.core.simulator` — discrete-event NUMA simulator (paper repro;
+  first-touch and next-touch data-homing policies)
 * :mod:`repro.core.planner` — bubble-tree → mesh placement (JAX sharding)
 """
 
-from .bubble import Bubble, Task, Thread, balanced_tree, bubble, thread
+from .bubble import (Bubble, Task, Thread, balanced_tree, bubble, reset_ids,
+                     thread)
 from .topology import (Level, Topology, bi_xeon_ht, from_mesh_axes,
                        novascale_16, numa_4x4_smt, tpu_pod_slice)
 from .runqueues import QueueHierarchy, RunQueue
 from .scheduler import BubbleScheduler
 from .policies import (POLICIES, BoundPolicy, BubblePolicy, PerCpuPolicy,
-                       Policy, SimplePolicy)
+                       Policy, SimplePolicy, StealPolicy)
 from .simulator import (SimResult, Simulator, fibonacci_workload,
-                        stripes_workload)
+                        imbalanced_stripes_workload, stripes_workload)
 from .planner import (Dim, MeshAxis, Plan, plan_bound, plan_bubbles,
                       plan_simple)
 
 __all__ = [
     "Bubble", "Task", "Thread", "bubble", "thread", "balanced_tree",
+    "reset_ids",
     "Level", "Topology", "novascale_16", "bi_xeon_ht", "numa_4x4_smt",
     "tpu_pod_slice", "from_mesh_axes",
     "QueueHierarchy", "RunQueue", "BubbleScheduler",
     "POLICIES", "Policy", "SimplePolicy", "PerCpuPolicy", "BoundPolicy",
-    "BubblePolicy",
+    "BubblePolicy", "StealPolicy",
     "Simulator", "SimResult", "stripes_workload", "fibonacci_workload",
+    "imbalanced_stripes_workload",
     "Dim", "MeshAxis", "Plan", "plan_bubbles", "plan_simple", "plan_bound",
 ]

@@ -29,9 +29,24 @@ from typing import Any, Callable, Iterator, Optional
 _ids = itertools.count()
 
 
-@dataclass
+def reset_ids() -> None:
+    """Restart the task-id counter (test/bench determinism).
+
+    Task ids seed the deterministic jitter hash, so two runs only produce
+    identical traces when their trees were built from the same id origin —
+    golden-trace tests call this before every run."""
+    global _ids
+    _ids = itertools.count()
+
+
+@dataclass(eq=False)
 class Task:
-    """Anything that can sit on a run queue: a thread or a bubble."""
+    """Anything that can sit on a run queue: a thread or a bubble.
+
+    Tasks compare (and hash) by **identity**: two threads that happen to
+    carry the same name/priority/work are still distinct schedulable
+    entities, and queue removal must never confuse them (structural
+    dataclass equality made ``deque.remove`` pull the wrong twin)."""
 
     name: str = ""
     prio: int = 0                      # higher wins (paper §3.3.2)
@@ -59,7 +74,7 @@ class Task:
         return node
 
 
-@dataclass
+@dataclass(eq=False)
 class Thread(Task):
     """A leaf task.
 
@@ -79,13 +94,15 @@ class Thread(Task):
     # -- mutable scheduler state --
     remaining: float = field(default=0.0)
     last_cpu: Optional[int] = None               # affinity memo (paper §2.2)
+    stolen: bool = field(default=False)          # set by a steal; consumed by
+                                                 # the next-touch policy (§2.3)
 
     def __post_init__(self) -> None:
         super().__post_init__()
         self.remaining = float(self.work)
 
 
-@dataclass
+@dataclass(eq=False)
 class Bubble(Task):
     """A nested set of tasks (threads and/or bubbles).
 

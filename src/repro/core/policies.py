@@ -8,6 +8,9 @@
 * :class:`BoundPolicy` — the *predetermined* schedule: threads bound to
   cpus by hand, non-portable (paper §2.1).
 * :class:`BubblePolicy` — our subject: the bubble scheduler of §3.3.
+* :class:`StealPolicy` — bubbles + the hierarchical whole-bubble steal pass
+  with next-touch data migration (§3.3.3 stealing made load-bearing): the
+  row to compare against ``bubbles`` on *imbalanced* workloads.
 
 Every policy exposes the same small driver interface used by the simulator:
 ``submit`` (initial placement), ``next(cpu)``, ``on_yield`` (thread finished
@@ -190,9 +193,11 @@ class BubblePolicy(Policy):
 
     name = "bubbles"
 
-    def __init__(self, topo: Topology, *, respect_hints: bool = True):
+    def __init__(self, topo: Topology, *, respect_hints: bool = True,
+                 steal: bool = True):
         super().__init__(topo)
-        self.sched = BubbleScheduler(topo, respect_hints=respect_hints)
+        self.sched = BubbleScheduler(topo, respect_hints=respect_hints,
+                                     steal=steal)
         self.root: Optional[Bubble] = None
         self.running: dict[int, Thread] = {}
 
@@ -205,7 +210,8 @@ class BubblePolicy(Policy):
         if t is not None:
             self.running[cpu] = t
             lq = self.sched.last_queue
-            self.last_domain = lq.comp.name if lq else None
+            # `is not None`: a just-drained RunQueue is falsy (__len__ == 0)
+            self.last_domain = lq.comp.name if lq is not None else None
         return t
 
     def on_yield(self, cpu: int, t: Thread, done: bool, now: float) -> None:
@@ -218,12 +224,16 @@ class BubblePolicy(Policy):
         for b in root.bubbles():
             b.burst = False
         # re-wake sub-bubbles from their home lists (affinity kept); fall
-        # back to the global list for bubbles never burst.
+        # back to the global list for bubbles never burst.  Home queues are
+        # usually *empty* at the barrier, and empty RunQueues are falsy —
+        # an `or` fallback here would re-route every regeneration to the
+        # global list and quietly discard all placement affinity.
+        glob = self.sched.queues.global_queue()
         for b in root.children:
             if isinstance(b, Bubble):
-                (b.home_list or self.sched.queues.global_queue()).push(b)
+                (glob if b.home_list is None else b.home_list).push(b)
             else:
-                (root.home_list or self.sched.queues.global_queue()).push(b)
+                (glob if root.home_list is None else root.home_list).push(b)
         self.sched.stats.regenerations += 1
 
     def lookup_cost(self) -> tuple[int, int]:
@@ -231,5 +241,23 @@ class BubblePolicy(Policy):
         return (q.lookup_steps, max(q.lookups, 1))
 
 
+class StealPolicy(BubblePolicy):
+    """Bubbles + hierarchical work stealing + next-touch data migration.
+
+    Scheduling-wise this is :class:`BubblePolicy` with the steal pass
+    forced on; the distinguishing behaviour is memory-side: it asks the
+    simulator for the **next-touch** homing policy (``preferred_data_policy``),
+    so a stolen thread's first access after the migration re-homes its data
+    under the thief — the paper's §2.3 migration discussion made executable.
+    """
+
+    name = "steal"
+    preferred_data_policy = "next_touch"
+
+    def __init__(self, topo: Topology, *, respect_hints: bool = True):
+        super().__init__(topo, respect_hints=respect_hints, steal=True)
+
+
 POLICIES = {p.name: p for p in
-            (SimplePolicy, PerCpuPolicy, BoundPolicy, BubblePolicy)}
+            (SimplePolicy, PerCpuPolicy, BoundPolicy, BubblePolicy,
+             StealPolicy)}

@@ -25,7 +25,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .bubble import Bubble, Task
+from .bubble import Task
 from .topology import Component, Topology
 
 
@@ -45,34 +45,46 @@ class RunQueue:
         self.version += 1
 
     def remove(self, task: Task) -> bool:
-        try:
-            self.tasks.remove(task)
-        except ValueError:
-            return False
-        self.version += 1
-        return True
+        """Remove exactly ``task`` (identity, not equality).
+
+        The steal path pulls tasks from *non-head* positions; removal by
+        value would delete the first structurally-equal twin instead of the
+        claimed object, losing one task and double-scheduling another.
+        """
+        for i, t in enumerate(self.tasks):
+            if t is task:
+                del self.tasks[i]
+                self.version += 1
+                return True
+        return False
 
     def best_prio(self) -> Optional[int]:
         return max((t.prio for t in self.tasks), default=None)
 
     def pop_best(self, min_prio: Optional[int] = None) -> Optional[Task]:
-        """Claim the highest-priority task (FIFO among equals)."""
-        best, best_p = None, None
-        for t in self.tasks:
+        """Claim the highest-priority task (FIFO among equals).
+
+        Deletion is by index so the claimed object — and not an equal-looking
+        sibling nearer the head — is the one that leaves the queue, keeping
+        pass-2 revalidation sound when tasks sit at non-head positions.
+        """
+        best_i, best_p = -1, None
+        for i, t in enumerate(self.tasks):
             if best_p is None or t.prio > best_p:
-                best, best_p = t, t.prio
-        if best is None or (min_prio is not None and best_p < min_prio):
+                best_i, best_p = i, t.prio
+        if best_i < 0 or (min_prio is not None and best_p < min_prio):
             return None
-        self.tasks.remove(best)
+        task = self.tasks[best_i]
+        del self.tasks[best_i]
         self.version += 1
-        return best
+        return task
 
     def __len__(self) -> int:
         return len(self.tasks)
 
 
 class QueueHierarchy:
-    """One RunQueue per topology component + the two-pass lookup + stealing."""
+    """One RunQueue per topology component + the two-pass lookup."""
 
     def __init__(self, topo: Topology):
         self.topo = topo
@@ -129,41 +141,9 @@ class QueueHierarchy:
                 task = best_q.pop_best()
             return task and (best_q, task)
 
-    # -- stealing (HAFS-style, used by bubble regeneration) ------------------
-    def steal(self, cpu: int) -> Optional[tuple[RunQueue, Task]]:
-        """Idle cpu pulls a *bubble* (preferred) or thread from the most
-        loaded queue outside its covering chain, nearest level first."""
-        chain = set(id(q.comp) for q in self._cover[cpu])
-        path = self.topo.cpus[cpu].path()            # root→leaf
-        for anc in path[::-1][1:]:                   # walk upward
-            candidates: list[RunQueue] = []
-            for sib in anc.children:
-                if id(sib) in chain:
-                    continue
-                for comp in self._subtree(sib):
-                    q = self.queues[id(comp)]
-                    if len(q):
-                        candidates.append(q)
-            if candidates:
-                q = max(candidates, key=lambda q: sum(
-                    t.total_work() if isinstance(t, Bubble)
-                    else getattr(t, "remaining", 1.0) for t in q.tasks))
-                # prefer whole bubbles: stealing a coherent group keeps
-                # affinity intact (paper §3.3.3)
-                for t in list(q.tasks):
-                    if isinstance(t, Bubble):
-                        q.remove(t)
-                        return q, t
-                t = q.pop_best()
-                if t is not None:
-                    return q, t
-        return None
-
-    @staticmethod
-    def _subtree(comp: Component):
-        yield comp
-        for c in comp.children:
-            yield from QueueHierarchy._subtree(c)
+    # NOTE: stealing lives in :meth:`BubbleScheduler._steal_pass` — the
+    # hierarchy only provides the queues + the two-pass lookup, so there is
+    # exactly one steal implementation to keep correct.
 
     # -- introspection -------------------------------------------------------
     def snapshot(self) -> dict[str, list[str]]:

@@ -9,7 +9,23 @@ Implements §3.3 of the paper:
   covering them, even if less-prioritised tasks are more local (§3.3.2);
 * **regeneration** — after a bubble's time slice, its threads are pulled
   back in, the bubble closes and is pushed back on its home list (§3.3.3);
-  idle cpus may steal whole bubbles, keeping affinity intact.
+* **hierarchical work stealing** — §3.3.3's "idle cpus may steal whole
+  bubbles, keeping affinity intact", made concrete: a cpu whose two-pass
+  lookup comes back empty walks its covering levels **local → global**
+  (:meth:`Topology.covering` order), so the *level* it steals from is the
+  closest one holding any work.  Within that level it prefers a whole
+  closed bubble — a coherent affinity group — over any lone thread, and
+  among bubbles takes the one with the most remaining work (steal enough
+  to stay busy); threads are the fallback when the level holds no bubble.
+  The loot is re-pushed onto the nearest list wide enough to hold it
+  (:meth:`BubbleScheduler._place_near`), so the stolen group's new
+  scheduling area is the thief's neighbourhood, not one distant cpu.
+  Every stolen thread is flagged ``stolen`` so a next-touch memory policy
+  (simulator §2.3) can re-home its data after the migration.
+
+Steal activity is accounted in :class:`SchedStats` (``steals``,
+``bubble_steals``, ``thread_steals``, ``steal_attempts``, ``stolen_work``)
+and the victim of the latest steal is kept in ``last_steal`` for tracing.
 
 The scheduler is driven from the outside (the simulator, the serving engine,
 or the placement planner): there is "no global scheduling: processors just
@@ -31,7 +47,11 @@ class SchedStats:
     bursts: int = 0
     sinks: int = 0
     regenerations: int = 0
-    steals: int = 0
+    steals: int = 0              # successful steals (bubbles + threads)
+    bubble_steals: int = 0       # whole affinity groups moved intact
+    thread_steals: int = 0       # lone-thread fallback steals
+    steal_attempts: int = 0      # steal passes entered (incl. empty-handed)
+    stolen_work: float = 0.0     # remaining work moved by steals
     migrations: int = 0          # thread ran on a different cpu than last time
     schedules: int = 0
 
@@ -46,16 +66,22 @@ class BubbleScheduler:
     heuristic — the paper's "stricter guiding hints".
     """
 
-    def __init__(self, topo: Topology, *, respect_hints: bool = True):
+    def __init__(self, topo: Topology, *, respect_hints: bool = True,
+                 steal: bool = True):
         self.topo = topo
         self.queues = QueueHierarchy(topo)
         self.respect_hints = respect_hints
+        self.steal = steal                           # idle cpus may steal
         self.stats = SchedStats()
         self.last_queue: Optional[RunQueue] = None   # lock-domain of last pick
+        self.last_steal: Optional[tuple[RunQueue, Task]] = None  # (victim, loot)
 
     # -- application API (paper Figure 4) ------------------------------------
     def wake_up_bubble(self, b: Bubble, at: Optional[RunQueue] = None) -> None:
-        q = at or self.queues.global_queue()
+        # NOTE: explicit None test — RunQueue has __len__, so an *empty*
+        # target queue is falsy and `at or global` would silently re-route
+        # the wake-up to the global list.
+        q = self.queues.global_queue() if at is None else at
         b.home_list = q
         q.push(b)
 
@@ -100,14 +126,12 @@ class BubbleScheduler:
         for _ in range(64 * len(self.topo.levels)):       # progress bound
             found = self.queues.find(cpu)
             if found is None:
-                if allow_steal:
-                    stolen = self.queues.steal(cpu)
+                if allow_steal and self.steal:
+                    stolen = self._steal_pass(cpu)
                     if stolen is not None:
                         _, task = stolen
-                        self.stats.steals += 1
                         # re-home the stolen task near us and retry
                         self._place_near(task, cpu)
-                        allow_steal = True
                         continue
                 return None
             q, task = found
@@ -140,6 +164,77 @@ class BubbleScheduler:
             q.push(c)
         self.stats.bursts += 1
 
+    # -- hierarchical work stealing (§3.3.3) ----------------------------------
+    def _steal_pass(self, cpu: int) -> Optional[tuple[RunQueue, Task]]:
+        """Walk the covering levels local→global; steal a whole bubble
+        from the closest level that has one.
+
+        At each ancestor of ``cpu`` (nearest first) every sibling subtree is
+        inspected.  A closed bubble is preferred over any lone thread at the
+        same level — moving the whole group keeps its internal affinity
+        intact; among candidates of the same kind the one with the most
+        remaining work wins (steal enough to stay busy), with sibling
+        closeness breaking exact work ties via scan order.  Only when an
+        ancestor level offers no bubble at all does the pass fall back to
+        the heaviest runnable thread there; only when a level offers nothing
+        does the walk widen to the next level out.
+
+        On success the loot is *removed from the victim queue* (identity-
+        safe), counted in :class:`SchedStats`, its threads flagged
+        ``stolen`` for the next-touch memory policy, and ``(victim_queue,
+        task)`` is returned — the caller re-places the task near the thief.
+        """
+        self.stats.steal_attempts += 1
+        path = self.topo.cpus[cpu].path()                 # root → leaf
+        for depth in range(len(path) - 2, -1, -1):        # local → global
+            anc, mine = path[depth], path[depth + 1]
+            best_bubble = best_thread = None              # (queue, task, work)
+            siblings = sorted((c for c in anc.children if c is not mine),
+                              key=lambda c: abs(c.index - mine.index))
+            for sib in siblings:
+                for comp in self._bfs(sib):
+                    q = self.queues.queue_of(comp)
+                    for t in q.tasks:
+                        if isinstance(t, Bubble):
+                            if t.done():
+                                continue
+                            w = t.total_work()
+                            if best_bubble is None or w > best_bubble[2]:
+                                best_bubble = (q, t, w)
+                        elif t.remaining > 0:
+                            if best_thread is None or t.remaining > best_thread[2]:
+                                best_thread = (q, t, t.remaining)
+            best = best_bubble or best_thread
+            if best is None:
+                continue
+            victim, task, work = best
+            victim.remove(task)
+            self.stats.steals += 1
+            self.stats.stolen_work += work
+            if isinstance(task, Bubble):
+                self.stats.bubble_steals += 1
+                for th in task.threads():
+                    th.stolen = True
+            else:
+                self.stats.thread_steals += 1
+                task.stolen = True
+            self.last_steal = (victim, task)
+            return victim, task
+        return None
+
+    @staticmethod
+    def _bfs(comp: Component):
+        """Breadth-first components of a subtree — shallowest queues first,
+        so the widest (most shareable) lists of a victim are tried before
+        its per-cpu ones."""
+        frontier = [comp]
+        while frontier:
+            nxt: list[Component] = []
+            for c in frontier:
+                yield c
+                nxt.extend(c.children)
+            frontier = nxt
+
     def _place_near(self, task: Task, cpu: int) -> None:
         """Place a stolen task on the closest list that can hold it."""
         chain = self.queues.covering(cpu)                 # local → global
@@ -170,7 +265,8 @@ class BubbleScheduler:
                         q.remove(t)
             sub.burst = False
         self.stats.regenerations += 1
-        home = b.home_list or self.queues.global_queue()
+        home = (self.queues.global_queue() if b.home_list is None
+                else b.home_list)       # empty home queues are falsy!
         b.waiting_running = [t for t in b.threads()
                              if id(t) in live and t.remaining > 0]
         if not b.waiting_running:

@@ -6,9 +6,19 @@ homed under another component of level *L* advances at ``1/L.factor`` speed
 (the paper's NovaScale: "accessing the memory of another node is about 3
 times slower", §5.2).
 
-Data homing is **first touch** (the default Linux/Solaris policy the paper
-mentions in §2.3): the first cpu to run a thread homes that thread's data at
-its own position; migrating the thread later does *not* migrate the data.
+Data homing supports the two §2.3 policies:
+
+* **first touch** (the default Linux/Solaris policy): the first cpu to run a
+  thread homes that thread's data at its own position; migrating the thread
+  later does *not* migrate the data;
+* **next touch** (``data_policy="next_touch"``): a thread that was *stolen*
+  (``Thread.stolen``, set by the scheduler's steal pass) re-homes its data at
+  the next cpu that touches it, so migrated work stops paying the remote
+  NUMA factor after one quantum.  ``migration_cost`` charges the moving
+  touch (page-migration latency, in extra slowdown for that quantum).
+  :class:`~repro.core.policies.StealPolicy` selects this policy via its
+  ``preferred_data_policy`` attribute; an explicit ``data_policy=`` argument
+  always wins.
 
 The simulator advances in fixed quanta; each busy cpu runs its thread for one
 quantum per tick (all speeds relative).  Workloads with barrier cycles
@@ -36,6 +46,7 @@ class SimResult:
     migrations: int
     lookup_steps: float          # mean scan steps per scheduler call
     cycles: int = 1
+    data_migrations: int = 0     # next-touch page migrations performed
     extra: dict = field(default_factory=dict)
 
     @property
@@ -51,7 +62,9 @@ class SimResult:
 class Simulator:
     def __init__(self, topo: Topology, policy: Policy, *,
                  quantum: float = 1.0, jitter: float = 0.0,
-                 mem_fraction: float = 1.0, contention: float = 0.0):
+                 mem_fraction: float = 1.0, contention: float = 0.0,
+                 data_policy: Optional[str] = None,
+                 migration_cost: float = 0.0):
         self.topo = topo
         self.policy = policy
         self.quantum = quantum
@@ -61,8 +74,15 @@ class Simulator:
         # the same lock domain within one tick — the paper's "unique thread
         # list for the whole machine is a bottleneck" (§2.2).
         self.contention = contention
-        self.homes: dict[str, int] = {}  # data id -> home cpu (first touch)
+        # memory policy: explicit arg > policy preference > first touch
+        self.data_policy = data_policy or getattr(
+            policy, "preferred_data_policy", "first_touch")
+        assert self.data_policy in ("first_touch", "next_touch"), self.data_policy
+        self.migration_cost = migration_cost
+        self.homes: dict[str, int] = {}  # data id -> home cpu
         self.migrations = 0
+        self.data_migrations = 0         # next-touch re-homes performed
+        self.migration_log: list[tuple[str, int, int]] = []  # (data, from, to)
 
     # -- speed model ---------------------------------------------------------
     def _speed(self, cpu: int, t: Thread) -> float:
@@ -71,8 +91,20 @@ class Simulator:
         pure memory-latency-bound thread; the paper's stencil codes sit
         around 0.25 (calibrated so *simple* lands at the paper's 10.58)."""
         if t.data is None:
+            t.stolen = False
             return 1.0
         home = self.homes.setdefault(t.data, cpu)     # first touch
+        if t.stolen:
+            t.stolen = False                           # flag is one-shot
+            if self.data_policy == "next_touch" and home != cpu:
+                # next touch: the stolen thread's first access after the
+                # migration re-homes its data under the thief (§2.3)
+                self.migration_log.append((t.data, home, cpu))
+                self.homes[t.data] = cpu
+                self.data_migrations += 1
+                home = cpu
+                if self.migration_cost:
+                    return 1.0 / (1.0 + self.migration_cost)
         f = self.topo.distance_factor(cpu, home)
         return 1.0 / (1.0 + self.mem_fraction * (f - 1.0))
 
@@ -132,6 +164,8 @@ class Simulator:
         self.policy.submit(root)
         now, total = 0.0, 0.0
         mig0 = self._policy_migrations()
+        dmig0 = self.data_migrations
+        steals0 = self._policy_steals()
         for cyc in range(cycles):
             if cyc > 0:
                 for t in root.threads():
@@ -148,8 +182,15 @@ class Simulator:
             policy=self.policy.name, time=total, busy=total, ideal=ideal,
             migrations=self._policy_migrations() - mig0,
             lookup_steps=steps / lookups, cycles=cycles,
-            extra={"n_cpus": self.topo.n_cpus, "homes": dict(self.homes)},
+            data_migrations=self.data_migrations - dmig0,
+            extra={"n_cpus": self.topo.n_cpus, "homes": dict(self.homes),
+                   "data_policy": self.data_policy,
+                   "steals": self._policy_steals() - steals0},
         )
+
+    def _policy_steals(self) -> int:
+        sched = getattr(self.policy, "sched", None)
+        return sched.stats.steals if sched else 0
 
     def _policy_migrations(self) -> int:
         sched = getattr(self.policy, "sched", None)
@@ -161,23 +202,70 @@ class Simulator:
 # ---------------------------------------------------------------------------
 
 def stripes_workload(n_threads: int, work: float = 100.0,
-                     group: Optional[int] = None) -> Bubble:
+                     group: Optional[int] = None,
+                     skew: float = 0.0,
+                     groups: Optional[list[int]] = None,
+                     burst_level: Optional[str] = None) -> Bubble:
     """Conduction/advection (§5.2): mesh split into stripes, one thread per
     stripe, cycles of parallel compute + barrier.  ``group`` = threads per
-    bubble; ``None`` = flat (the *simple*/*bound* versions)."""
-    if group is None:
+    bubble; ``None`` = flat (the *simple*/*bound* versions).
+
+    Two imbalance knobs build the work-stealing stress cases:
+
+    * ``skew`` makes the stripe *work* uneven (an irregular mesh): stripe
+      ``i`` carries ``work * (1 + skew * i / (n_threads - 1))``, so
+      ``skew=1.0`` gives the last stripe twice the work of the first;
+    * ``groups`` makes the bubble *tree* uneven — an explicit list of
+      per-group thread counts (overrides ``group``/``n_threads``), e.g.
+      ``groups=[2, 2, 4, 4, 8, 12]``.  Combined with a ``burst_level``
+      hint (usually ``"node"``) the big groups dump more threads under one
+      component than it has cpus while small groups leave theirs idle —
+      the paper's "unbalanced bubble tree" in which idle cpus must steal
+      whole bubbles to stay busy (§3.3.3).
+    """
+    if groups is not None:
+        n_threads = sum(groups)
+
+    def stripe_work(i: int) -> float:
+        if not skew or n_threads < 2:
+            return work
+        return work * (1.0 + skew * i / (n_threads - 1))
+
+    if group is None and groups is None:
         root = bubble(name="app")
         for i in range(n_threads):
-            root.insert(thread(work, name=f"stripe{i}", data=f"stripe{i}"))
+            root.insert(thread(stripe_work(i), name=f"stripe{i}",
+                               data=f"stripe{i}"))
         return root
+    sizes = groups if groups is not None else \
+        [group] * (n_threads // group)          # type: ignore[operator]
     root = bubble(name="app")
-    for g in range(n_threads // group):
-        b = bubble(name=f"node_group{g}")
-        for i in range(group):
-            j = g * group + i
-            b.insert(thread(work, name=f"stripe{j}", data=f"stripe{j}"))
+    j = 0
+    for g, size in enumerate(sizes):
+        b = bubble(name=f"node_group{g}", burst_level=burst_level)
+        for _ in range(size):
+            b.insert(thread(stripe_work(j), name=f"stripe{j}",
+                            data=f"stripe{j}"))
+            j += 1
         root.insert(b)
     return root
+
+
+def imbalanced_stripes_workload(work: float = 100.0,
+                                flat: bool = False) -> Bubble:
+    """The canonical unbalanced bubble tree for the stealing experiments:
+    six node-hinted groups of widths 2/2/4/4/8/12 over 32 stripes with
+    linearly skewed work (skew=1.0).  Small groups leave their node idle,
+    big ones overload theirs — only stealing keeps the machine busy.
+
+    ``flat=True`` builds the same 32 skewed stripes without the bubble
+    structure (the fair tree for flat-list policies).  Shared by
+    ``benchmarks/table2_conduction.py`` and the acceptance tests so both
+    always measure the same scenario."""
+    return stripes_workload(
+        n_threads=32, work=work,
+        groups=None if flat else [2, 2, 4, 4, 8, 12],
+        skew=1.0, burst_level=None if flat else "node")
 
 
 def fibonacci_workload(n_threads: int, with_bubbles: bool,

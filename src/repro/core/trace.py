@@ -49,15 +49,23 @@ class Tracer:
             sinks0 = sched.stats.sinks
             t = orig_next(cpu, now, allow_steal)
             if sched.stats.steals > steals0:
-                tracer.events.append(Event(now, cpu, "steal", "?"))
+                # the scheduler remembers its latest (victim queue, loot)
+                vq, loot = sched.last_steal or (None, None)
+                tracer.events.append(Event(
+                    now, cpu, "steal",
+                    loot.name if loot is not None else "?",
+                    vq.level if vq is not None else None))
             if sched.stats.sinks > sinks0:
                 lq = sched.last_queue
                 tracer.events.append(Event(
-                    now, cpu, "sink", "?", lq.level if lq else None))
+                    now, cpu, "sink", "?",
+                    lq.level if lq is not None else None))
             if t is not None:
                 lq = sched.last_queue
+                # `is not None`: an emptied RunQueue is falsy (__len__)
                 tracer.events.append(Event(
-                    now, cpu, "schedule", t.name, lq.level if lq else None))
+                    now, cpu, "schedule", t.name,
+                    lq.level if lq is not None else None))
             return t
 
         def _burst(b, q, now):
@@ -75,6 +83,13 @@ class Tracer:
     # -- reports --------------------------------------------------------------
     def schedules(self) -> list[Event]:
         return [e for e in self.events if e.kind == "schedule"]
+
+    def steals(self) -> list[Event]:
+        """Steal events: ``task`` names the loot, ``level`` the victim
+        queue's hierarchy level — the audit trail for the affinity
+        invariant (stolen bubbles should come from the nearest level that
+        had any)."""
+        return [e for e in self.events if e.kind == "steal"]
 
     def timeline(self, width: int = 64) -> str:
         """Per-cpu lane of scheduled task initials over event order."""

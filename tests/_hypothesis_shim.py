@@ -1,0 +1,111 @@
+"""A tiny, dependency-free stand-in for the slice of `hypothesis` we use.
+
+Tier-1 must collect and pass in a clean environment; ``hypothesis`` is an
+optional extra.  When it is absent, ``tests/test_scheduler.py`` falls back
+to this shim, which implements just enough of the API surface —
+``given``/``settings`` decorators and the ``integers``/``floats``/
+``booleans``/``composite`` strategies — to run the same property tests as
+deterministic, seeded random sampling (seed = example index, so failures
+reproduce exactly and runs are stable across machines).
+
+This is *not* hypothesis: no shrinking, no example database, no coverage-
+guided generation.  It trades those for zero dependencies and perfect
+determinism, which is what a tier-1 gate needs.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from typing import Any, Callable
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, fn: Callable[[random.Random], Any]):
+        self._fn = fn
+
+    def example(self, rng: random.Random) -> Any:
+        return self._fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    return Strategy(
+        lambda rng: min_value + (max_value - min_value) * rng.random())
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def composite(fn: Callable) -> Callable[..., Strategy]:
+    """``@composite`` turns ``fn(draw, *args)`` into a strategy factory,
+    exactly like hypothesis' decorator of the same name."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs) -> Strategy:
+        def build(rng: random.Random) -> Any:
+            def draw(strategy: Strategy) -> Any:
+                return strategy.example(rng)
+
+            return fn(draw, *args, **kwargs)
+
+        return Strategy(build)
+
+    return factory
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording the example budget (deadline etc. are ignored)."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies: Strategy):
+    """Run the test once per seeded example; the failing seed is reported."""
+
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest follows ``__wrapped__`` to the
+        # original signature and would mistake the drawn params for fixtures
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(i)
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:  # annotate with the reproducing seed
+                    raise AssertionError(
+                        f"shim example #{i} (seed={i}) failed: {e!r}\n"
+                        f"drawn={drawn}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+class _StrategiesModule:
+    """Duck-type of ``hypothesis.strategies`` for ``import ... as st``."""
+
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    composite = staticmethod(composite)
+
+
+strategies = _StrategiesModule()

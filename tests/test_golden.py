@@ -1,0 +1,143 @@
+"""Golden-trace regression tests for the simulator + scheduler stack.
+
+Every run here is fully deterministic: jitter comes from a blake2b hash of
+(task id, cycle), task ids restart from 0 via ``reset_ids()``, and the
+policies contain no RNG.  The snapshots below pin the observable behaviour
+(simulated time, thread migrations, next-touch data migrations, steals,
+mean lookup steps) for every policy on the balanced stripes, the
+imbalanced (uneven groups + skew) stripes, and the fibonacci workload —
+so a future refactor cannot silently change scheduling behaviour.
+
+To regenerate after an *intentional* behaviour change:
+
+    PYTHONPATH=src python tests/test_golden.py
+
+and paste the printed dict over ``GOLDEN``.
+"""
+
+import pytest
+
+from repro.core import (POLICIES, Simulator, fibonacci_workload,
+                        imbalanced_stripes_workload, novascale_16, reset_ids,
+                        stripes_workload)
+
+BALANCED = dict(n_threads=16, work=50.0, group=4)
+
+# bubble-family policies see the grouped/bubbled tree; flat-list policies
+# get the flat equivalent (same stripes, same work)
+BUBBLY = ("bubbles", "steal")
+
+
+def _workload(case: str, policy: str):
+    if case == "stripes_bal":
+        kw = dict(BALANCED)
+        if policy not in BUBBLY:
+            kw["group"] = None
+        return stripes_workload(**kw), 3
+    if case == "stripes_imb":
+        return imbalanced_stripes_workload(work=50.0,
+                                           flat=policy not in BUBBLY), 3
+    assert case == "fib"
+    return fibonacci_workload(32, with_bubbles=policy in BUBBLY,
+                              group_size=4), 1
+
+
+def simulate(case: str, policy: str) -> dict:
+    reset_ids()
+    topo = novascale_16()
+    kw = {"disorder": 4.0} if policy == "simple" else {}
+    pol = POLICIES[policy](topo, **kw)
+    root, cycles = _workload(case, policy)
+    sim = Simulator(topo, pol, jitter=0.1, mem_fraction=0.25, contention=0.5)
+    r = sim.run(root, cycles=cycles)
+    return {
+        "time": round(r.time, 6),
+        "migrations": r.migrations,
+        "data_migrations": r.data_migrations,
+        "steals": r.extra["steals"],
+        "lookup_steps": round(r.lookup_steps, 6),
+    }
+
+
+CASES = ["stripes_bal", "stripes_imb", "fib"]
+
+
+# ---------------------------------------------------------------------------
+# snapshots (regenerate with: PYTHONPATH=src python tests/test_golden.py)
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    ('stripes_bal', 'bound'): {'time': 155.0, 'migrations': 0,
+                               'data_migrations': 0, 'steals': 0,
+                               'lookup_steps': 0.0},
+    ('stripes_bal', 'bubbles'): {'time': 160.0, 'migrations': 0,
+                                 'data_migrations': 0, 'steals': 0,
+                                 'lookup_steps': 3.0},
+    ('stripes_bal', 'percpu'): {'time': 155.0, 'migrations': 0,
+                                'data_migrations': 0, 'steals': 0,
+                                'lookup_steps': 10.704918},
+    ('stripes_bal', 'simple'): {'time': 226.0, 'migrations': 0,
+                                'data_migrations': 0, 'steals': 0,
+                                'lookup_steps': 0.121678},
+    ('stripes_bal', 'steal'): {'time': 160.0, 'migrations': 0,
+                               'data_migrations': 0, 'steals': 0,
+                               'lookup_steps': 3.0},
+    ('stripes_imb', 'bound'): {'time': 525.0, 'migrations': 0,
+                               'data_migrations': 0, 'steals': 0,
+                               'lookup_steps': 0.0},
+    ('stripes_imb', 'bubbles'): {'time': 581.0, 'migrations': 18,
+                                 'data_migrations': 0, 'steals': 24,
+                                 'lookup_steps': 3.0},
+    ('stripes_imb', 'percpu'): {'time': 525.0, 'migrations': 0,
+                                'data_migrations': 0, 'steals': 0,
+                                'lookup_steps': 15.76129},
+    ('stripes_imb', 'simple'): {'time': 752.0, 'migrations': 0,
+                                'data_migrations': 0, 'steals': 0,
+                                'lookup_steps': 0.062669},
+    ('stripes_imb', 'steal'): {'time': 484.0, 'migrations': 18,
+                               'data_migrations': 11, 'steals': 24,
+                               'lookup_steps': 3.0},
+    ('fib', 'bound'): {'time': 38.0, 'migrations': 0,
+                       'data_migrations': 0, 'steals': 0,
+                       'lookup_steps': 0.0},
+    ('fib', 'bubbles'): {'time': 22.0, 'migrations': 0,
+                         'data_migrations': 0, 'steals': 0,
+                         'lookup_steps': 3.0},
+    ('fib', 'percpu'): {'time': 30.0, 'migrations': 0,
+                        'data_migrations': 0, 'steals': 0,
+                        'lookup_steps': 12.047619},
+    ('fib', 'simple'): {'time': 34.0, 'migrations': 0,
+                        'data_migrations': 0, 'steals': 0,
+                        'lookup_steps': 0.796178},
+    ('fib', 'steal'): {'time': 22.0, 'migrations': 0,
+                       'data_migrations': 0, 'steals': 0,
+                       'lookup_steps': 3.0},
+}
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_golden_trace(case: str, policy: str):
+    got = simulate(case, policy)
+    want = GOLDEN[(case, policy)]
+    for key in ("migrations", "data_migrations", "steals"):
+        assert got[key] == want[key], (case, policy, key, got, want)
+    assert got["time"] == pytest.approx(want["time"], rel=1e-9), \
+        (case, policy, got, want)
+    assert got["lookup_steps"] == pytest.approx(want["lookup_steps"],
+                                                rel=1e-6), (case, policy)
+
+
+def generate() -> dict:
+    out = {}
+    for case in CASES:
+        for policy in sorted(POLICIES):
+            out[(case, policy)] = simulate(case, policy)
+    return out
+
+
+if __name__ == "__main__":
+    print("GOLDEN = {")
+    for k, v in generate().items():
+        print(f"    {k!r}: {v!r},")
+    print("}")

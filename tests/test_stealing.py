@@ -1,0 +1,337 @@
+"""Hierarchical work-stealing + next-touch migration engine tests.
+
+Covers the §3.3.3 steal pass: conservation (no task lost or duplicated
+across steal/regenerate cycles), the affinity invariant (loot comes from
+the closest level that had any, whole bubbles preferred, and lands inside
+the thief's covering chain), `SchedStats` counter correctness, the
+identity-safe run-queue removal the steal path depends on, and the
+simulator's next-touch data migration.
+"""
+
+import pytest
+
+from repro.core import (BubblePolicy, BubbleScheduler, Level, QueueHierarchy,
+                        SimplePolicy, Simulator, StealPolicy, Topology,
+                        bubble, imbalanced_stripes_workload, novascale_16,
+                        reset_ids, stripes_workload, thread)
+from repro.core.runqueues import RunQueue
+from repro.core.trace import Tracer
+
+
+# ---------------------------------------------------------------------------
+# run-queue removal: identity, not equality (regression)
+# ---------------------------------------------------------------------------
+
+class TestRunQueueIdentity:
+    def _queue(self):
+        topo = Topology([Level("root", 1), Level("cpu", 1)])
+        return QueueHierarchy(topo).global_queue()
+
+    def test_remove_twin_is_identity_safe(self):
+        """Two structurally-identical threads: removing the second must not
+        delete the first (the old equality-based removal pulled whichever
+        twin sat closest to the head)."""
+        q = self._queue()
+        a = thread(1.0, name="twin")
+        b = thread(1.0, name="twin")
+        q.push(a)
+        q.push(b)
+        assert q.remove(b)
+        assert len(q) == 1 and q.tasks[0] is a
+
+    def test_pop_best_claims_exact_object_at_non_head(self):
+        q = self._queue()
+        lo = thread(1.0, name="lo", prio=0)
+        hi1 = thread(1.0, name="hi", prio=5)
+        hi2 = thread(1.0, name="hi", prio=5)
+        for t in (lo, hi1, hi2):
+            q.push(t)
+        got = q.pop_best()
+        assert got is hi1                       # FIFO among equals
+        assert list(q.tasks) == [lo, hi2]
+        assert q.tasks[1] is hi2                # hi2 untouched, not a copy
+
+    def test_remove_missing_returns_false(self):
+        q = self._queue()
+        q.push(thread(1.0))
+        assert not q.remove(thread(1.0))
+        assert len(q) == 1
+
+    def test_version_bumped_on_removal(self):
+        q = self._queue()
+        t = thread(1.0)
+        q.push(t)
+        v = q.version
+        q.remove(t)
+        assert q.version > v                    # pass-2 revalidation sees it
+
+
+# ---------------------------------------------------------------------------
+# the steal pass itself
+# ---------------------------------------------------------------------------
+
+class TestStealPass:
+    def test_steals_whole_bubble_over_thread(self):
+        """At one level, a closed bubble beats any lone thread — moving the
+        coherent group keeps its internal affinity intact."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        node1 = topo.components("node")[1]
+        fat = thread(50.0, name="fat")
+        grp = bubble(thread(2.0), thread(2.0), name="grp")
+        sched.queues.queue_of(node1).push(fat)
+        sched.queues.queue_of(node1).push(grp)
+        got = sched._steal_pass(0)
+        assert got is not None and got[1] is grp
+        assert sched.stats.bubble_steals == 1
+        assert sched.stats.thread_steals == 0
+
+    def test_closest_level_wins_over_heavier_loot(self):
+        """A small thread on a sibling cpu queue (same node) is preferred
+        over a big bubble a node away: most-local victim first."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        near = thread(1.0, name="near")
+        sched.queues.covering(3)[0].push(near)        # cpu3: node0 sibling
+        far = bubble(*[thread(9.0) for _ in range(4)], name="far")
+        sched.queues.queue_of(topo.components("node")[2]).push(far)
+        got = sched._steal_pass(0)
+        assert got is not None and got[1] is near
+
+    def test_stolen_threads_are_marked_for_next_touch(self):
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        grp = bubble(thread(2.0), thread(2.0), name="grp")
+        sched.queues.queue_of(topo.components("node")[3]).push(grp)
+        _, loot = sched._steal_pass(0)
+        assert loot is grp
+        assert all(t.stolen for t in grp.threads())
+
+    def test_placement_lands_in_thief_covering_chain(self):
+        """The affinity invariant: loot is re-pushed onto the nearest list
+        of the thief wide enough to hold it."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        grp = bubble(*[thread(2.0) for _ in range(4)], name="grp")
+        sched.queues.queue_of(topo.components("node")[3]).push(grp)
+        victim, loot = sched._steal_pass(0)
+        sched._place_near(loot, 0)
+        chain = sched.queues.covering(0)
+        holder = [q for q in chain if loot in q.tasks]
+        assert holder, "stolen bubble must sit on a queue covering the thief"
+        # width 4 fits exactly at node level — not dumped on the global list
+        assert holder[0].level == "node"
+        assert victim.comp.name == "node3"
+
+    def test_steal_respects_disable_flag(self):
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, steal=False)
+        grp = bubble(thread(2.0), name="grp")
+        sched.queues.queue_of(topo.components("node")[3]).push(grp)
+        assert sched.next_thread(0) is None
+        assert sched.stats.steals == 0
+        # the loot is untouched on its home queue
+        assert grp in sched.queues.queue_of(topo.components("node")[3]).tasks
+
+    def test_steal_counters_add_up(self):
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        sched.queues.queue_of(topo.components("node")[1]).push(
+            bubble(thread(2.0), name="g1"))
+        sched.queues.queue_of(topo.components("node")[2]).push(
+            thread(3.0, name="solo"))
+        assert sched._steal_pass(0) is not None
+        assert sched._steal_pass(0) is not None
+        assert sched._steal_pass(0) is None            # nothing left
+        s = sched.stats
+        assert s.steals == 2
+        assert s.steals == s.bubble_steals + s.thread_steals
+        assert s.steal_attempts == 3
+        assert s.stolen_work == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# conservation + integration through next_thread
+# ---------------------------------------------------------------------------
+
+def _drive_to_exhaustion(sched, topo):
+    got = []
+    idle_rounds = 0
+    while idle_rounds < 2:
+        progressed = False
+        for cpu in range(topo.n_cpus):
+            t = sched.next_thread(cpu)
+            if t is not None:
+                got.append(t)
+                t.remaining = 0.0
+                progressed = True
+        idle_rounds = 0 if progressed else idle_rounds + 1
+    return got
+
+
+class TestConservation:
+    def test_unbalanced_tree_schedules_every_thread_once(self):
+        """All work sits under one node; the other three must steal.  No
+        thread may be lost or scheduled twice."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        root = bubble(*[bubble(*[thread(1.0) for _ in range(4)],
+                               name=f"g{i}", burst_level="node")
+                        for i in range(8)], name="app")
+        node0 = topo.components("node")[0]
+        sched.wake_up_bubble(root, at=sched.queues.queue_of(node0))
+        got = _drive_to_exhaustion(sched, topo)
+        want = list(root.threads())
+        assert sorted(t.tid for t in got) == sorted(t.tid for t in want)
+        assert sched.stats.steals > 0
+        for q in sched.queues.queues.values():
+            for task in q.tasks:
+                assert task.is_bubble()       # only burst husks may remain
+
+    def test_steal_then_regenerate_conserves(self):
+        """Steal a bubble, burst it remotely, regenerate it — nothing is
+        lost or duplicated across the cycle."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        grp = bubble(*[thread(5.0) for _ in range(4)], name="grp")
+        node3 = topo.components("node")[3]
+        sched.wake_up_bubble(grp, at=sched.queues.queue_of(node3))
+        t = sched.next_thread(0)               # cpu0 steals + bursts locally
+        assert t is not None and sched.stats.steals == 1
+        sched.regenerate(grp, running={0: t})
+        sched.thread_returned(t)
+        # every thread is back inside the (single) closed bubble on a queue
+        assert sched.queues.total_tasks() == 1
+        assert not grp.burst
+        remaining = {id(x) for x in grp.threads()}
+        assert len(remaining) == 4
+
+
+class TestCountersAndTrace:
+    def test_trace_records_steal_victim_level(self):
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        tracer = Tracer(sched)
+        grp = bubble(*[thread(2.0) for _ in range(4)], name="grp")
+        sched.wake_up_bubble(grp, at=sched.queues.queue_of(
+            topo.components("node")[2]))
+        t = sched.next_thread(0)
+        assert t is not None
+        steals = tracer.steals()
+        assert len(steals) == sched.stats.steals == 1
+        assert steals[0].task == "grp"
+        assert steals[0].level == "node"
+
+    def test_migration_counter_counts_cpu_changes(self):
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)
+        t = thread(2.0, name="mover")
+        sched.submit_thread(t)
+        assert sched.next_thread(3) is t
+        sched.queues.global_queue().push(t)
+        assert sched.next_thread(9) is t
+        assert sched.stats.migrations == 1
+
+
+# ---------------------------------------------------------------------------
+# next-touch data migration (simulator side)
+# ---------------------------------------------------------------------------
+
+def _sim(policy_cls, root_fn, mem=0.25, cycles=8, **kw):
+    reset_ids()
+    topo = novascale_16()
+    pol = policy_cls(topo, **kw)
+    root = root_fn()
+    sim = Simulator(topo, pol, jitter=0.1, mem_fraction=mem, contention=0.5)
+    return sim.run(root, cycles=cycles), pol
+
+
+class TestNextTouch:
+    def test_steal_policy_selects_next_touch(self):
+        topo = novascale_16()
+        sim = Simulator(topo, StealPolicy(topo))
+        assert sim.data_policy == "next_touch"
+        sim2 = Simulator(topo, StealPolicy(topo), data_policy="first_touch")
+        assert sim2.data_policy == "first_touch"       # explicit arg wins
+        assert Simulator(topo, BubblePolicy(topo)).data_policy == "first_touch"
+
+    def test_stolen_work_rehomes_on_next_touch(self):
+        r, pol = _sim(StealPolicy, imbalanced_stripes_workload)
+        assert pol.sched.stats.steals > 0
+        assert r.data_migrations > 0
+        assert r.extra["data_policy"] == "next_touch"
+
+    def test_first_touch_never_migrates_data(self):
+        r, pol = _sim(BubblePolicy, imbalanced_stripes_workload)
+        assert pol.sched.stats.steals > 0              # stealing happened...
+        assert r.data_migrations == 0                  # ...but data stayed put
+
+    def test_rehome_updates_home_map(self):
+        topo = novascale_16()
+        pol = StealPolicy(topo)
+        sim = Simulator(topo, pol)
+        t = thread(4.0, data="page")
+        sim.homes["page"] = 12                         # homed on node3
+        t.stolen = True
+        assert sim._speed(0, t) == 1.0                 # migrating touch
+        assert sim.homes["page"] == 0                  # re-homed under thief
+        assert sim.data_migrations == 1
+        assert not t.stolen                            # flag is one-shot
+        assert sim._speed(0, t) == 1.0                 # now local for real
+
+    def test_result_counters_are_per_run_deltas(self):
+        """A reused Simulator must report each run's own steal/migration
+        counts, not lifetime cumulatives (regression)."""
+        reset_ids()
+        topo = novascale_16()
+        pol = StealPolicy(topo)
+        sim = Simulator(topo, pol, jitter=0.1, mem_fraction=0.25,
+                        contention=0.5)
+        r1 = sim.run(imbalanced_stripes_workload(), cycles=3)
+        r2 = sim.run(imbalanced_stripes_workload(), cycles=3)
+        assert r1.extra["steals"] > 0
+        assert r1.extra["steals"] + r2.extra["steals"] == \
+            pol.sched.stats.steals
+        assert r1.data_migrations + r2.data_migrations == sim.data_migrations
+
+    def test_migration_cost_charged_on_moving_touch(self):
+        topo = novascale_16()
+        pol = StealPolicy(topo)
+        sim = Simulator(topo, pol, migration_cost=1.0)
+        t = thread(4.0, data="page")
+        sim.homes["page"] = 12
+        t.stolen = True
+        assert sim._speed(0, t) == pytest.approx(0.5)  # pays the move once
+        assert sim._speed(0, t) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the ISSUE acceptance comparison
+# ---------------------------------------------------------------------------
+
+class TestAcceptance:
+    def test_steal_beats_simple_on_imbalanced(self):
+        r_simple, _ = _sim(SimplePolicy,
+                           lambda: imbalanced_stripes_workload(flat=True),
+                           disorder=4.0)
+        r_steal, pol = _sim(StealPolicy, imbalanced_stripes_workload)
+        assert pol.sched.stats.steals > 0
+        assert r_steal.time < r_simple.time            # strictly less
+
+    def test_steal_beats_firsttouch_stealing_on_imbalanced(self):
+        r_bub, _ = _sim(BubblePolicy, imbalanced_stripes_workload)
+        r_steal, _ = _sim(StealPolicy, imbalanced_stripes_workload)
+        assert r_steal.time < r_bub.time
+
+    def test_nosteal_strands_idle_nodes(self):
+        r_off, _ = _sim(BubblePolicy, imbalanced_stripes_workload,
+                        steal=False)
+        r_on, _ = _sim(BubblePolicy, imbalanced_stripes_workload)
+        assert r_on.time < r_off.time
+
+    def test_steal_no_worse_than_bubbles_on_balanced(self):
+        def balanced():
+            return stripes_workload(n_threads=16, work=100.0, group=4)
+        r_bub, _ = _sim(BubblePolicy, balanced)
+        r_steal, _ = _sim(StealPolicy, balanced)
+        assert r_steal.time <= r_bub.time
