@@ -3,23 +3,39 @@
 #
 #   make test         tier-1 gate: the full pytest suite (hypothesis optional;
 #                     tests/_hypothesis_shim.py covers clean environments)
+#   make lint         fast syntax gate: byte-compile src/tests/benchmarks
 #   make bench-smoke  seconds-scale benchmark sanity run (Table 2 conduction
-#                     + imbalanced stealing rows + small Fig 5 sizes)
+#                     + imbalanced/thrash stealing rows + small Fig 5 sizes);
+#                     writes machine-readable BENCH_smoke.json
+#   make bench-gate   bench-smoke + regression check against the committed
+#                     benchmarks/baseline_smoke.json (>10% speedup drop fails)
+#   make golden-check regenerate the golden traces and fail on any drift
 #   make bench        the full paper tables (slow: includes wall-clock
 #                     Table 1 and the roofline dry-run)
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench
+.PHONY: test lint bench-smoke bench-gate golden-check bench
 
 # PYTEST_ARGS lets CI trim the run (e.g. deselect the 7-minute ep_a2a
 # compile test on slow shared runners) without changing the local gate
 test:
 	$(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
 
+lint:
+	$(PYTHON) -m compileall -q src tests benchmarks
+
 bench-smoke:
-	$(PYTHON) benchmarks/run.py --smoke
+	$(PYTHON) benchmarks/run.py --smoke --json BENCH_smoke.json
+
+bench-gate: bench-smoke
+	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_smoke.json
+
+# GOLDEN_OUT=path additionally writes the regenerated dict there (CI
+# uploads it as the paste-ready artifact on drift)
+golden-check:
+	$(PYTHON) tests/test_golden.py --check $(if $(GOLDEN_OUT),--out $(GOLDEN_OUT))
 
 bench:
 	$(PYTHON) benchmarks/run.py

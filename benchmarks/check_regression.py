@@ -1,0 +1,99 @@
+"""Benchmark-regression gate: compare a BENCH json against the baseline.
+
+Usage::
+
+    python benchmarks/check_regression.py BASELINE.json CURRENT.json \
+        [--tolerance 0.10]
+
+Gates on ``kind == "speedup"`` rows (Table 2): the current speedup must be
+at least ``baseline * (1 - tolerance)``.  Gain-% and wall-clock rows are
+reported but not gated — speedups are the paper's headline metric and are
+fully deterministic in the simulator, so a >10% drop is a real scheduling
+regression, not noise.  A gated baseline row that disappears from the
+current run also fails (a silently dropped benchmark is a regression in
+coverage).  New rows are allowed — commit a refreshed baseline to start
+gating them.
+
+Exit codes: 0 ok, 1 regression(s), 2 usage/IO error.  To refresh the
+baseline after an intentional change::
+
+    make bench-smoke && cp BENCH_smoke.json benchmarks/baseline_smoke.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc.get("schema") == 1, f"{path}: unknown schema {doc.get('schema')}"
+    return {r["name"]: r for r in doc["rows"]}
+
+
+def main(argv: list[str]) -> int:
+    tolerance = 0.10
+    args = []
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--tolerance":
+            if i + 1 >= len(argv):
+                print("error: --tolerance needs a value")
+                return 2
+            try:
+                tolerance = float(argv[i + 1])
+            except ValueError:
+                print(f"error: --tolerance needs a number, got {argv[i + 1]!r}")
+                return 2
+            i += 2
+            continue
+        if argv[i].startswith("--"):
+            print(f"error: unknown flag {argv[i]}")
+            return 2
+        args.append(argv[i])
+        i += 1
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    try:
+        base = load_rows(args[0])
+        cur = load_rows(args[1])
+    except (OSError, json.JSONDecodeError, AssertionError) as e:
+        print(f"error: {e}")
+        return 2
+
+    failures, checked = [], 0
+    for name, brow in sorted(base.items()):
+        if brow.get("kind") != "speedup":
+            continue
+        crow = cur.get(name)
+        if crow is None:
+            failures.append(f"{name}: gated row missing from current run "
+                            f"(baseline {brow['value']:.4f})")
+            continue
+        checked += 1
+        floor = brow["value"] * (1.0 - tolerance)
+        status = "FAIL" if crow["value"] < floor else "ok"
+        print(f"{status:4s} {name:40s} base={brow['value']:8.4f} "
+              f"cur={crow['value']:8.4f} floor={floor:8.4f}")
+        if crow["value"] < floor:
+            failures.append(
+                f"{name}: {crow['value']:.4f} < floor {floor:.4f} "
+                f"({(1 - crow['value'] / brow['value']) * 100:.1f}% below "
+                f"baseline {brow['value']:.4f})")
+    for name in sorted(set(cur) - set(base)):
+        if cur[name].get("kind") == "speedup":
+            print(f"new  {name:40s} cur={cur[name]['value']:8.4f} "
+                  "(ungated; refresh baseline to gate)")
+
+    print(f"\n{checked} speedup rows checked against tolerance "
+          f"{tolerance:.0%}; {len(failures)} regression(s)")
+    for f in failures:
+        print(f"REGRESSION: {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -14,9 +14,9 @@ Output CSV: name,us_per_call(gain %),derived
 
 from __future__ import annotations
 
-from repro.core import (BubblePolicy, SimplePolicy, StealPolicy, Simulator,
-                        bi_xeon_ht, fibonacci_workload, novascale_16,
-                        reset_ids)
+from repro.core import (AdaptivePolicy, BubblePolicy, SimplePolicy,
+                        StealPolicy, Simulator, bi_xeon_ht,
+                        fibonacci_workload, novascale_16, reset_ids)
 
 
 def _time_one(n_threads: int, topo_fn, gs: int, mem: float,
@@ -56,6 +56,10 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
                       baseline=base)
         rows.append((f"fig5/numa4x4_n{n}_steal", gsteal,
                      "bubbles + steal + next-touch"))
+        gadapt = gain(n, novascale_16, gs=4, bubble_cls=AdaptivePolicy,
+                      baseline=base)
+        rows.append((f"fig5/numa4x4_n{n}_adaptive", gadapt,
+                     "= steal under zero cost (cost-benefit trigger idle)"))
     for n in xeon_ns:
         g = gain(n, bi_xeon_ht, gs=2)
         rows.append((f"fig5/bixeon_n{n}", g,

@@ -1,6 +1,13 @@
 """Render the data-driven sections of EXPERIMENTS.md from result JSONs.
 
 Usage: PYTHONPATH=src:. python -m benchmarks.render_experiments > /tmp/tables.md
+
+The steal/rebalance section consumes the ``BENCH_smoke.json`` written by
+``benchmarks/run.py --smoke`` (falling back to the committed
+``baseline_smoke.json``), rendering the per-level steal histograms that
+:meth:`repro.core.trace.Tracer.steals_by_level` collects and the
+``SimResult.extra`` steal/rebalance counters — steal behaviour plotted per
+level, not just counted.
 """
 
 from __future__ import annotations
@@ -10,6 +17,7 @@ import json
 from pathlib import Path
 
 R = Path(__file__).resolve().parent / "results"
+ROOT = Path(__file__).resolve().parent.parent
 
 
 def fmt_bytes(b):
@@ -75,8 +83,51 @@ def perf_iteration_table() -> str:
             + "\n".join(rows))
 
 
+def _bench_rows() -> list[dict]:
+    for cand in (ROOT / "BENCH_smoke.json",
+                 Path.cwd() / "BENCH_smoke.json",
+                 ROOT / "benchmarks" / "baseline_smoke.json"):
+        if cand.exists():
+            return json.load(open(cand))["rows"]
+    return []
+
+
+def steal_level_table() -> str:
+    """Per-policy steal/rebalance behaviour, steals split by victim level.
+
+    One row per Table 2 stealing run; the ``steals by level`` column is a
+    tiny inline bar chart per hierarchy level (one ``#`` per 8 steals), so
+    the affinity invariant — steals should concentrate on local levels,
+    and the adaptive policy should replace steal traffic with a handful of
+    rebalances — is visible at a glance."""
+    rows = []
+    for r in _bench_rows():
+        c = r.get("counters")
+        if c is None or "steals_by_level" not in c:
+            continue
+        by_level = c["steals_by_level"]
+        levels = " ".join(
+            f"{lvl}:{n}{'#' * max(1, n // 8)}"
+            for lvl, n in sorted(by_level.items())) or "-"
+        rows.append(
+            f"| {r['name'].split('/')[-1]} | {r['value']:.2f} | "
+            f"{c['steals']} | {levels} | {c['rebalances']} "
+            f"({c['rebalance_moves']} moves) | "
+            f"{c['steal_cost'] + c['rebalance_cost']:.0f} | "
+            f"{c['data_migrations']} |")
+    if not rows:
+        return ("_no BENCH_smoke.json found — run `make bench-smoke` to "
+                "generate the steal/rebalance section_")
+    head = ("| run | speedup | steals | steals by level | rebalances | "
+            "migration cost paid | data migr |\n"
+            "|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
 if __name__ == "__main__":
-    print("## 1-pod roofline (bubbles strategy)\n")
+    print("## steal/rebalance behaviour per level (Table 2 runs)\n")
+    print(steal_level_table())
+    print("\n## 1-pod roofline (bubbles strategy)\n")
     print(roofline_table("1pod"))
     print("\n## 2-pod roofline (bubbles strategy)\n")
     print(roofline_table("2pod"))

@@ -4,12 +4,28 @@ Prints ``name,value,derived`` CSV rows (value unit depends on the bench:
 us/call for Table 1, speedup for Table 2, gain-% for Fig 5, roofline step
 ms for the dry-run table).
 
-``--smoke`` runs a seconds-scale subset (conduction-only Table 2, small
-Fig 5 sizes, no wall-clock Table 1 / roofline) — the CI sanity target.
+``--smoke`` runs a seconds-scale subset (conduction-only Table 2 with the
+imbalanced + thrash stealing sections, small Fig 5 sizes, no wall-clock
+Table 1 / roofline) — the CI sanity target — and writes a machine-readable
+``BENCH_smoke.json`` (override the path with ``--json PATH``; pass
+``--json`` in non-smoke mode to capture the full run).  Schema::
+
+    {"schema": 1, "suite": "smoke"|"full",
+     "rows": [{"name": "table2/thrash_adaptive", "value": 10.26,
+               "kind": "speedup"|"gain_pct"|"us_per_call"|"step_ms",
+               "derived": "...",
+               "counters": {"steals": ..., "steals_by_level": {...},
+                            "rebalances": ..., "steal_cost": ...}}]}
+
+``counters`` is present on Table 2 rows only.  The ``bench-gate`` CI job
+feeds this file to ``benchmarks/check_regression.py`` against the committed
+``benchmarks/baseline_smoke.json`` — speedup rows regressing more than the
+tolerance band fail the build.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import traceback
@@ -20,9 +36,24 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
+# value unit per benchmark module (JSON row "kind")
+_KINDS = {"table1": "us_per_call", "table2": "speedup", "fig5": "gain_pct",
+          "roofline": "step_ms"}
+
+
+def _json_path(argv: list[str], smoke: bool):
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
+            return argv[i + 1]
+        return "BENCH_smoke.json"
+    return "BENCH_smoke.json" if smoke else None
+
 
 def main() -> None:
-    smoke = "--smoke" in sys.argv[1:]
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    json_path = _json_path(argv, smoke)
     from benchmarks import fig5_fibonacci, table2_conduction
 
     if smoke:
@@ -32,14 +63,29 @@ def main() -> None:
         mods = [table1_cost, table2_conduction, fig5_fibonacci, roofline]
 
     failed = 0
+    out_rows = []
     for mod in mods:
         try:
             rows = mod.run(smoke=True) if smoke else mod.run()
-            for name, v, d in rows:
+            for row in rows:
+                name, v, d = row[:3]
+                counters = row[3] if len(row) > 3 else None
                 print(f"{name},{v:.4f},{d}")
+                entry = {"name": name, "value": round(v, 6),
+                         "kind": _KINDS.get(name.split("/")[0], "value"),
+                         "derived": d}
+                if counters:
+                    entry["counters"] = counters
+                out_rows.append(entry)
         except Exception:
             traceback.print_exc()
             failed += 1
+    if json_path and out_rows:
+        with open(json_path, "w") as f:
+            json.dump({"schema": 1, "suite": "smoke" if smoke else "full",
+                       "rows": out_rows}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {json_path} ({len(out_rows)} rows)", file=sys.stderr)
     if failed:
         sys.exit(1)
 

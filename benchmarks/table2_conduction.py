@@ -10,16 +10,30 @@ Beyond the paper's balanced stripes, an **imbalanced** section runs an
 uneven bubble tree (groups of 2..12 stripes, node burst hints, skewed
 stripe work) — the §3.3.3 work-stealing scenario.  Rows compare stealing
 off (``bubbles_nosteal``: idle nodes stay idle), stealing with first-touch
-memory (``bubbles``), and stealing + next-touch migration (``steal``).
+memory (``bubbles``), stealing + next-touch migration (``steal``), and the
+cost-aware ``adaptive`` policy (which, with stealing free, must match
+``steal``).
 
-Output CSV: name,us_per_call(speedup),derived
+A **thrash** section runs the thrash-prone tree (24 singleton bubbles + one
+24-thread bubble, small skewed stripes) under a nonzero
+:class:`~repro.core.scheduler.StealCostModel`, so every steal pays a remote
+lock/latency penalty rivalling the stripes' own work.  Here reactive
+stealing thrashes — ``adaptive``'s proactive re-gather + re-spread is the
+row that must win (ISSUE 2 acceptance: >= 1.2x over plain ``steal``).
+
+Output CSV: name,us_per_call(speedup),derived.  Rows carry a counters dict
+(steals, per-level steal histogram, rebalances, cost paid) consumed by
+``run.py --smoke``'s BENCH_smoke.json and rendered per level by
+``render_experiments.py``.
 """
 
 from __future__ import annotations
 
-from repro.core import (BoundPolicy, BubblePolicy, PerCpuPolicy, SimplePolicy,
-                        Simulator, StealPolicy, imbalanced_stripes_workload,
-                        novascale_16, reset_ids, stripes_workload)
+from repro.core import (THRASH_COST, AdaptivePolicy, BoundPolicy,
+                        BubblePolicy, PerCpuPolicy, SimplePolicy, Simulator,
+                        StealPolicy, imbalanced_stripes_workload, novascale_16,
+                        reset_ids, stripes_workload, thrash_stripes_workload)
+from repro.core.trace import Tracer
 
 PAPER = {
     ("conduction", "simple"): 10.58, ("conduction", "bound"): 15.82,
@@ -32,14 +46,31 @@ def _run(policy_cls, mem, group=None, root_fn=None, **kw):
     reset_ids()
     topo = novascale_16()
     pol = policy_cls(topo, **kw)
+    # trace bubble-family runs so steal/rebalance behaviour is reported per
+    # level, not just counted
+    tracer = Tracer(pol.sched) if hasattr(pol, "sched") else None
     root = root_fn() if root_fn else \
         stripes_workload(n_threads=16, work=100.0, group=group)
     sim = Simulator(topo, pol, jitter=0.1, mem_fraction=mem, contention=0.5)
-    return sim.run(root, cycles=8)
+    return sim.run(root, cycles=8), tracer
 
 
-def run(smoke: bool = False) -> list[tuple[str, float, str]]:
-    rows = []
+def _counters(r, tracer) -> dict:
+    c = {"time": round(r.time, 4), "speedup": round(r.speedup, 4),
+         "steals": r.extra.get("steals", 0),
+         "steal_attempts": r.extra.get("steal_attempts", 0),
+         "steal_cost": round(r.extra.get("steal_cost", 0.0), 4),
+         "rebalances": r.extra.get("rebalances", 0),
+         "rebalance_moves": r.extra.get("rebalance_moves", 0),
+         "rebalance_cost": round(r.extra.get("rebalance_cost", 0.0), 4),
+         "data_migrations": r.data_migrations}
+    if tracer is not None:
+        c["steals_by_level"] = tracer.steals_by_level()
+    return c
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    rows: list[tuple] = []
     apps = (("conduction", 0.25),) if smoke else \
         (("conduction", 0.25), ("advection", 0.4))
     for app, mem in apps:
@@ -49,29 +80,49 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
                 ("bound", BoundPolicy, {}, None),
                 ("bubbles", BubblePolicy, {}, 4),
                 ("steal", StealPolicy, {}, 4)):
-            s = _run(cls, mem, group=grp, **kw).speedup
+            r, tracer = _run(cls, mem, group=grp, **kw)
             paper = PAPER.get((app, name))
-            rows.append((f"table2/{app}_{name}", s,
+            rows.append((f"table2/{app}_{name}", r.speedup,
                          f"paper: {paper}" if paper else
                          ("= bubbles on balanced load" if name == "steal"
-                          else "extra baseline")))
+                          else "extra baseline"),
+                         _counters(r, tracer)))
     # -- imbalanced bubble tree: the work-stealing rows ----------------------
+    bubbly = (BubblePolicy, StealPolicy, AdaptivePolicy)
     for name, cls, kw in (
             ("simple", SimplePolicy, {"disorder": 4.0}),
             ("bound", BoundPolicy, {}),
             ("bubbles_nosteal", BubblePolicy, {"steal": False}),
             ("bubbles", BubblePolicy, {}),
-            ("steal", StealPolicy, {})):
-        flat = cls not in (BubblePolicy, StealPolicy)
-        r = _run(cls, 0.25,
-                 root_fn=lambda flat=flat: imbalanced_stripes_workload(
-                     flat=flat), **kw)
+            ("steal", StealPolicy, {}),
+            ("adaptive", AdaptivePolicy, {})):
+        flat = cls not in bubbly
+        r, tracer = _run(cls, 0.25,
+                         root_fn=lambda flat=flat: imbalanced_stripes_workload(
+                             flat=flat), **kw)
         rows.append((f"table2/imbalanced_{name}", r.speedup,
                      f"time={r.time:.0f} steals={r.extra['steals']}"
-                     f" data_migrations={r.data_migrations}"))
+                     f" data_migrations={r.data_migrations}",
+                     _counters(r, tracer)))
+    # -- thrash-prone tree under steal cost: the adaptive rows ---------------
+    for name, cls, kw in (
+            ("bubbles_nosteal", BubblePolicy, {"steal": False}),
+            ("steal", StealPolicy, {"cost_model": THRASH_COST}),
+            ("adaptive", AdaptivePolicy, {"cost_model": THRASH_COST})):
+        flat = cls not in bubbly
+        r, tracer = _run(cls, 0.25,
+                         root_fn=lambda flat=flat: thrash_stripes_workload(
+                             flat=flat), **kw)
+        rows.append((f"table2/thrash_{name}", r.speedup,
+                     f"time={r.time:.0f} steals={r.extra['steals']}"
+                     f" cost={r.extra['steal_cost']:.0f}"
+                     f" rebalances={r.extra['rebalances']}"
+                     f" rebalance_cost={r.extra['rebalance_cost']:.0f}",
+                     _counters(r, tracer)))
     return rows
 
 
 if __name__ == "__main__":
-    for name, v, d in run():
+    for row in run():
+        name, v, d = row[:3]
         print(f"{name},{v:.2f},{d}")

@@ -19,11 +19,12 @@ from .bubble import (Bubble, Task, Thread, balanced_tree, bubble, reset_ids,
 from .topology import (Level, Topology, bi_xeon_ht, from_mesh_axes,
                        novascale_16, numa_4x4_smt, tpu_pod_slice)
 from .runqueues import QueueHierarchy, RunQueue
-from .scheduler import BubbleScheduler
-from .policies import (POLICIES, BoundPolicy, BubblePolicy, PerCpuPolicy,
-                       Policy, SimplePolicy, StealPolicy)
-from .simulator import (SimResult, Simulator, fibonacci_workload,
-                        imbalanced_stripes_workload, stripes_workload)
+from .scheduler import ZERO_COST, BubbleScheduler, StealCostModel
+from .policies import (POLICIES, AdaptivePolicy, BoundPolicy, BubblePolicy,
+                       PerCpuPolicy, Policy, SimplePolicy, StealPolicy)
+from .simulator import (THRASH_COST, SimResult, Simulator,
+                        fibonacci_workload, imbalanced_stripes_workload,
+                        stripes_workload, thrash_stripes_workload)
 from .planner import (Dim, MeshAxis, Plan, plan_bound, plan_bubbles,
                       plan_simple)
 
@@ -32,10 +33,11 @@ __all__ = [
     "reset_ids",
     "Level", "Topology", "novascale_16", "bi_xeon_ht", "numa_4x4_smt",
     "tpu_pod_slice", "from_mesh_axes",
-    "QueueHierarchy", "RunQueue", "BubbleScheduler",
+    "QueueHierarchy", "RunQueue", "BubbleScheduler", "StealCostModel",
+    "ZERO_COST",
     "POLICIES", "Policy", "SimplePolicy", "PerCpuPolicy", "BoundPolicy",
-    "BubblePolicy", "StealPolicy",
+    "BubblePolicy", "StealPolicy", "AdaptivePolicy",
     "Simulator", "SimResult", "stripes_workload", "fibonacci_workload",
-    "imbalanced_stripes_workload",
+    "imbalanced_stripes_workload", "thrash_stripes_workload", "THRASH_COST",
     "Dim", "MeshAxis", "Plan", "plan_bubbles", "plan_simple", "plan_bound",
 ]

@@ -11,6 +11,12 @@
 * :class:`StealPolicy` — bubbles + the hierarchical whole-bubble steal pass
   with next-touch data migration (§3.3.3 stealing made load-bearing): the
   row to compare against ``bubbles`` on *imbalanced* workloads.
+* :class:`AdaptivePolicy` — stealing made cost-aware: monitors a sliding
+  window of steal attempts and, past a threshold, proactively re-gathers
+  and re-spreads the queued work (ARMS-style adaptive re-mapping,
+  arXiv:2112.09509) instead of letting cpus drain the backlog one costed
+  steal at a time — the row to compare against ``steal`` on *thrash-prone*
+  workloads.
 
 Every policy exposes the same small driver interface used by the simulator:
 ``submit`` (initial placement), ``next(cpu)``, ``on_yield`` (thread finished
@@ -21,11 +27,12 @@ workload re-arms them).
 from __future__ import annotations
 
 import hashlib
+from collections import deque
 from typing import Optional
 
 from .bubble import Bubble, Thread
 from .runqueues import QueueHierarchy
-from .scheduler import BubbleScheduler
+from .scheduler import ZERO_COST, BubbleScheduler, StealCostModel
 from .topology import Topology
 
 
@@ -61,6 +68,13 @@ class Policy:
     def lookup_cost(self) -> tuple[int, int]:
         """(total scan steps, total lookups) — Table 1 instrumentation."""
         return (0, 1)
+
+    def consume_cost(self) -> float:
+        """Steal/rebalance penalty (in quanta) accrued since the last call.
+
+        The simulator bills it as a stall on the calling cpu; flat-list
+        policies model no migration cost and return 0."""
+        return 0.0
 
 
 class SimplePolicy(Policy):
@@ -194,10 +208,10 @@ class BubblePolicy(Policy):
     name = "bubbles"
 
     def __init__(self, topo: Topology, *, respect_hints: bool = True,
-                 steal: bool = True):
+                 steal: bool = True, cost_model: StealCostModel = ZERO_COST):
         super().__init__(topo)
         self.sched = BubbleScheduler(topo, respect_hints=respect_hints,
-                                     steal=steal)
+                                     steal=steal, cost_model=cost_model)
         self.root: Optional[Bubble] = None
         self.running: dict[int, Thread] = {}
 
@@ -240,6 +254,9 @@ class BubblePolicy(Policy):
         q = self.sched.queues
         return (q.lookup_steps, max(q.lookups, 1))
 
+    def consume_cost(self) -> float:
+        return self.sched.consume_cost()
+
 
 class StealPolicy(BubblePolicy):
     """Bubbles + hierarchical work stealing + next-touch data migration.
@@ -254,10 +271,130 @@ class StealPolicy(BubblePolicy):
     name = "steal"
     preferred_data_policy = "next_touch"
 
-    def __init__(self, topo: Topology, *, respect_hints: bool = True):
-        super().__init__(topo, respect_hints=respect_hints, steal=True)
+    def __init__(self, topo: Topology, *, respect_hints: bool = True,
+                 cost_model: StealCostModel = ZERO_COST):
+        super().__init__(topo, respect_hints=respect_hints, steal=True,
+                         cost_model=cost_model)
+
+
+class AdaptivePolicy(StealPolicy):
+    """Steal + cost-aware proactive rebalancing (ARMS, arXiv:2112.09509).
+
+    :class:`StealPolicy` reacts to imbalance one steal at a time; under a
+    :class:`~repro.core.scheduler.StealCostModel` each of those migrations
+    pays a remote lock/latency penalty, so on thrash-prone trees (many tiny
+    bubbles, oscillating load) the reactive drain itself becomes the
+    bottleneck.  This policy watches a sliding window of the scheduler's
+    ``steal_attempts``: each ``next()`` call appends the attempts that call
+    needed, and once the window's total crosses ``threshold`` the policy
+    triggers :meth:`~repro.core.scheduler.BubbleScheduler.rebalance` — one
+    bulk re-gather + hierarchical re-spread of every queued task, billed
+    once — instead of letting the remaining idle cpus serially steal.
+
+    The trigger is a cost-benefit test, not a bare counter: a rebalance
+    fires only when the steal penalty actually *paid* recently exceeds
+    what the bulk re-placement itself would cost
+    (``cost_model.rebalance_cost`` over the movable backlog).  Under
+    :data:`~repro.core.scheduler.ZERO_COST` stealing is free, the test
+    never passes, and this policy degrades gracefully into plain
+    :class:`StealPolicy` — cost-driven decisions need a cost model.
+
+    Two triggers fire a rebalance:
+
+    * **in-cycle** — the window's steal attempts cross ``threshold``, the
+      window's paid steal cost exceeds the rebalance cost, and at least
+      ``min_backlog`` movable tasks sit on queues (the gate keeps
+      end-of-cycle idle spin, where every cpu's lookup comes up empty but
+      there is nothing left to move, from billing no-op rebalances);
+    * **at the barrier** — the finished cycle needed ``threshold`` or more
+      steal attempts and paid more steal cost than a re-spread would
+      charge, so the home-list placement the barrier just restored is
+      about to replay the same thrash; re-spread immediately instead of
+      waiting for cpus to go idle (the ARMS "proactive" part).
+
+    Knobs:
+
+    * ``window`` — number of recent scheduler calls monitored;
+    * ``threshold`` — steal attempts (within the window, or per cycle for
+      the barrier trigger) that mean placement is fighting the load;
+    * ``cooldown`` — minimum scheduler calls between in-cycle rebalances
+      (defaults to ``window``), so one spike cannot trigger a storm;
+    * ``min_backlog`` — movable tasks required for an in-cycle rebalance;
+    * ``rebalance_level`` — topology level to re-spread across (default:
+      the level just above the leaves, e.g. NUMA nodes);
+    * ``cost_model`` — the steal/rebalance penalties; the cost weights are
+      what make proactive bulk re-placement beat serial costed steals.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, topo: Topology, *, respect_hints: bool = True,
+                 window: int = 24, threshold: int = 8,
+                 cooldown: Optional[int] = None, min_backlog: int = 4,
+                 rebalance_level: Optional[str] = None,
+                 cost_model: StealCostModel = ZERO_COST):
+        super().__init__(topo, respect_hints=respect_hints,
+                         cost_model=cost_model)
+        self.window = window
+        self.threshold = threshold
+        self.cooldown = window if cooldown is None else cooldown
+        self.min_backlog = min_backlog
+        self.rebalance_level = rebalance_level
+        self._attempts: deque[int] = deque()   # steal attempts per next() call
+        self._costs: deque[float] = deque()    # steal cost paid per next() call
+        self._calls_since_rebalance = self.cooldown   # start armed
+        self._cycle_attempts = 0               # stats marks at the last barrier
+        self._cycle_cost = 0.0
+
+    def _rebalance(self, cpu: int, now: float) -> None:
+        self.sched.rebalance(cpu, now, level=self.rebalance_level)
+        self._attempts.clear()
+        self._costs.clear()
+        self._calls_since_rebalance = 0
+
+    def _worth_it(self, paid: float) -> bool:
+        """Cost-benefit: recent steal spend must beat the re-spread bill.
+
+        ``queued_movable`` counts post-expansion units, so the prospective
+        bill here is exactly what :meth:`BubbleScheduler.rebalance` would
+        charge for the same backlog.  The base-cost screen runs first: the
+        bill is at least ``rebalance_base``, so when the recent spend
+        cannot even cover that (always the case under ZERO_COST) the
+        full-queue backlog walk is skipped entirely."""
+        if paid <= self.sched.cost_model.rebalance_base:
+            return False
+        movable = self.sched.queued_movable(self.rebalance_level)
+        return (movable >= self.min_backlog
+                and paid > self.sched.cost_model.rebalance_cost(movable))
+
+    def next(self, cpu: int, now: float) -> Optional[Thread]:
+        s = self.sched.stats
+        attempts0, cost0 = s.steal_attempts, s.steal_cost
+        t = super().next(cpu, now)
+        self._attempts.append(s.steal_attempts - attempts0)
+        self._costs.append(s.steal_cost - cost0)
+        if len(self._attempts) > self.window:
+            self._attempts.popleft()
+            self._costs.popleft()
+        self._calls_since_rebalance += 1
+        if (self._calls_since_rebalance >= self.cooldown
+                and sum(self._attempts) >= self.threshold
+                and self._worth_it(sum(self._costs))):
+            self._rebalance(cpu, now)
+        return t
+
+    def on_barrier(self, root: Bubble, now: float) -> None:
+        super().on_barrier(root, now)
+        s = self.sched.stats
+        attempts = s.steal_attempts - self._cycle_attempts
+        paid = s.steal_cost - self._cycle_cost
+        self._cycle_attempts, self._cycle_cost = s.steal_attempts, s.steal_cost
+        if attempts >= self.threshold and self._worth_it(paid):
+            # the cycle that just ended thrashed; the barrier restored the
+            # same home-list placement, so re-spread before it replays
+            self._rebalance(0, now)
 
 
 POLICIES = {p.name: p for p in
             (SimplePolicy, PerCpuPolicy, BoundPolicy, BubblePolicy,
-             StealPolicy)}
+             StealPolicy, AdaptivePolicy)}

@@ -42,6 +42,45 @@ from .runqueues import QueueHierarchy, RunQueue
 from .topology import Component, Topology
 
 
+@dataclass(frozen=True)
+class StealCostModel:
+    """The cost side of migration decisions (BubbleSched, arXiv:0706.2069).
+
+    Stealing keeps cpus busy but is not free: the thief takes remote list
+    locks and the loot's threads drag cold caches / remote pages behind
+    them.  Every successful steal charges the thief
+
+        ``lock_penalty + level_penalty * levels_crossed
+                       + thread_penalty * live_threads_moved``
+
+    in simulator quanta (:meth:`Topology.levels_crossed` is the distance).
+    A proactive rebalance (:meth:`BubbleScheduler.rebalance`) charges
+
+        ``rebalance_base + rebalance_per_move * tasks_moved``
+
+    once, to the cpu that triggered it — bulk re-placement amortises the
+    lock/latency cost that serial stealing pays per migration.  The
+    defaults are all zero, so unconfigured schedulers reproduce the PR 1
+    golden traces bit-for-bit.
+    """
+
+    lock_penalty: float = 0.0        # flat cost per successful steal
+    level_penalty: float = 0.0       # per hierarchy level crossed
+    thread_penalty: float = 0.0      # per live thread moved
+    rebalance_base: float = 0.0      # flat cost per proactive rebalance
+    rebalance_per_move: float = 0.0  # per task re-placed by a rebalance
+
+    def steal_cost(self, distance: int, n_threads: int) -> float:
+        return (self.lock_penalty + self.level_penalty * distance +
+                self.thread_penalty * n_threads)
+
+    def rebalance_cost(self, moves: int) -> float:
+        return self.rebalance_base + self.rebalance_per_move * moves
+
+
+ZERO_COST = StealCostModel()
+
+
 @dataclass
 class SchedStats:
     bursts: int = 0
@@ -54,6 +93,17 @@ class SchedStats:
     stolen_work: float = 0.0     # remaining work moved by steals
     migrations: int = 0          # thread ran on a different cpu than last time
     schedules: int = 0
+    # -- cost accounting (StealCostModel) --
+    steal_cost: float = 0.0      # total lock/latency penalty paid for steals
+    steal_distance: int = 0      # total levels crossed by successful steals
+    stolen_threads: int = 0      # live threads moved by successful steals
+    rebalances: int = 0          # proactive re-spread events
+    rebalance_moves: int = 0     # tasks moved by rebalances
+    rebalance_cost: float = 0.0  # penalty paid for rebalances
+    last_steal_distance: int = 0  # distance of the latest steal (tracing)
+    last_steal_cost: float = 0.0  # cost of the latest steal (tracing)
+    last_rebalance_moves: int = 0  # moves of the latest rebalance (tracing)
+    last_rebalance_cost: float = 0.0  # billed cost of the latest rebalance
 
 
 class BubbleScheduler:
@@ -67,14 +117,25 @@ class BubbleScheduler:
     """
 
     def __init__(self, topo: Topology, *, respect_hints: bool = True,
-                 steal: bool = True):
+                 steal: bool = True, cost_model: StealCostModel = ZERO_COST):
         self.topo = topo
         self.queues = QueueHierarchy(topo)
         self.respect_hints = respect_hints
         self.steal = steal                           # idle cpus may steal
+        self.cost_model = cost_model                 # lock/latency penalties
         self.stats = SchedStats()
         self.last_queue: Optional[RunQueue] = None   # lock-domain of last pick
         self.last_steal: Optional[tuple[RunQueue, Task]] = None  # (victim, loot)
+        self._unbilled = 0.0       # cost accrued since the last consume_cost()
+
+    def consume_cost(self) -> float:
+        """Steal/rebalance penalty accrued since the last call, in quanta.
+
+        The simulator bills this as a stall on the cpu whose scheduler call
+        accrued it — that is how steal-happy policies *pay* for remote
+        migrations instead of merely counting them."""
+        c, self._unbilled = self._unbilled, 0.0
+        return c
 
     # -- application API (paper Figure 4) ------------------------------------
     def wake_up_bubble(self, b: Bubble, at: Optional[RunQueue] = None) -> None:
@@ -213,14 +274,134 @@ class BubbleScheduler:
             self.stats.stolen_work += work
             if isinstance(task, Bubble):
                 self.stats.bubble_steals += 1
+                n_moved = 0
                 for th in task.threads():
                     th.stolen = True
+                    if th.remaining > 0:
+                        n_moved += 1
             else:
                 self.stats.thread_steals += 1
                 task.stolen = True
+                n_moved = 1
+            dist = self.topo.levels_crossed(cpu, victim.comp)
+            cost = self.cost_model.steal_cost(dist, n_moved)
+            self.stats.stolen_threads += n_moved
+            self.stats.steal_distance += dist
+            self.stats.steal_cost += cost
+            self.stats.last_steal_distance = dist
+            self.stats.last_steal_cost = cost
+            self._unbilled += cost
             self.last_steal = (victim, task)
             return victim, task
         return None
+
+    # -- proactive rebalancing (ARMS-style re-mapping, arXiv:2112.09509) ------
+    def _resolve_spread_level(self, level: Optional[str]) -> str:
+        if level is not None:
+            return level
+        return self.topo.levels[max(0, len(self.topo.levels) - 2)].name
+
+    def _gatherable(self):
+        """(queue, task) for every task a rebalance would move: runnable
+        threads and closed non-empty bubbles on any list (burst husks stay
+        put for regeneration)."""
+        for q in self.queues.queues.values():
+            for t in list(q.tasks):
+                if isinstance(t, Bubble):
+                    if t.burst or t.done():
+                        continue
+                elif t.remaining <= 0:
+                    continue
+                yield q, t
+
+    @staticmethod
+    def _expand_unit(t: Task, cap: int):
+        """Split units too wide for one target component (hierarchical
+        placement): recurse into the bubble's children until each piece
+        fits."""
+        if isinstance(t, Bubble) and t.total_width() > cap:
+            for c in t.children:
+                if isinstance(c, Bubble):
+                    if not c.done():
+                        yield from BubbleScheduler._expand_unit(c, cap)
+                elif c.remaining > 0:
+                    yield c
+        else:
+            yield t
+
+    def queued_movable(self, level: Optional[str] = None) -> int:
+        """Units a :meth:`rebalance` across ``level`` would re-place right
+        now — counted *after* over-wide bubbles are expanded, so it equals
+        the ``moves`` the rebalance would bill.  The adaptive policy's
+        cost-benefit test uses this both as its backlog gate (an
+        end-of-cycle steal-attempt spike over drained queues cannot
+        trigger a rebalance that moves nothing but still bills its base
+        cost) and to price the prospective re-spread accurately."""
+        cap = self._capacity(
+            self.topo.components(self._resolve_spread_level(level))[0])
+        return sum(1 for _, t in self._gatherable()
+                   for _ in self._expand_unit(t, cap))
+
+    def rebalance(self, cpu: int, now: float = 0.0,
+                  level: Optional[str] = None) -> int:
+        """Re-gather every queued task and re-spread the lot hierarchically.
+
+        Serial stealing drains an overloaded list one migration at a time,
+        paying the remote lock/latency cost per steal; when steal traffic
+        spikes it is cheaper to re-place the whole backlog at once.  This
+        gathers all runnable tasks off every list (closed bubbles move as
+        whole affinity groups; burst bubbles' scattered threads move
+        individually — their husks stay put for regeneration) and deals
+        them across the components of ``level`` (default: the level just
+        above the leaves, e.g. NUMA nodes) longest-processing-time-first,
+        so each component's list receives a near-equal share of remaining
+        work and subsequent lookups succeed locally instead of stealing.
+
+        Placement is *hierarchical*: a gathered bubble wider than one
+        component of the target level cannot fit anywhere and would flood
+        whichever list received it, so it is expanded into its children
+        (recursively, until each unit fits) and the pieces are dealt out
+        individually — balance bought by giving up that bubble's top-level
+        affinity grouping, the paper's affinity/balance trade made
+        explicit.  Bubbles that fit stay whole.
+
+        Threads landing outside the subtree of their last cpu are flagged
+        ``stolen`` so the next-touch data policy re-homes their pages, the
+        same as a steal would.  Returns the number of tasks re-placed; the
+        triggering cpu is billed ``cost_model.rebalance_cost(moves)``.
+        """
+        comps = self.topo.components(self._resolve_spread_level(level))
+        cap = self._capacity(comps[0])
+        gathered: list[Task] = []
+        for q, t in self._gatherable():
+            q.remove(t)
+            gathered.append(t)
+        units = [u for t in gathered for u in self._expand_unit(t, cap)]
+
+        def weight(t: Task) -> float:
+            return t.total_work() if isinstance(t, Bubble) else t.remaining
+
+        units.sort(key=weight, reverse=True)          # LPT; ties keep order
+        loads = [0.0] * len(comps)
+        for u in units:
+            i = min(range(len(comps)), key=loads.__getitem__)
+            comp = comps[i]
+            self.queues.queue_of(comp).push(u)
+            loads[i] += weight(u)
+            threads = u.threads() if isinstance(u, Bubble) else (u,)
+            for th in threads:
+                if (th.last_cpu is not None
+                        and comp not in self.topo.cpus[th.last_cpu].path()):
+                    th.stolen = True          # next-touch re-homes its data
+        moves = len(units)
+        cost = self.cost_model.rebalance_cost(moves)
+        self.stats.rebalances += 1
+        self.stats.rebalance_moves += moves
+        self.stats.rebalance_cost += cost
+        self.stats.last_rebalance_moves = moves
+        self.stats.last_rebalance_cost = cost
+        self._unbilled += cost
+        return moves
 
     @staticmethod
     def _bfs(comp: Component):

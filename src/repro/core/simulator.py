@@ -34,6 +34,7 @@ from typing import Optional
 
 from .bubble import Bubble, Thread, bubble, thread
 from .policies import Policy, _h
+from .scheduler import StealCostModel
 from .topology import Topology
 
 
@@ -131,7 +132,16 @@ class Simulator:
                 cur = running[cpu]
                 if cur is None:
                     cur = self.policy.next(cpu, now)
+                    # steal/rebalance penalty accrued by that scheduler call
+                    # (StealCostModel): the *thief* stalls for the remote
+                    # lock/latency it caused — migration decisions now have
+                    # a cost side, not just a counter.  Applied on top of
+                    # (never clobbered by) the lock-contention stall below.
+                    cost = self.policy.consume_cost()
                     if cur is None:
+                        if cost:
+                            stall[cpu] += cost
+                            idle = False
                         continue
                     if cur.remaining <= 0:          # stale entry: drop
                         self.policy.on_yield(cpu, cur, True, now)
@@ -142,6 +152,8 @@ class Simulator:
                         prev = tick_picks.get(dom, 0)
                         tick_picks[dom] = prev + 1
                         stall[cpu] = self.contention * prev
+                    if cost:
+                        stall[cpu] += cost
                 idle = False
                 cur.remaining -= self.quantum * self._speed(cpu, cur)
                 if cur.remaining <= 0:
@@ -165,7 +177,7 @@ class Simulator:
         now, total = 0.0, 0.0
         mig0 = self._policy_migrations()
         dmig0 = self.data_migrations
-        steals0 = self._policy_steals()
+        c0 = self._sched_counters()
         for cyc in range(cycles):
             if cyc > 0:
                 for t in root.threads():
@@ -178,6 +190,7 @@ class Simulator:
             total += elapsed
             now += elapsed
         steps, lookups = self.policy.lookup_cost()
+        c1 = self._sched_counters()
         return SimResult(
             policy=self.policy.name, time=total, busy=total, ideal=ideal,
             migrations=self._policy_migrations() - mig0,
@@ -185,12 +198,20 @@ class Simulator:
             data_migrations=self.data_migrations - dmig0,
             extra={"n_cpus": self.topo.n_cpus, "homes": dict(self.homes),
                    "data_policy": self.data_policy,
-                   "steals": self._policy_steals() - steals0},
+                   **{k: c1[k] - c0[k] for k in c1}},
         )
 
-    def _policy_steals(self) -> int:
+    # per-run deltas of the scheduler's steal/rebalance accounting, so a
+    # reused Simulator reports each run's own activity, not cumulatives
+    _SCHED_COUNTERS = ("steals", "steal_attempts", "steal_distance",
+                       "steal_cost", "rebalances", "rebalance_moves",
+                       "rebalance_cost")
+
+    def _sched_counters(self) -> dict:
         sched = getattr(self.policy, "sched", None)
-        return sched.stats.steals if sched else 0
+        if sched is None:
+            return {k: 0 for k in self._SCHED_COUNTERS}
+        return {k: getattr(sched.stats, k) for k in self._SCHED_COUNTERS}
 
     def _policy_migrations(self) -> int:
         sched = getattr(self.policy, "sched", None)
@@ -265,6 +286,42 @@ def imbalanced_stripes_workload(work: float = 100.0,
     return stripes_workload(
         n_threads=32, work=work,
         groups=None if flat else [2, 2, 4, 4, 8, 12],
+        skew=1.0, burst_level=None if flat else "node")
+
+
+# The thrash experiments' calibrated price list (one definition, shared by
+# benchmarks/table2_conduction.py and the acceptance tests so both always
+# measure the same scenario): a cross-node thread steal costs
+# lock 2 + 2 levels * 4 + 1 thread * 1 = 11 quanta — page-migration scale,
+# rivalling one of `thrash_stripes_workload`'s tiny stripes — while a bulk
+# rebalance pays one base charge plus a descriptor-move fee per task (the
+# lock traffic is amortised).
+THRASH_COST = StealCostModel(lock_penalty=2.0, level_penalty=4.0,
+                             thread_penalty=1.0, rebalance_base=2.0,
+                             rebalance_per_move=0.05)
+
+
+def thrash_stripes_workload(work: float = 6.0, flat: bool = False) -> Bubble:
+    """The thrash-prone tree for the adaptive-rebalancing experiments: many
+    tiny bubbles plus one fat group, all node-hinted, over skewed stripes.
+
+    24 singleton bubbles and one 24-thread bubble (48 stripes of small
+    work, skew=1.0): the fat group bursts on one node and floods its list
+    while the singletons finish early, so idle cpus drain the backlog one
+    tiny steal at a time — and the per-cycle jitter re-skews the load
+    every barrier, so the drain repeats (oscillating load).  Under a
+    :class:`~repro.core.scheduler.StealCostModel` each of those many small
+    migrations pays the remote lock/latency penalty, which rivals the
+    stripes' own work; one proactive rebalance moves the same backlog for
+    one bulk charge.  Where :func:`imbalanced_stripes_workload` rewards
+    stealing *at all*, this tree is built to reward stealing *cheaply*.
+
+    ``flat=True`` builds the same 48 skewed stripes without the bubble
+    structure (the fair tree for flat-list policies).
+    """
+    return stripes_workload(
+        n_threads=48, work=work,
+        groups=None if flat else [1] * 24 + [24],
         skew=1.0, burst_level=None if flat else "node")
 
 

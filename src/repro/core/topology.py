@@ -134,6 +134,28 @@ class Topology:
                 return a.level.factor
         return 1.0
 
+    def levels_crossed(self, cpu: int, comp: Component) -> int:
+        """Hierarchy levels a migration from ``comp``'s list crosses to
+        reach ``cpu``.
+
+        0 when the list covers the cpu (pulling from your own covering
+        chain is free); otherwise the number of tree levels between the
+        cpu's leaf and the deepest ancestor it shares with ``comp`` — 1
+        for a sibling cpu's list, 2 across NUMA nodes on the NovaScale.
+        The steal-cost model scales its latency penalty by this distance:
+        remote lock traffic and cache/page movement grow with every level
+        crossed (BubbleSched's migration-cost argument, arXiv:0706.2069).
+        """
+        path = self.cpus[cpu].path()
+        if comp in path:
+            return 0
+        shared = 0
+        for a, b in zip(path, comp.path()):
+            if a is not b:
+                break
+            shared += 1
+        return len(path) - shared
+
     def describe(self) -> str:
         parts = [f"{l.name}(x{l.fanout}" +
                  (f", factor={l.factor}" if l.factor != 1.0 else "") + ")"

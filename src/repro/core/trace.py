@@ -26,9 +26,11 @@ from .scheduler import BubbleScheduler
 class Event:
     t: float
     cpu: int
-    kind: str          # schedule | burst | sink | steal | regenerate
+    kind: str          # schedule | burst | sink | steal | rebalance | regenerate
     task: str
     level: Optional[str] = None
+    distance: Optional[int] = None   # steal: levels crossed to the victim
+    cost: float = 0.0                # steal/rebalance: penalty billed (quanta)
 
 
 class Tracer:
@@ -42,6 +44,7 @@ class Tracer:
         orig_next = sched.next_thread
         orig_burst = sched._burst
         orig_regen = sched.regenerate
+        orig_rebalance = sched.rebalance
         tracer = self
 
         def next_thread(cpu, now=0.0, allow_steal=True):
@@ -54,7 +57,9 @@ class Tracer:
                 tracer.events.append(Event(
                     now, cpu, "steal",
                     loot.name if loot is not None else "?",
-                    vq.level if vq is not None else None))
+                    vq.level if vq is not None else None,
+                    distance=sched.stats.last_steal_distance,
+                    cost=sched.stats.last_steal_cost))
             if sched.stats.sinks > sinks0:
                 lq = sched.last_queue
                 tracer.events.append(Event(
@@ -76,9 +81,17 @@ class Tracer:
             tracer.events.append(Event(0.0, -1, "regenerate", b.name))
             return orig_regen(b, running)
 
+        def rebalance(cpu, now=0.0, level=None):
+            moves = orig_rebalance(cpu, now, level)
+            tracer.events.append(Event(
+                now, cpu, "rebalance", f"moves={moves}", level,
+                cost=sched.stats.last_rebalance_cost))
+            return moves
+
         sched.next_thread = next_thread          # type: ignore
         sched._burst = _burst                    # type: ignore
         sched.regenerate = regenerate            # type: ignore
+        sched.rebalance = rebalance              # type: ignore
 
     # -- reports --------------------------------------------------------------
     def schedules(self) -> list[Event]:
@@ -90,6 +103,27 @@ class Tracer:
         invariant (stolen bubbles should come from the nearest level that
         had any)."""
         return [e for e in self.events if e.kind == "steal"]
+
+    def rebalances(self) -> list[Event]:
+        """Proactive-rebalance events: ``task`` carries the move count,
+        ``cost`` the bulk penalty billed to the triggering cpu."""
+        return [e for e in self.events if e.kind == "rebalance"]
+
+    def steals_by_level(self) -> dict[str, int]:
+        """Steal counts per victim-queue level — the per-level view of
+        steal traffic that ``SchedStats`` only totals.  Mostly-local
+        levels mean the affinity invariant is holding; a fat tail at
+        outer levels is the steal-thrash signature the adaptive policy's
+        window watches for."""
+        hist: dict[str, int] = defaultdict(int)
+        for e in self.steals():
+            hist[e.level or "?"] += 1
+        return dict(hist)
+
+    def steal_cost_paid(self) -> float:
+        """Total steal + rebalance penalty recorded in the event stream."""
+        return sum(e.cost for e in self.events
+                   if e.kind in ("steal", "rebalance"))
 
     def timeline(self, width: int = 64) -> str:
         """Per-cpu lane of scheduled task initials over event order."""

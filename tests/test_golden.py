@@ -12,7 +12,13 @@ To regenerate after an *intentional* behaviour change:
 
     PYTHONPATH=src python tests/test_golden.py
 
-and paste the printed dict over ``GOLDEN``.
+and paste the printed dict over ``GOLDEN``.  CI's golden-drift job runs
+
+    PYTHONPATH=src python tests/test_golden.py --check
+
+which regenerates every snapshot and fails (exit 1, printing the drifted
+entries) if any differs from the committed dict — catching nondeterminism
+or accidental behaviour changes sneaking into the scheduler.
 """
 
 import pytest
@@ -25,7 +31,7 @@ BALANCED = dict(n_threads=16, work=50.0, group=4)
 
 # bubble-family policies see the grouped/bubbled tree; flat-list policies
 # get the flat equivalent (same stripes, same work)
-BUBBLY = ("bubbles", "steal")
+BUBBLY = ("bubbles", "steal", "adaptive")
 
 
 def _workload(case: str, policy: str):
@@ -82,6 +88,17 @@ GOLDEN = {
     ('stripes_bal', 'steal'): {'time': 160.0, 'migrations': 0,
                                'data_migrations': 0, 'steals': 0,
                                'lookup_steps': 3.0},
+    # adaptive under ZERO_COST degrades into plain steal (the cost-benefit
+    # trigger never fires when stealing is free) — same traces as 'steal'
+    ('stripes_bal', 'adaptive'): {'time': 160.0, 'migrations': 0,
+                                  'data_migrations': 0, 'steals': 0,
+                                  'lookup_steps': 3.0},
+    ('stripes_imb', 'adaptive'): {'time': 484.0, 'migrations': 18,
+                                  'data_migrations': 11, 'steals': 24,
+                                  'lookup_steps': 3.0},
+    ('fib', 'adaptive'): {'time': 22.0, 'migrations': 0,
+                          'data_migrations': 0, 'steals': 0,
+                          'lookup_steps': 3.0},
     ('stripes_imb', 'bound'): {'time': 525.0, 'migrations': 0,
                                'data_migrations': 0, 'steals': 0,
                                'lookup_steps': 0.0},
@@ -136,8 +153,45 @@ def generate() -> dict:
     return out
 
 
+def format_golden(snapshots: dict) -> str:
+    lines = ["GOLDEN = {"]
+    lines += [f"    {k!r}: {v!r}," for k, v in snapshots.items()]
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def check_drift(out_path=None) -> int:
+    """Regenerate all snapshots (once); report any that differ from GOLDEN.
+
+    ``out_path`` additionally writes the regenerated dict there — CI
+    uploads it as an artifact so a failing run hands you the paste-ready
+    replacement without a second generation pass."""
+    regen = generate()
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(format_golden(regen) + "\n")
+    drifted = {k: (GOLDEN.get(k), v) for k, v in regen.items()
+               if GOLDEN.get(k) != v}
+    missing = sorted(k for k in GOLDEN if k not in regen)
+    if not drifted and not missing:
+        print(f"golden traces stable: {len(regen)} snapshots match")
+        return 0
+    for k, (want, got) in sorted(drifted.items()):
+        print(f"DRIFT {k}:\n  committed:   {want!r}\n  regenerated: {got!r}")
+    for k in missing:
+        print(f"MISSING {k}: committed but no longer generated")
+    print(f"{len(drifted)} drifted, {len(missing)} missing — if intentional, "
+          "regenerate with `PYTHONPATH=src python tests/test_golden.py` and "
+          "paste over GOLDEN")
+    return 1
+
+
 if __name__ == "__main__":
-    print("GOLDEN = {")
-    for k, v in generate().items():
-        print(f"    {k!r}: {v!r},")
-    print("}")
+    import sys
+    argv = sys.argv[1:]
+    if "--check" in argv:
+        out = None
+        if "--out" in argv:
+            out = argv[argv.index("--out") + 1]
+        sys.exit(check_drift(out))
+    print(format_golden(generate()))
