@@ -9,6 +9,8 @@
 #                     writes machine-readable BENCH_smoke.json
 #   make bench-gate   bench-smoke + regression check against the committed
 #                     benchmarks/baseline_smoke.json (>10% speedup drop fails)
+#   make serve-gate   stub-model serving-gang benchmark alone (seconds, no
+#                     jax) gated against the serve/ baseline rows
 #   make golden-check regenerate the golden traces and fail on any drift
 #   make bench        the full paper tables (slow: includes wall-clock
 #                     Table 1 and the roofline dry-run)
@@ -16,7 +18,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke bench-gate golden-check bench
+.PHONY: test lint bench-smoke bench-gate serve-gate golden-check bench
 
 # PYTEST_ARGS lets CI trim the run (e.g. deselect the 7-minute ep_a2a
 # compile test on slow shared runners) without changing the local gate
@@ -31,6 +33,10 @@ bench-smoke:
 
 bench-gate: bench-smoke
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_smoke.json
+
+serve-gate:
+	$(PYTHON) benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
+	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_serve.json --prefix serve/
 
 # GOLDEN_OUT=path additionally writes the regenerated dict there (CI
 # uploads it as the paste-ready artifact on drift)

@@ -3,9 +3,14 @@
 Usage::
 
     python benchmarks/check_regression.py BASELINE.json CURRENT.json \
-        [--tolerance 0.10]
+        [--tolerance 0.10] [--prefix table2/]
 
-Gates on ``kind == "speedup"`` rows (Table 2): the current speedup must be
+``--prefix`` restricts the gate to rows whose name starts with the given
+prefix — for partial runs (e.g. ``serve_gangs.py --smoke`` writes only
+``serve/`` rows; gating the full baseline against it would flag every
+other row as missing).
+
+Gates on ``kind == "speedup"`` rows (Table 2 + serving): the current speedup must be
 at least ``baseline * (1 - tolerance)``.  Gain-% and wall-clock rows are
 reported but not gated — speedups are the paper's headline metric and are
 fully deterministic in the simulator, so a >10% drop is a real scheduling
@@ -35,6 +40,7 @@ def load_rows(path: str) -> dict[str, dict]:
 
 def main(argv: list[str]) -> int:
     tolerance = 0.10
+    prefix = ""
     args = []
     i = 0
     while i < len(argv):
@@ -47,6 +53,13 @@ def main(argv: list[str]) -> int:
             except ValueError:
                 print(f"error: --tolerance needs a number, got {argv[i + 1]!r}")
                 return 2
+            i += 2
+            continue
+        if argv[i] == "--prefix":
+            if i + 1 >= len(argv):
+                print("error: --prefix needs a value")
+                return 2
+            prefix = argv[i + 1]
             i += 2
             continue
         if argv[i].startswith("--"):
@@ -66,7 +79,7 @@ def main(argv: list[str]) -> int:
 
     failures, checked = [], 0
     for name, brow in sorted(base.items()):
-        if brow.get("kind") != "speedup":
+        if brow.get("kind") != "speedup" or not name.startswith(prefix):
             continue
         crow = cur.get(name)
         if crow is None:
@@ -84,7 +97,7 @@ def main(argv: list[str]) -> int:
                 f"({(1 - crow['value'] / brow['value']) * 100:.1f}% below "
                 f"baseline {brow['value']:.4f})")
     for name in sorted(set(cur) - set(base)):
-        if cur[name].get("kind") == "speedup":
+        if cur[name].get("kind") == "speedup" and name.startswith(prefix):
             print(f"new  {name:40s} cur={cur[name]['value']:8.4f} "
                   "(ungated; refresh baseline to gate)")
 

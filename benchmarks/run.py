@@ -5,10 +5,11 @@ us/call for Table 1, speedup for Table 2, gain-% for Fig 5, roofline step
 ms for the dry-run table).
 
 ``--smoke`` runs a seconds-scale subset (conduction-only Table 2 with the
-imbalanced + thrash stealing sections, small Fig 5 sizes, no wall-clock
-Table 1 / roofline) — the CI sanity target — and writes a machine-readable
-``BENCH_smoke.json`` (override the path with ``--json PATH``; pass
-``--json`` in non-smoke mode to capture the full run).  Schema::
+imbalanced + thrash stealing sections, small Fig 5 sizes, the stub-model
+serving-gang rows, no wall-clock Table 1 / roofline) — the CI sanity
+target — and writes a machine-readable ``BENCH_smoke.json`` (override the
+path with ``--json PATH``; pass ``--json`` in non-smoke mode to capture
+the full run).  Schema::
 
     {"schema": 1, "suite": "smoke"|"full",
      "rows": [{"name": "table2/thrash_adaptive", "value": 10.26,
@@ -38,7 +39,7 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 # value unit per benchmark module (JSON row "kind")
 _KINDS = {"table1": "us_per_call", "table2": "speedup", "fig5": "gain_pct",
-          "roofline": "step_ms"}
+          "roofline": "step_ms", "serve": "speedup"}
 
 
 def _json_path(argv: list[str], smoke: bool):
@@ -54,13 +55,14 @@ def main() -> None:
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     json_path = _json_path(argv, smoke)
-    from benchmarks import fig5_fibonacci, table2_conduction
+    from benchmarks import fig5_fibonacci, serve_gangs, table2_conduction
 
     if smoke:
-        mods = [table2_conduction, fig5_fibonacci]
+        mods = [table2_conduction, fig5_fibonacci, serve_gangs]
     else:
         from benchmarks import roofline, table1_cost
-        mods = [table1_cost, table2_conduction, fig5_fibonacci, roofline]
+        mods = [table1_cost, table2_conduction, fig5_fibonacci, roofline,
+                serve_gangs]
 
     failed = 0
     out_rows = []

@@ -1,0 +1,163 @@
+"""Serving-engine gang benchmark: the runtime layer vs plain admission.
+
+Two sections, both on the deterministic stub model (``StubModelBackend``:
+no jit compile — the scheduler stack is the system under test, the model is
+a hash chain whose output detects any KV mishandling):
+
+* **skewed** — one fat shared-prefix gang plus a handful of small gangs and
+  lone requests with mixed SLA priorities.  The fat gang bursts onto one KV
+  page group and floods it; plain admission leaves the other page group's
+  slots idle once their small gangs finish.  The runtime-backed engine
+  (steal-driven admission + next-touch KV re-homing + queue-depth
+  rebalance) must complete the same request set in measurably fewer engine
+  steps — ``serve/skewed_steal_speedup`` is the gated row (acceptance:
+  >= 1.2x).
+* **churn** — many tiny gangs with periodic gang regeneration
+  (client backpressure), exercising the KV park / batched-splice path under
+  migration: every interrupted request resumes its exact continuation
+  (asserted), and the counters prove steals, KV migrations, and rebalances
+  actually fired.
+
+Rows are schema-1 (see ``benchmarks/run.py``) with a ``counters`` dict; the
+standalone entry point merges them into ``BENCH_smoke.json`` so the
+``check_regression.py`` gate covers serving throughput too::
+
+    python benchmarks/serve_gangs.py --smoke            # writes/merges JSON
+    python benchmarks/check_regression.py benchmarks/baseline_smoke.json \
+        BENCH_smoke.json --prefix serve/
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+import numpy as np
+
+from repro.serving import ServingEngine, StubModelBackend
+
+N_SLOTS = 8          # 2 KV page groups x 4 slots
+NEW_TOKENS = 12
+
+# (gang, n_requests, prio): one fat gang, small gangs, lone requests.  The
+# fat gang is wider than a page group's slot count, so its backlog pins one
+# page while the other drains — only steal/rebalance keep both busy.
+SKEWED = [("fat", 16, 0), ("a", 2, 2), ("b", 1, 1), (None, 2, 1)]
+
+CHURN = [(f"g{i}", 2, i % 3) for i in range(8)]       # 16 requests, 8 gangs
+
+
+def _submit(eng: ServingEngine, spec) -> int:
+    rng = np.random.default_rng(0)
+    n = 0
+    for gang, count, prio in spec:
+        for _ in range(count):
+            eng.submit(rng.integers(1, 250, 8), NEW_TOKENS,
+                       prio=prio, gang=gang)
+            n += 1
+    return n
+
+
+def _engine(mode: str) -> ServingEngine:
+    return ServingEngine(None, None, n_slots=N_SLOTS,
+                         backend=StubModelBackend(), mode=mode)
+
+
+def _run(mode: str, spec, regen_every: int = 0) -> ServingEngine:
+    eng = _engine(mode)
+    n = _submit(eng, spec)
+    gangs = [g for g, _, _ in spec if g is not None]
+    steps = 0
+    while not eng._drained() and steps < 5000:
+        eng.step()
+        steps += 1
+        if regen_every and steps % regen_every == 0:
+            # rolling backpressure: park whichever of these gangs is in
+            # the slots right now (deterministic round-robin)
+            eng.regenerate_gang(gangs[(steps // regen_every) % len(gangs)])
+    assert len(eng.completed) == n, (mode, len(eng.completed), n)
+    return eng
+
+
+def _streams(eng: ServingEngine) -> dict:
+    return {r.rid: tuple(r.out_tokens) for r in eng.completed}
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    rows: list[tuple] = []
+
+    # -- skewed gangs: the steal/rebalance win -------------------------------
+    base = _run("admission", SKEWED)
+    fast = _run("runtime", SKEWED)
+    # scheduling must never change results: same streams in both modes
+    assert _streams(base) == _streams(fast), "mode changed decode output"
+    speedup = base.steps / fast.steps
+    c = fast.counters()
+    c["steps_admission"] = base.steps
+    rows.append((
+        "serve/skewed_steal_speedup", speedup,
+        f"steps {base.steps}->{fast.steps} steals={c['steals']}"
+        f" rebalances={c['rebalances']} kv_migrations={c['kv_migrations']}",
+        c))
+
+    # -- gang churn: regeneration + KV park/splice under migration -----------
+    base = _run("admission", CHURN, regen_every=4)
+    fast = _run("runtime", CHURN, regen_every=4)
+    uninterrupted = _run("runtime", CHURN)
+    assert _streams(fast) == _streams(uninterrupted), \
+        "regeneration/migration changed decode output"
+    c = fast.counters()
+    c["steps_admission"] = base.steps
+    rows.append((
+        "serve/churn_regen_speedup", base.steps / fast.steps,
+        f"steps {base.steps}->{fast.steps} kv_parks={c['kv_parks']}"
+        f" kv_splices={c['kv_splices']} data_migrations="
+        f"{c['data_migrations']}",
+        c))
+    return rows
+
+
+def merge_into_json(rows: list[tuple], path: str) -> None:
+    """Merge serve/* rows into a schema-1 BENCH json (replacing previous
+    serve rows, preserving everything else)."""
+    doc = {"schema": 1, "suite": "smoke", "rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc.get("schema") == 1, doc.get("schema")
+        doc["rows"] = [r for r in doc["rows"]
+                       if not r["name"].startswith("serve/")]
+    for name, v, d, counters in rows:
+        doc["rows"].append({"name": name, "value": round(v, 6),
+                            "kind": "speedup", "derived": d,
+                            "counters": counters})
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# merged {len(rows)} serve rows into {path}", file=sys.stderr)
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        json_path = argv[i + 1] if i + 1 < len(argv) and \
+            not argv[i + 1].startswith("-") else "BENCH_smoke.json"
+    elif smoke:
+        json_path = "BENCH_smoke.json"
+    rows = run(smoke=smoke)
+    for name, v, d, _ in rows:
+        print(f"{name},{v:.4f},{d}")
+    if json_path:
+        merge_into_json(rows, json_path)
+
+
+if __name__ == "__main__":
+    main()

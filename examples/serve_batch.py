@@ -1,10 +1,13 @@
 """Batched serving with bubble gang scheduling + regeneration.
 
-Demonstrates the serving engine on a reduced config:
+Demonstrates the runtime-backed serving engine on a reduced config:
 * SLA priorities (paper §3.3.2: a processor takes the highest-priority
   task even if less-prioritised ones are more local),
 * gangs (shared-prefix request groups co-scheduled like Figure 1),
-* regeneration of a stalled gang (paper §3.3.3).
+* regeneration of a stalled gang (paper §3.3.3) — its per-slot KV is
+  parked and restored by the batched next-touch splice on re-admission,
+* steal-driven admission + queue-depth rebalance (the SchedulerRuntime
+  layer shared with the discrete simulator).
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
@@ -34,7 +37,15 @@ def main():
     for i in range(12):
         prompt = rng.integers(1, cfg.vocab, 12)
         gang = f"prefix{i % 2}" if i < 8 else None
-        rid = eng.submit(prompt, max_new_tokens=6, prio=i % 3, gang=gang)
+        eng.submit(prompt, max_new_tokens=6, prio=i % 3, gang=gang)
+
+    # backpressure on one gang mid-decode: its requests are pulled out (KV
+    # parked), re-queued as a closed bubble, and resume later via the
+    # batched splice — the serving next-touch path
+    for _ in range(6):
+        eng.step()
+    pulled = eng.regenerate_gang("prefix1")
+    print(f"regenerated gang prefix1: {pulled} requests parked")
 
     t0 = time.time()
     done = eng.run(max_steps=600)
@@ -47,8 +58,9 @@ def main():
           f"{eng.steps} engine steps, {toks/max(dt,1e-9):.1f} tok/s")
     for p in sorted(by_prio, reverse=True):
         print(f"  prio {p}: completion ranks {by_prio[p]}")
-    print("scheduler stats:", eng.sched.stats)
+    print("engine counters:", eng.counters())
     assert len(done) == 12
+    assert pulled > 0 and eng.stats.kv_parks == pulled
 
 
 if __name__ == "__main__":

@@ -9,6 +9,9 @@ Public surface:
   + the hierarchical whole-bubble steal pass)
 * :mod:`repro.core.policies` — simple / percpu / bound / bubbles / steal
   strategies (``steal`` = bubbles + work stealing + next-touch migration)
+* :mod:`repro.core.runtime` — the shared scheduling-decision loop
+  (acquire/bill-cost, first/next-touch data policy, cost-benefit rebalance
+  trigger) driven by both the simulator and the serving engine
 * :mod:`repro.core.simulator` — discrete-event NUMA simulator (paper repro;
   first-touch and next-touch data-homing policies)
 * :mod:`repro.core.planner` — bubble-tree → mesh placement (JAX sharding)
@@ -20,6 +23,7 @@ from .topology import (Level, Topology, bi_xeon_ht, from_mesh_axes,
                        novascale_16, numa_4x4_smt, tpu_pod_slice)
 from .runqueues import QueueHierarchy, RunQueue
 from .scheduler import ZERO_COST, BubbleScheduler, StealCostModel
+from .runtime import SchedulerRuntime, rebalance_worth_it
 from .policies import (POLICIES, AdaptivePolicy, BoundPolicy, BubblePolicy,
                        PerCpuPolicy, Policy, SimplePolicy, StealPolicy)
 from .simulator import (THRASH_COST, SimResult, Simulator,
@@ -34,7 +38,7 @@ __all__ = [
     "Level", "Topology", "novascale_16", "bi_xeon_ht", "numa_4x4_smt",
     "tpu_pod_slice", "from_mesh_axes",
     "QueueHierarchy", "RunQueue", "BubbleScheduler", "StealCostModel",
-    "ZERO_COST",
+    "ZERO_COST", "SchedulerRuntime", "rebalance_worth_it",
     "POLICIES", "Policy", "SimplePolicy", "PerCpuPolicy", "BoundPolicy",
     "BubblePolicy", "StealPolicy", "AdaptivePolicy",
     "Simulator", "SimResult", "stripes_workload", "fibonacci_workload",

@@ -32,6 +32,7 @@ from typing import Optional
 
 from .bubble import Bubble, Thread
 from .runqueues import QueueHierarchy
+from .runtime import rebalance_worth_it
 from .scheduler import ZERO_COST, BubbleScheduler, StealCostModel
 from .topology import Topology
 
@@ -320,8 +321,13 @@ class AdaptivePolicy(StealPolicy):
     * ``cooldown`` — minimum scheduler calls between in-cycle rebalances
       (defaults to ``window``), so one spike cannot trigger a storm;
     * ``min_backlog`` — movable tasks required for an in-cycle rebalance;
-    * ``rebalance_level`` — topology level to re-spread across (default:
-      the level just above the leaves, e.g. NUMA nodes);
+    * ``rebalance_level`` — topology level to re-spread across.  ``None``
+      (the default) derives it from the observed steal-distance histogram
+      (``SchedStats.steal_distance_hist``, the scheduler-side view of
+      ``Tracer.steals_by_level()``): the modal steal distance names how
+      far work is actually being dragged and the re-spread deals across
+      the matching level — falling back to the level just above the
+      leaves before any steal has been seen;
     * ``cost_model`` — the steal/rebalance penalties; the cost weights are
       what make proactive bulk re-placement beat serial costed steals.
     """
@@ -353,19 +359,14 @@ class AdaptivePolicy(StealPolicy):
         self._calls_since_rebalance = 0
 
     def _worth_it(self, paid: float) -> bool:
-        """Cost-benefit: recent steal spend must beat the re-spread bill.
-
-        ``queued_movable`` counts post-expansion units, so the prospective
-        bill here is exactly what :meth:`BubbleScheduler.rebalance` would
-        charge for the same backlog.  The base-cost screen runs first: the
-        bill is at least ``rebalance_base``, so when the recent spend
-        cannot even cover that (always the case under ZERO_COST) the
-        full-queue backlog walk is skipped entirely."""
-        if paid <= self.sched.cost_model.rebalance_base:
-            return False
-        movable = self.sched.queued_movable(self.rebalance_level)
-        return (movable >= self.min_backlog
-                and paid > self.sched.cost_model.rebalance_cost(movable))
+        """Cost-benefit: recent steal spend must beat the re-spread bill —
+        the shared :func:`repro.core.runtime.rebalance_worth_it` test, so
+        every consumer (this policy's steal-attempt window, the serving
+        engine's queue-depth trigger) prices a prospective re-spread the
+        same way."""
+        return rebalance_worth_it(self.sched, paid,
+                                  min_backlog=self.min_backlog,
+                                  level=self.rebalance_level)
 
     def next(self, cpu: int, now: float) -> Optional[Thread]:
         s = self.sched.stats

@@ -1,0 +1,206 @@
+"""SchedulerRuntime: the scheduling-decision loop, shared by every consumer.
+
+The paper's core claim is portability: *one* scheduler model (bubbles +
+hierarchical runqueues) serves any workload.  Before this layer existed the
+repo had drifted into two divergent consumers — the discrete
+:class:`~repro.core.simulator.Simulator` owned the whole
+idle→lookup→steal→bill-cost→next-touch→adaptive-rebalance loop as private
+methods, while the JAX serving engine re-implemented plain admission with
+none of it.  This module extracts that loop into a reusable runtime so both
+(and any future consumer: the placement planner, a multi-host dispatcher)
+drive the *same* distribution/adaptation logic (BubbleSched, arXiv:0706.2069;
+ARMS, arXiv:2112.09509):
+
+* :meth:`SchedulerRuntime.acquire` — one idle-cpu scheduler call: policy
+  lookup (the steal pass lives inside bubble-family policies) plus the
+  billing of whatever steal/rebalance penalty that call accrued
+  (``Policy.consume_cost``).  The consumer decides what a quantum of cost
+  *means* (a simulator stall, an engine admission-latency step);
+* :meth:`SchedulerRuntime.touch` — the §2.3 data policies (``first_touch``
+  / ``next_touch``): the first cpu to run a thread homes its data; a thread
+  flagged ``stolen`` re-homes its data under the next toucher.  Consumers
+  register ``on_data_migrate`` to give the migration a physical meaning
+  (the simulator re-prices NUMA distance; the serving engine re-homes a
+  gang's KV pages with a batched splice);
+* :meth:`SchedulerRuntime.rebalance_worth_it` /
+  :meth:`SchedulerRuntime.rebalance` — the AdaptivePolicy-style cost-benefit
+  trigger as a runtime callback: a proactive bulk re-spread fires only when
+  the migration penalty actually *paid* recently exceeds what the re-spread
+  itself would bill over the movable backlog.  Any pressure signal can feed
+  it — the simulator's steal-attempt window, the engine's decode-gang queue
+  depths;
+* :meth:`SchedulerRuntime.counters` — the per-consumer cost ledger: steal /
+  rebalance / migration accounting read as deltas so a reused runtime
+  reports each run's own activity.
+
+The runtime is deliberately thin: it owns no clock and no execution model.
+Consumers keep their own notion of time and call the runtime at their own
+decision points — exactly the paper's "no global scheduling: processors just
+call the scheduler code themselves" (§4).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from .bubble import Bubble, Thread
+from .scheduler import BubbleScheduler
+from .topology import Topology
+
+DATA_POLICIES = ("first_touch", "next_touch")
+
+
+def rebalance_worth_it(sched: BubbleScheduler, paid: float, *,
+                       min_backlog: int = 1,
+                       level: Optional[str] = None) -> bool:
+    """The cost-benefit test behind every proactive rebalance trigger.
+
+    ``paid`` is the migration penalty recently spent (steal cost over a
+    sliding window, for whatever pressure signal the consumer watches).
+    The test passes only when that spend exceeds what one bulk re-spread
+    of the current backlog would bill (``cost_model.rebalance_cost`` over
+    :meth:`BubbleScheduler.queued_movable` post-expansion units) and at
+    least ``min_backlog`` units are actually movable.  The base-cost
+    screen runs first: under :data:`~repro.core.scheduler.ZERO_COST`
+    stealing is free, ``paid`` can never cover even ``rebalance_base``,
+    and the full-queue backlog walk is skipped entirely — cost-driven
+    decisions need a cost model.
+    """
+    if paid <= sched.cost_model.rebalance_base:
+        return False
+    movable = sched.queued_movable(level)
+    return (movable >= min_backlog
+            and paid > sched.cost_model.rebalance_cost(movable))
+
+
+class SchedulerRuntime:
+    """One consumer's view of the scheduling loop over a :class:`Policy`.
+
+    ``policy`` is any object with the small driver interface of
+    :class:`~repro.core.policies.Policy` (``next`` / ``on_yield`` /
+    ``on_barrier`` / ``consume_cost``); bubble-family policies additionally
+    expose ``.sched`` (a :class:`BubbleScheduler`), which unlocks the
+    rebalance trigger and the steal/rebalance ledger.
+
+    ``data_policy`` resolution: explicit argument > the policy's
+    ``preferred_data_policy`` attribute > ``first_touch`` (the Linux/Solaris
+    default, §2.3).
+    """
+
+    # per-run deltas of the scheduler's steal/rebalance accounting, so a
+    # reused runtime reports each run's own activity, not cumulatives
+    SCHED_COUNTERS = ("steals", "steal_attempts", "steal_distance",
+                      "steal_cost", "rebalances", "rebalance_moves",
+                      "rebalance_cost")
+
+    def __init__(self, topo: Topology, policy, *,
+                 data_policy: Optional[str] = None,
+                 on_data_migrate: Optional[
+                     Callable[[str, int, int], None]] = None):
+        self.topo = topo
+        self.policy = policy
+        # memory policy: explicit arg > policy preference > first touch
+        self.data_policy = data_policy or getattr(
+            policy, "preferred_data_policy", "first_touch")
+        assert self.data_policy in DATA_POLICIES, self.data_policy
+        self.on_data_migrate = on_data_migrate
+        self.homes: dict[str, int] = {}          # data id -> home cpu
+        self.data_migrations = 0                 # next-touch re-homes done
+        self.migration_log: list[tuple[str, int, int]] = []  # (data, from, to)
+
+    # -- the decision loop ---------------------------------------------------
+    def acquire(self, cpu: int, now: float = 0.0
+                ) -> tuple[Optional[Thread], float]:
+        """One idle-cpu scheduler call.
+
+        Runs the policy's lookup (two-pass find, bubble sink/burst, and —
+        for bubble-family policies — the hierarchical steal pass and any
+        adaptive rebalance) and drains the penalty that call accrued.
+        Returns ``(thread_or_None, cost)``; the consumer bills ``cost`` in
+        its own currency (simulated stall quanta, engine steps).
+        """
+        t = self.policy.next(cpu, now)
+        return t, self.policy.consume_cost()
+
+    def release(self, cpu: int, t: Thread, done: bool, now: float = 0.0
+                ) -> None:
+        """The thread yielded (finished its quantum, its cycle, or its
+        request) — regenerated bubbles collect their running threads here."""
+        self.policy.on_yield(cpu, t, done, now)
+
+    def barrier(self, root: Bubble, now: float = 0.0) -> None:
+        """All threads reached the workload's barrier; the consumer re-arms
+        them — the policy's coherent re-distribution opportunity."""
+        self.policy.on_barrier(root, now)
+
+    # -- data policies (§2.3) --------------------------------------------------
+    def touch(self, cpu: int, t: Thread) -> tuple[int, bool]:
+        """Record that ``cpu`` touched ``t``'s data; apply the data policy.
+
+        Returns ``(home_cpu, migrated)``.  The first toucher homes the data
+        at its own position (*first touch*).  Under ``next_touch`` a thread
+        flagged ``stolen`` (by the steal pass or a cross-node rebalance)
+        re-homes its data at the current cpu on this touch — one-shot: the
+        flag is consumed either way, so a migration is paid exactly once.
+        ``migrated`` is True only for that re-homing touch; consumers charge
+        their migration cost (page-copy latency, KV-splice work) then.
+        """
+        if t.data is None:
+            t.stolen = False
+            return cpu, False
+        home = self.homes.setdefault(t.data, cpu)     # first touch
+        if t.stolen:
+            t.stolen = False                           # flag is one-shot
+            if self.data_policy == "next_touch" and home != cpu:
+                self.migration_log.append((t.data, home, cpu))
+                self.homes[t.data] = cpu
+                self.data_migrations += 1
+                if self.on_data_migrate is not None:
+                    self.on_data_migrate(t.data, home, cpu)
+                return cpu, True
+        return home, False
+
+    # -- proactive rebalancing (cost-benefit callback) -------------------------
+    @property
+    def sched(self) -> Optional[BubbleScheduler]:
+        """The underlying bubble scheduler, when the policy has one."""
+        return getattr(self.policy, "sched", None)
+
+    def rebalance_worth_it(self, paid: float, *, min_backlog: int = 1,
+                           level: Optional[str] = None) -> bool:
+        """Module-level :func:`rebalance_worth_it` over this runtime's
+        scheduler; always False for flat-list policies (nothing to
+        re-spread hierarchically)."""
+        sched = self.sched
+        if sched is None:
+            return False
+        return rebalance_worth_it(sched, paid, min_backlog=min_backlog,
+                                  level=level)
+
+    def rebalance(self, cpu: int, now: float = 0.0,
+                  level: Optional[str] = None) -> int:
+        """Trigger :meth:`BubbleScheduler.rebalance`; the billed cost
+        surfaces through the next :meth:`acquire` on the triggering cpu."""
+        sched = self.sched
+        if sched is None:
+            return 0
+        return sched.rebalance(cpu, now, level=level)
+
+    # -- the cost ledger -------------------------------------------------------
+    def counters(self) -> dict:
+        """Current cumulative steal/rebalance accounting (zeros for
+        flat-list policies).  Subtract a previous snapshot to report one
+        run's own activity."""
+        sched = self.sched
+        if sched is None:
+            return {k: 0 for k in self.SCHED_COUNTERS}
+        return {k: getattr(sched.stats, k) for k in self.SCHED_COUNTERS}
+
+    @staticmethod
+    def counter_deltas(before: dict, after: dict) -> dict:
+        return {k: after[k] - before[k] for k in after}
+
+    def sched_migrations(self) -> int:
+        """Thread-level cpu-migration count from the scheduler stats."""
+        sched = self.sched
+        return sched.stats.migrations if sched else 0

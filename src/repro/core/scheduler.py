@@ -77,6 +77,15 @@ class StealCostModel:
     def rebalance_cost(self, moves: int) -> float:
         return self.rebalance_base + self.rebalance_per_move * moves
 
+    @property
+    def steals_are_free(self) -> bool:
+        """True when every per-steal penalty is zero — the steal pass then
+        keeps its historical heaviest-loot-per-level selection (golden
+        traces depend on it); any nonzero penalty switches victim
+        selection to work-per-cost ranking."""
+        return not (self.lock_penalty or self.level_penalty
+                    or self.thread_penalty)
+
 
 ZERO_COST = StealCostModel()
 
@@ -96,6 +105,11 @@ class SchedStats:
     # -- cost accounting (StealCostModel) --
     steal_cost: float = 0.0      # total lock/latency penalty paid for steals
     steal_distance: int = 0      # total levels crossed by successful steals
+    # per-distance steal counts (the Tracer's steals_by_level(), scheduler-
+    # side): the observed steal-distance histogram the adaptive spread-level
+    # derivation reads — a fat tail at long distances means cross-node
+    # thrash, a local mode means sibling-level churn
+    steal_distance_hist: dict = field(default_factory=dict)
     stolen_threads: int = 0      # live threads moved by successful steals
     rebalances: int = 0          # proactive re-spread events
     rebalance_moves: int = 0     # tasks moved by rebalances
@@ -227,26 +241,40 @@ class BubbleScheduler:
 
     # -- hierarchical work stealing (§3.3.3) ----------------------------------
     def _steal_pass(self, cpu: int) -> Optional[tuple[RunQueue, Task]]:
-        """Walk the covering levels local→global; steal a whole bubble
-        from the closest level that has one.
+        """Steal a whole bubble, preferring the victim worth its price.
 
-        At each ancestor of ``cpu`` (nearest first) every sibling subtree is
-        inspected.  A closed bubble is preferred over any lone thread at the
-        same level — moving the whole group keeps its internal affinity
-        intact; among candidates of the same kind the one with the most
-        remaining work wins (steal enough to stay busy), with sibling
-        closeness breaking exact work ties via scan order.  Only when an
-        ancestor level offers no bubble at all does the pass fall back to
-        the heaviest runnable thread there; only when a level offers nothing
-        does the walk widen to the next level out.
+        Two victim-selection regimes, switched by the cost model:
+
+        * **free stealing** (all per-steal penalties zero, the default):
+          walk the covering levels local→global and take the heaviest loot
+          from the *closest* level that has any.  At each ancestor of
+          ``cpu`` (nearest first) every sibling subtree is inspected; a
+          closed bubble is preferred over any lone thread at the same
+          level — moving the whole group keeps its internal affinity
+          intact; among candidates of the same kind the one with the most
+          remaining work wins (steal enough to stay busy), with sibling
+          closeness breaking exact work ties via scan order.  Only when a
+          level offers nothing does the walk widen to the next level out.
+        * **costed stealing** (any nonzero per-steal penalty): distance is
+          no longer a hard tier but a price, so *all* covering levels are
+          surveyed and candidates are ranked by **work-per-cost**
+          (``remaining_work / steal_cost(levels_crossed, live_threads)``)
+          — a nearer, slightly lighter bubble beats a heavier one that
+          would drag more threads across more levels.  Bubbles still beat
+          lone threads (the affinity argument is price-independent), and
+          the local→global scan order still breaks exact score ties toward
+          the nearest victim.
 
         On success the loot is *removed from the victim queue* (identity-
-        safe), counted in :class:`SchedStats`, its threads flagged
-        ``stolen`` for the next-touch memory policy, and ``(victim_queue,
-        task)`` is returned — the caller re-places the task near the thief.
+        safe), counted in :class:`SchedStats` (including the per-distance
+        histogram), its threads flagged ``stolen`` for the next-touch
+        memory policy, and ``(victim_queue, task)`` is returned — the
+        caller re-places the task near the thief.
         """
         self.stats.steal_attempts += 1
         path = self.topo.cpus[cpu].path()                 # root → leaf
+        if not self.cost_model.steals_are_free:
+            return self._steal_pass_costed(cpu, path)
         for depth in range(len(path) - 2, -1, -1):        # local → global
             anc, mine = path[depth], path[depth + 1]
             best_bubble = best_thread = None              # (queue, task, work)
@@ -269,36 +297,101 @@ class BubbleScheduler:
             if best is None:
                 continue
             victim, task, work = best
-            victim.remove(task)
-            self.stats.steals += 1
-            self.stats.stolen_work += work
-            if isinstance(task, Bubble):
-                self.stats.bubble_steals += 1
-                n_moved = 0
-                for th in task.threads():
-                    th.stolen = True
-                    if th.remaining > 0:
-                        n_moved += 1
-            else:
-                self.stats.thread_steals += 1
-                task.stolen = True
-                n_moved = 1
-            dist = self.topo.levels_crossed(cpu, victim.comp)
-            cost = self.cost_model.steal_cost(dist, n_moved)
-            self.stats.stolen_threads += n_moved
-            self.stats.steal_distance += dist
-            self.stats.steal_cost += cost
-            self.stats.last_steal_distance = dist
-            self.stats.last_steal_cost = cost
-            self._unbilled += cost
-            self.last_steal = (victim, task)
-            return victim, task
+            return self._commit_steal(cpu, victim, task, work)
         return None
+
+    def _steal_pass_costed(self, cpu: int, path: list[Component]
+                           ) -> Optional[tuple[RunQueue, Task]]:
+        """Cost-aware victim selection: survey every covering level and
+        maximise work-per-cost (ROADMAP follow-up to the PR 2 cost model).
+
+        The level walk shares the free path's scan order (ancestors nearest
+        first, siblings by closeness, BFS within a subtree), so exact-score
+        ties still resolve toward the most local victim."""
+        best_bubble = best_thread = None      # (score, queue, task, work)
+        for depth in range(len(path) - 2, -1, -1):        # local → global
+            anc, mine = path[depth], path[depth + 1]
+            siblings = sorted((c for c in anc.children if c is not mine),
+                              key=lambda c: abs(c.index - mine.index))
+            for sib in siblings:
+                for comp in self._bfs(sib):
+                    q = self.queues.queue_of(comp)
+                    if not q.tasks:
+                        continue
+                    dist = self.topo.levels_crossed(cpu, comp)
+                    for t in q.tasks:
+                        if isinstance(t, Bubble):
+                            if t.done():
+                                continue
+                            w = t.total_work()
+                            n = sum(1 for th in t.threads()
+                                    if th.remaining > 0)
+                            score = w / self.cost_model.steal_cost(dist, n)
+                            if best_bubble is None or score > best_bubble[0]:
+                                best_bubble = (score, q, t, w)
+                        elif t.remaining > 0:
+                            score = t.remaining / \
+                                self.cost_model.steal_cost(dist, 1)
+                            if best_thread is None or score > best_thread[0]:
+                                best_thread = (score, q, t, t.remaining)
+        best = best_bubble or best_thread
+        if best is None:
+            return None
+        _, victim, task, work = best
+        return self._commit_steal(cpu, victim, task, work)
+
+    def _commit_steal(self, cpu: int, victim: RunQueue, task: Task,
+                      work: float) -> tuple[RunQueue, Task]:
+        """Book one successful steal: remove the loot (identity-safe), flag
+        its threads for next-touch, and settle the cost ledger."""
+        victim.remove(task)
+        self.stats.steals += 1
+        self.stats.stolen_work += work
+        if isinstance(task, Bubble):
+            self.stats.bubble_steals += 1
+            n_moved = 0
+            for th in task.threads():
+                th.stolen = True
+                if th.remaining > 0:
+                    n_moved += 1
+        else:
+            self.stats.thread_steals += 1
+            task.stolen = True
+            n_moved = 1
+        dist = self.topo.levels_crossed(cpu, victim.comp)
+        cost = self.cost_model.steal_cost(dist, n_moved)
+        self.stats.stolen_threads += n_moved
+        self.stats.steal_distance += dist
+        self.stats.steal_distance_hist[dist] = \
+            self.stats.steal_distance_hist.get(dist, 0) + 1
+        self.stats.steal_cost += cost
+        self.stats.last_steal_distance = dist
+        self.stats.last_steal_cost = cost
+        self._unbilled += cost
+        self.last_steal = (victim, task)
+        return victim, task
 
     # -- proactive rebalancing (ARMS-style re-mapping, arXiv:2112.09509) ------
     def _resolve_spread_level(self, level: Optional[str]) -> str:
+        """The level a ``level=None`` rebalance re-spreads across.
+
+        Derived from the observed steal-distance histogram rather than a
+        fixed knob: the modal distance names how far work is actually being
+        dragged, and the matching re-spread deals across the components
+        just below the deepest ancestor those steals crossed — cross-node
+        steal traffic (distance 2 on the NovaScale) re-spreads across
+        ``node`` lists, sibling-cpu churn (distance 1) across the per-cpu
+        lists.  Ties prefer the longer distance (re-spreading wider only
+        widens scheduling freedom).  Before any steal has been observed the
+        historical default applies: the level just above the leaves."""
         if level is not None:
             return level
+        hist = self.stats.steal_distance_hist
+        if hist:
+            d = max(hist, key=lambda k: (hist[k], k))
+            idx = min(max(len(self.topo.levels) - d, 1),
+                      len(self.topo.levels) - 1)
+            return self.topo.levels[idx].name
         return self.topo.levels[max(0, len(self.topo.levels) - 2)].name
 
     def _gatherable(self):

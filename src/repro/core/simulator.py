@@ -25,6 +25,12 @@ quantum per tick (all speeds relative).  Workloads with barrier cycles
 (conduction/advection) re-arm all threads at each barrier, which is also each
 policy's rebalancing opportunity — exactly the structure of the paper's
 "cycles of fully parallel computing followed by global communication barrier".
+
+The scheduling-decision loop itself (lookup, steal billing, data homing, the
+cost ledger) lives in :class:`~repro.core.runtime.SchedulerRuntime`; the
+simulator is one thin client of it — the serving engine is the other — and
+only owns what is genuinely simulation: the clock, the speed model, and the
+contention/stall accounting.
 """
 
 from __future__ import annotations
@@ -34,6 +40,7 @@ from typing import Optional
 
 from .bubble import Bubble, Thread, bubble, thread
 from .policies import Policy, _h
+from .runtime import SchedulerRuntime
 from .scheduler import StealCostModel
 from .topology import Topology
 
@@ -75,37 +82,43 @@ class Simulator:
         # the same lock domain within one tick — the paper's "unique thread
         # list for the whole machine is a bottleneck" (§2.2).
         self.contention = contention
-        # memory policy: explicit arg > policy preference > first touch
-        self.data_policy = data_policy or getattr(
-            policy, "preferred_data_policy", "first_touch")
-        assert self.data_policy in ("first_touch", "next_touch"), self.data_policy
+        # the shared decision loop: data-policy resolution (explicit arg >
+        # policy preference > first touch), homes map, migration log
+        self.runtime = SchedulerRuntime(topo, policy, data_policy=data_policy)
         self.migration_cost = migration_cost
-        self.homes: dict[str, int] = {}  # data id -> home cpu
-        self.migrations = 0
-        self.data_migrations = 0         # next-touch re-homes performed
-        self.migration_log: list[tuple[str, int, int]] = []  # (data, from, to)
+
+    # the runtime owns the data-homing state; these delegations keep the
+    # simulator's historical surface (tests/benchmarks read them directly)
+    @property
+    def data_policy(self) -> str:
+        return self.runtime.data_policy
+
+    @property
+    def homes(self) -> dict[str, int]:
+        return self.runtime.homes
+
+    @property
+    def data_migrations(self) -> int:
+        return self.runtime.data_migrations
+
+    @property
+    def migration_log(self) -> list[tuple[str, int, int]]:
+        return self.runtime.migration_log
 
     # -- speed model ---------------------------------------------------------
     def _speed(self, cpu: int, t: Thread) -> float:
         """Remote data slows only the memory-bound fraction of the work:
         slowdown = 1 + mem_fraction * (factor - 1).  mem_fraction=1.0 is a
         pure memory-latency-bound thread; the paper's stencil codes sit
-        around 0.25 (calibrated so *simple* lands at the paper's 10.58)."""
-        if t.data is None:
-            t.stolen = False
-            return 1.0
-        home = self.homes.setdefault(t.data, cpu)     # first touch
-        if t.stolen:
-            t.stolen = False                           # flag is one-shot
-            if self.data_policy == "next_touch" and home != cpu:
-                # next touch: the stolen thread's first access after the
-                # migration re-homes its data under the thief (§2.3)
-                self.migration_log.append((t.data, home, cpu))
-                self.homes[t.data] = cpu
-                self.data_migrations += 1
-                home = cpu
-                if self.migration_cost:
-                    return 1.0 / (1.0 + self.migration_cost)
+        around 0.25 (calibrated so *simple* lands at the paper's 10.58).
+
+        The data-policy decision (first/next touch, §2.3) is the runtime's;
+        the simulator only prices the outcome: a migrating touch pays the
+        page-copy latency for one quantum, every other touch pays the NUMA
+        distance to wherever the data is homed."""
+        home, migrated = self.runtime.touch(cpu, t)
+        if migrated and self.migration_cost:
+            return 1.0 / (1.0 + self.migration_cost)
         f = self.topo.distance_factor(cpu, home)
         return 1.0 / (1.0 + self.mem_fraction * (f - 1.0))
 
@@ -131,20 +144,20 @@ class Simulator:
                     continue
                 cur = running[cpu]
                 if cur is None:
-                    cur = self.policy.next(cpu, now)
-                    # steal/rebalance penalty accrued by that scheduler call
-                    # (StealCostModel): the *thief* stalls for the remote
-                    # lock/latency it caused — migration decisions now have
-                    # a cost side, not just a counter.  Applied on top of
-                    # (never clobbered by) the lock-contention stall below.
-                    cost = self.policy.consume_cost()
+                    # one runtime acquire = policy lookup + the steal/
+                    # rebalance penalty that call accrued (StealCostModel):
+                    # the *thief* stalls for the remote lock/latency it
+                    # caused — migration decisions have a cost side, not
+                    # just a counter.  Applied on top of (never clobbered
+                    # by) the lock-contention stall below.
+                    cur, cost = self.runtime.acquire(cpu, now)
                     if cur is None:
                         if cost:
                             stall[cpu] += cost
                             idle = False
                         continue
                     if cur.remaining <= 0:          # stale entry: drop
-                        self.policy.on_yield(cpu, cur, True, now)
+                        self.runtime.release(cpu, cur, True, now)
                         continue
                     running[cpu] = cur
                     if self.contention:
@@ -159,7 +172,7 @@ class Simulator:
                 if cur.remaining <= 0:
                     cur.remaining = 0.0
                     running[cpu] = None
-                    self.policy.on_yield(cpu, cur, True, now)
+                    self.runtime.release(cpu, cur, True, now)
                     pending -= 1
             now += self.quantum
             if idle and pending > 0:
@@ -175,9 +188,9 @@ class Simulator:
             ideal += t.work * cycles
         self.policy.submit(root)
         now, total = 0.0, 0.0
-        mig0 = self._policy_migrations()
+        mig0 = self.runtime.sched_migrations()
         dmig0 = self.data_migrations
-        c0 = self._sched_counters()
+        c0 = self.runtime.counters()
         for cyc in range(cycles):
             if cyc > 0:
                 for t in root.threads():
@@ -185,37 +198,20 @@ class Simulator:
                     if self.jitter:
                         w *= 1.0 + self.jitter * (_h(t.tid, cyc) - 0.5)
                     t.remaining = w
-                self.policy.on_barrier(root, now)
+                self.runtime.barrier(root, now)
             elapsed = self.run_cycle(root, now, cyc)
             total += elapsed
             now += elapsed
         steps, lookups = self.policy.lookup_cost()
-        c1 = self._sched_counters()
         return SimResult(
             policy=self.policy.name, time=total, busy=total, ideal=ideal,
-            migrations=self._policy_migrations() - mig0,
+            migrations=self.runtime.sched_migrations() - mig0,
             lookup_steps=steps / lookups, cycles=cycles,
             data_migrations=self.data_migrations - dmig0,
             extra={"n_cpus": self.topo.n_cpus, "homes": dict(self.homes),
                    "data_policy": self.data_policy,
-                   **{k: c1[k] - c0[k] for k in c1}},
+                   **self.runtime.counter_deltas(c0, self.runtime.counters())},
         )
-
-    # per-run deltas of the scheduler's steal/rebalance accounting, so a
-    # reused Simulator reports each run's own activity, not cumulatives
-    _SCHED_COUNTERS = ("steals", "steal_attempts", "steal_distance",
-                       "steal_cost", "rebalances", "rebalance_moves",
-                       "rebalance_cost")
-
-    def _sched_counters(self) -> dict:
-        sched = getattr(self.policy, "sched", None)
-        if sched is None:
-            return {k: 0 for k in self._SCHED_COUNTERS}
-        return {k: getattr(sched.stats, k) for k in self._SCHED_COUNTERS}
-
-    def _policy_migrations(self) -> int:
-        sched = getattr(self.policy, "sched", None)
-        return sched.stats.migrations if sched else 0
 
 
 # ---------------------------------------------------------------------------

@@ -24,9 +24,23 @@ from typing import Iterator, Optional, Sequence
 
 @dataclass(frozen=True)
 class Level:
+    """One level of the machine tree.
+
+    ``fanout`` is the number of children per component of the level above —
+    either one int (uniform, the common case) or a sequence giving each
+    parent component its own child count in parent-index order (ragged
+    trees: e.g. a decode batch whose slot count does not divide evenly
+    into KV page groups must not drop the remainder slots).
+    """
+
     name: str
-    fanout: int          # children per component of the level above
+    fanout: object       # int, or Sequence[int] per parent component
     factor: float = 1.0  # cross-component access penalty (NUMA factor)
+
+    def fanout_of(self, parent_index: int) -> int:
+        if isinstance(self.fanout, int):
+            return self.fanout
+        return self.fanout[parent_index]
 
 
 @dataclass
@@ -77,8 +91,8 @@ class Topology:
                              parent=parent)
             self._by_level[lvl.name].append(comp)
             if depth + 1 < len(self.levels):
-                comp.children = [build(depth + 1, comp)
-                                 for _ in range(self.levels[depth + 1].fanout)]
+                n = self.levels[depth + 1].fanout_of(comp.index)
+                comp.children = [build(depth + 1, comp) for _ in range(n)]
             return comp
 
         self.root = build(0, None)
@@ -157,9 +171,13 @@ class Topology:
         return len(path) - shared
 
     def describe(self) -> str:
-        parts = [f"{l.name}(x{l.fanout}" +
-                 (f", factor={l.factor}" if l.factor != 1.0 else "") + ")"
-                 for l in self.levels]
+        parts = []
+        for l in self.levels:
+            fan = l.fanout if isinstance(l.fanout, int) else \
+                "/".join(map(str, l.fanout))
+            parts.append(f"{l.name}(x{fan}" +
+                         (f", factor={l.factor}" if l.factor != 1.0 else "") +
+                         ")")
         return " > ".join(parts) + f" = {self.n_cpus} cpus"
 
 

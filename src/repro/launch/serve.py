@@ -1,8 +1,12 @@
-"""Serving driver: continuous-batching engine with bubble gang scheduling.
+"""Serving driver: continuous-batching engine on the scheduler runtime.
 
 CPU smoke example:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
       --requests 12 --slots 4
+
+``--mode admission`` runs the pre-runtime baseline (no steal/rebalance);
+``--stub`` swaps the model for the deterministic numpy stub (no jit) —
+the pure-scheduler smoke the CI serving benchmark uses.
 """
 
 from __future__ import annotations
@@ -10,17 +14,14 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import ARCHS, get_config
-from repro.models import api
-from repro.serving import ServingEngine
+from repro.serving import ServingEngine, StubModelBackend
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="yi-6b", choices=ARCHS)
+    ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -28,22 +29,38 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", default="runtime",
+                    choices=("runtime", "admission"))
+    ap.add_argument("--stub", action="store_true",
+                    help="deterministic numpy model stub (no jit compile)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if cfg.enc_layers:
-        raise SystemExit("enc-dec serving path: use examples/serve_batch.py")
+    if args.stub:
+        cfg = params = None
+        backend = StubModelBackend()
+    else:
+        import jax
+        from repro.configs import ARCHS, get_config
+        from repro.models import api
+        if args.arch not in ARCHS:
+            raise SystemExit(f"unknown arch {args.arch!r}")
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        if cfg.enc_layers:
+            raise SystemExit("enc-dec serving path: use examples/serve_batch.py")
+        params = api.init(cfg, jax.random.PRNGKey(args.seed))
+        backend = None                     # default JaxModelBackend
 
     rng = np.random.default_rng(args.seed)
-    params = api.init(cfg, jax.random.PRNGKey(args.seed))
+    vocab = cfg.vocab if cfg is not None else 251
     eng = ServingEngine(cfg, params, n_slots=args.slots,
-                        cache_len=args.cache_len)
+                        cache_len=args.cache_len, backend=backend,
+                        mode=args.mode)
 
     t0 = time.time()
     for i in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab, size=args.prompt_len)
+        prompt = rng.integers(1, vocab, size=args.prompt_len)
         # every 4th request pair shares a gang (prefix-affine group)
         gang = f"g{i//4}" if i % 2 == 0 else None
         eng.submit(prompt, args.new_tokens, prio=i % 3, gang=gang)
@@ -54,6 +71,7 @@ def main(argv=None):
     print(f"completed {len(done)}/{args.requests} requests, "
           f"{toks} tokens in {dt:.1f}s "
           f"({toks/max(dt,1e-9):.1f} tok/s, {eng.steps} engine steps)")
+    print("counters:", eng.counters())
     assert len(done) == args.requests
     return 0
 

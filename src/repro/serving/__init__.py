@@ -1,3 +1,5 @@
-from .engine import Request, ServingEngine, slots_topology
+from .engine import (SERVE_COST, EngineStats, JaxModelBackend, Request,
+                     ServingEngine, StubModelBackend, slots_topology)
 
-__all__ = ["Request", "ServingEngine", "slots_topology"]
+__all__ = ["Request", "ServingEngine", "slots_topology", "SERVE_COST",
+           "EngineStats", "JaxModelBackend", "StubModelBackend"]

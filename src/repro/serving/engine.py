@@ -1,37 +1,68 @@
-"""Serving engine: continuous batching driven by the bubble scheduler.
+"""Serving engine: continuous batching as the second SchedulerRuntime client.
 
-Requests are *threads* (work = tokens still to decode, data = prefix-cache
-id); requests sharing a prompt prefix or an SLA class are grouped into
-*bubbles*.  The engine owns a fixed-size decode batch (the "processors" of
-the scheduling problem are batch slots); whenever slots free up, it calls
-the bubble scheduler exactly like a cpu calling Marcel's schedule function:
+Requests are *threads* (work = tokens still to decode, data = the gang's KV
+page-group id); requests sharing a prompt prefix or an SLA class are grouped
+into *bubbles*.  The engine owns a fixed-size decode batch and maps it onto
+the scheduling model exactly as the paper prescribes for any workload:
 
-* a gang (bubble) bursts only when enough slots are free to co-schedule it
-  (priorities implement the paper's gang scheduling — Figure 1);
-* prefix-affine requests land in adjacent slots so their shared KV prefix
-  stays resident (the data-sharing relation);
-* a request group that stalls (client backpressure) is regenerated: pulled
-  out of the slots and re-queued as a closed bubble, keeping its affinity.
+=================  ==========================================================
+scheduler concept  serving meaning
+=================  ==========================================================
+cpu (leaf)         decode batch slot
+level              KV page group (``page``): slots sharing a cache page
+data object        a gang's KV state (``Thread.data`` = gang id)
+steal              an idle slot pulls a queued gang from a loaded page group
+next touch         first post-migration admission re-homes the gang's KV via
+                   a *batched* splice of parked per-request states — not the
+                   old per-request re-prefill path
+rebalance          queue-depth skew across page groups triggers one bulk
+                   LPT re-spread (`BubbleScheduler.rebalance`), cost-gated
+=================  ==========================================================
+
+The engine drives the same :class:`~repro.core.runtime.SchedulerRuntime`
+loop as the discrete simulator — ``acquire`` (lookup + steal + cost
+billing), ``touch`` (first/next-touch KV homing), ``rebalance_worth_it``
+(the AdaptivePolicy-style cost-benefit trigger, fed by decode-gang queue
+depths instead of steal-attempt windows).  ``mode="admission"`` keeps the
+pre-runtime behaviour (no steal, no rebalance, first-touch homing) as the
+measurable baseline for ``benchmarks/serve_gangs.py``.
+
+Cost has a physical meaning here: a :class:`StealCostModel` penalty accrued
+by a slot's scheduler call (remote page-group locks, KV drag) is billed as
+*admission-latency steps* — the slot sits out that many engine steps before
+its next decode, so steal-happy schedules pay for their migrations in the
+engine's own currency.
 
 The decode loop itself is one jitted ``decode_step`` over the whole batch;
 slot occupancy is a boolean mask (empty slots decode padding at negligible
-marginal cost on TPU).
+marginal cost on TPU).  The model is behind a two-method backend so the
+scheduler stack can be exercised hermetically: :class:`JaxModelBackend`
+runs the real zoo, :class:`StubModelBackend` is a deterministic numpy
+stand-in (no jit compile) for tests and CI benchmarks.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bubble import Bubble, Thread, bubble, thread
-from repro.core.scheduler import BubbleScheduler
+from repro.core.policies import BubblePolicy, StealPolicy
+from repro.core.runtime import SchedulerRuntime
+from repro.core.scheduler import StealCostModel
 from repro.core.topology import Level, Topology
-from repro.models import api
-from repro.models.config import ModelConfig
+
+# The serving price list: a steal pays remote page-group lock traffic plus a
+# per-level / per-request KV drag, a rebalance pays one bulk charge — all in
+# engine steps (admission latency).  Small relative to typical decode
+# lengths, so stealing stays profitable but not free; the queue-depth
+# rebalance trigger needs the nonzero prices to pass its cost-benefit test.
+SERVE_COST = StealCostModel(lock_penalty=0.5, level_penalty=0.25,
+                            thread_penalty=0.125, rebalance_base=1.0,
+                            rebalance_per_move=0.125)
 
 
 @dataclasses.dataclass
@@ -45,33 +76,210 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class EngineStats:
+    """Engine-side ledger (scheduler counters live in ``sched.stats``)."""
+
+    prefills: int = 0            # fresh prompt prefills run
+    kv_splices: int = 0          # batched splice ops issued
+    kv_spliced_slots: int = 0    # slots written by those splices
+    kv_parks: int = 0            # per-request KV states parked
+    kv_migrations: int = 0       # next-touch re-homes of a gang's KV
+    kv_page_moves: int = 0       # ...of which crossed page groups
+    rebalances: int = 0          # queue-depth-triggered re-spreads
+    stall_steps: float = 0.0     # admission latency billed by the cost model
+
+
 def slots_topology(n_slots: int, group: int = 4) -> Topology:
     """Model the decode batch as a tiny hierarchy: slot groups share a KV
-    page (affinity level), slots are the leaves."""
-    groups = max(n_slots // group, 1)
+    page (affinity level), slots are the leaves.
+
+    ``n_slots`` need not divide evenly: the remainder is distributed so
+    group sizes differ by at most one and **every** slot is a schedulable
+    leaf (the old ``n_slots // group`` derivation silently dropped the
+    remainder — ``n_slots=9, group=4`` built 2x4 leaves and slot 8 could
+    never be admitted to)."""
+    assert n_slots >= 1, n_slots
+    groups = max(-(-n_slots // group), 1)             # ceil division
+    base, rem = divmod(n_slots, groups)
+    sizes = [base + 1] * rem + [base] * (groups - rem)
+    fanout = sizes[0] if len(set(sizes)) == 1 else sizes
     return Topology([
         Level("batch", 1),
         Level("page", groups, factor=2.0),
-        Level("slot", n_slots // groups),
+        Level("slot", fanout),
     ])
 
 
+# ---------------------------------------------------------------------------
+# model backends
+# ---------------------------------------------------------------------------
+
+class JaxModelBackend:
+    """The real model zoo: jitted whole-batch decode + per-request prefill.
+
+    State leaves carry the batch at axis 1 (layer-major), matching
+    ``api.lm.init_state``; splice/extract address that axis."""
+
+    def __init__(self, cfg, params, cache_len: int):
+        import jax  # deferred: stub-mode users never pay the import
+        from repro.models import api
+        self._jax = jax
+        self._api = api
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+        self._decode = jax.jit(api.make_decode_fn(cfg))
+        self._prefill = api.make_prefill_fn(cfg, cache_len)
+
+    def init(self, n_slots: int) -> tuple:
+        states = self._api.lm.init_state(self.cfg, n_slots, self.cache_len)
+        return states, np.zeros((n_slots, 1), np.int32)
+
+    def prefill(self, prompt: np.ndarray) -> tuple[int, object]:
+        jnp = self._jax.numpy
+        logits, st = self._prefill(self.params, {"tokens":
+                                                 jnp.asarray(prompt[None, :])})
+        tok = int(jnp.argmax(logits, axis=-1).astype(jnp.int32)[0])
+        return tok, st
+
+    def decode(self, tokens: np.ndarray, states) -> tuple[np.ndarray, object]:
+        jnp = self._jax.numpy
+        logits, states = self._decode(self.params, jnp.asarray(tokens), states)
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B,)
+        return next_tok, states
+
+    def splice(self, states, pairs: list[tuple[int, object]]):
+        """Write several single-sequence states into their batch slots in
+        ONE traversal — the batched next-touch splice (the old engine
+        spliced once per request)."""
+        jnp = self._jax.numpy
+        slots = jnp.asarray([s for s, _ in pairs])
+
+        def write(b, *ones):
+            if b.ndim < 2:
+                return b
+            return b.at[:, slots].set(jnp.concatenate(ones, axis=1))
+
+        return self._jax.tree.map(write, states, *[st for _, st in pairs])
+
+    def extract(self, states, slot: int):
+        return self._jax.tree.map(
+            lambda b: b[:, slot:slot + 1] if b.ndim >= 2 else b, states)
+
+
+class StubModelBackend:
+    """Deterministic numpy decode/prefill stand-in — no jax, no jit.
+
+    Each slot's "KV state" is ``(position, history_hash)``; the next token
+    is a function of the full token history, so any KV mishandling (a lost
+    splice, a stale slot, a wrong-slot write) changes the output stream and
+    is caught by equality tests.  This is what tests and the CI serving
+    benchmark run: the scheduler stack is identical, only the model is
+    stubbed."""
+
+    M = 2_147_483_647                 # hash modulus (prime, fits int64)
+
+    def __init__(self, vocab: int = 251):
+        self.vocab = vocab
+
+    def init(self, n_slots: int) -> tuple[np.ndarray, np.ndarray]:
+        return (np.zeros((n_slots, 2), np.int64),
+                np.zeros((n_slots, 1), np.int32))
+
+    def _fold(self, acc: int, tok: int) -> int:
+        return (acc * 31 + int(tok) + 1) % self.M
+
+    def prefill(self, prompt: np.ndarray) -> tuple[int, np.ndarray]:
+        acc = 0
+        for tok in np.asarray(prompt).ravel():
+            acc = self._fold(acc, tok)
+        return acc % self.vocab, np.array([len(prompt), acc], np.int64)
+
+    def decode(self, tokens: np.ndarray, states: np.ndarray
+               ) -> tuple[np.ndarray, np.ndarray]:
+        acc = (states[:, 1] * 31 + tokens[:, 0].astype(np.int64) + 1) % self.M
+        out = np.stack([states[:, 0] + 1, acc], axis=1)
+        return (acc % self.vocab).astype(np.int32), out
+
+    def splice(self, states: np.ndarray, pairs: list[tuple[int, np.ndarray]]
+               ) -> np.ndarray:
+        states = states.copy()
+        for slot, row in pairs:
+            states[slot] = row
+        return states
+
+    def extract(self, states: np.ndarray, slot: int) -> np.ndarray:
+        return states[slot].copy()
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
-                 cache_len: int = 256):
+    """Continuous batching driven by the shared scheduler runtime.
+
+    * a gang (bubble) bursts only when enough slots are free to co-schedule
+      it (priorities implement the paper's gang scheduling — Figure 1);
+    * prefix-affine requests land in adjacent slots so their shared KV
+      prefix stays resident (the data-sharing relation);
+    * a starving slot's ``acquire`` runs the hierarchical steal pass — a
+      queued gang is pulled whole from a loaded page group, its threads
+      flagged for next-touch so the first post-migration admission re-homes
+      their KV (batched splice), and the thief pays the cost model's
+      admission-latency bill;
+    * page-group queue-depth skew feeds the runtime's cost-benefit test and
+      triggers one bulk ``rebalance`` when recent steal spend exceeds the
+      re-spread bill;
+    * a request group that stalls (client backpressure) is *regenerated*:
+      pulled out of the slots — its per-slot KV parked — and re-queued as a
+      closed bubble, keeping its affinity.
+
+    ``mode="admission"`` is the pre-runtime engine: plain admission, no
+    steal, no rebalance, first-touch homing.
+    """
+
+    def __init__(self, cfg, params, *, n_slots: int = 8,
+                 cache_len: int = 256, group: int = 4,
+                 backend=None, mode: str = "runtime",
+                 cost_model: StealCostModel = SERVE_COST,
+                 depth_skew: int = 2, window: int = 16,
+                 min_backlog: int = 2, cooldown: Optional[int] = None):
+        assert mode in ("runtime", "admission"), mode
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
-        self.sched = BubbleScheduler(slots_topology(n_slots))
+        self.mode = mode
+        self.topo = slots_topology(n_slots, group)
+        if mode == "runtime":
+            self.policy = StealPolicy(self.topo, cost_model=cost_model)
+        else:
+            self.policy = BubblePolicy(self.topo, steal=False)
+        self.sched = self.policy.sched
+        self.runtime = SchedulerRuntime(self.topo, self.policy,
+                                        on_data_migrate=self._on_kv_migrate)
+        self.backend = backend if backend is not None else \
+            JaxModelBackend(cfg, params, cache_len)
+        self.states, self.tokens = self.backend.init(n_slots)
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_thread: dict[int, Thread] = {}
         self._reqs: dict[int, Request] = {}
+        self._gangs: dict[str, Bubble] = {}
         self._next_rid = 0
-        self.states = api.lm.init_state(cfg, n_slots, cache_len)
-        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
-        self._decode = jax.jit(api.make_decode_fn(cfg))
-        self._prefill_cache = {}
+        self._kv_park: dict[int, tuple[object, int]] = {}  # rid -> (state, tok)
+        self._stall = [0.0] * n_slots     # admission-latency bill per slot
+        self._pending: dict[int, Thread] = {}  # claimed, waiting out a stall
+        # queue-depth rebalance trigger state (runtime mode only)
+        self.depth_skew = depth_skew
+        self.min_backlog = min_backlog
+        self.window = window
+        self.cooldown = window if cooldown is None else cooldown
+        self._paid: deque[float] = deque()        # steal cost per step
+        self._steps_since_rebalance = self.cooldown   # start armed
+        self._cost_mark = 0.0
+        self.stats = EngineStats()
         self.steps = 0
         self.completed: list[Request] = []
 
@@ -86,109 +294,270 @@ class ServingEngine:
         t = thread(float(max_new_tokens), name=f"req{rid}", prio=prio,
                    data=gang or f"req{rid}")
         t.request = req                                   # type: ignore
-        if gang is not None:
-            g = self._gang_bubble(gang, prio)
-            g.insert(t)
-            if not getattr(g, "_woken", False):
-                self.sched.wake_up_bubble(g)
-                g._woken = True                           # type: ignore
-        else:
+        if gang is None:
             self.sched.submit_thread(t)
+            return rid
+        g = self._gang_bubble(gang, prio)
+        g.insert(t)
+        if g.burst:
+            # the gang already burst: late joiners land on the list where
+            # it burst (its scheduling area) — inserting into an off-queue
+            # burst husk would strand them forever
+            q = g.home_list if g.home_list is not None \
+                else self.sched.queues.global_queue()
+            q.push(t)
+        elif not self._gang_scheduled(g):
+            # fresh gang, or one that completed/was dropped and has new
+            # members: (re-)wake it.  The old engine set a sticky ``_woken``
+            # flag here, so a finished gang's bubble could never be woken
+            # again and later submits to the same gang were lost.
+            self.sched.wake_up_bubble(g)
         return rid
 
     def _gang_bubble(self, gang: str, prio: int) -> Bubble:
         key = f"gang:{gang}"
-        b = getattr(self, "_gangs", {}).get(key)
+        b = self._gangs.get(key)
         if b is None:
-            if not hasattr(self, "_gangs"):
-                self._gangs = {}
             # gang bubbles less prioritised than their threads => they burst
             # only when running threads can't fill the slots (Figure 1)
             b = bubble(name=key, prio=prio - 1, burst_level="page")
             self._gangs[key] = b
         return b
 
+    def _gang_scheduled(self, g: Bubble) -> bool:
+        """Whether the scheduler still owns the gang: the closed bubble (or
+        any of its tasks) sits on some list, or a member occupies a slot."""
+        for q in self.sched.queues.queues.values():
+            for task in q.tasks:
+                if task is g or task.root() is g:
+                    return True
+        return any(t.parent is g for t in self.slot_thread.values()) or \
+            any(t.parent is g for t in self._pending.values())
+
+    # -- KV homing (the data policy's physical side) --------------------------
+    def _on_kv_migrate(self, data: str, old_slot: int, new_slot: int) -> None:
+        self.stats.kv_migrations += 1
+        if self.topo.common_level(old_slot, new_slot).name == "batch":
+            self.stats.kv_page_moves += 1      # crossed KV page groups
+
     # -- slot management ------------------------------------------------------
-    def _admit(self) -> None:
+    def _admit(self, now: float) -> None:
+        """Fill free slots from the runtime; batch every KV write.
+
+        Parked requests (regenerated, possibly stolen meanwhile) are
+        restored with a *splice* of their saved state — the next-touch
+        re-home — instead of a re-prefill; fresh requests run prefill.
+        All resulting single-slot states are written in one batched
+        splice at the end.
+
+        A scheduler call that accrued cost (a successful steal's remote
+        lock/KV drag) stalls its slot: the claimed thread waits in
+        ``_pending`` and enters the slot only once the admission-latency
+        bill is paid — the slot never holds a half-migrated request whose
+        state the whole-batch decode would advance."""
+        writes: list[tuple[int, object]] = []
         for slot in range(self.n_slots):
-            if self.slot_req[slot] is not None:
+            if self.slot_req[slot] is not None or self._stall[slot] > 0:
                 continue
-            t = self.sched.next_thread(slot)
+            t = self._pending.pop(slot, None)
             if t is None:
-                return
+                t, cost = self.runtime.acquire(slot, now)
+                if cost:
+                    self._stall[slot] += cost
+                    self.stats.stall_steps += cost
+                if t is None:
+                    continue
+                if t.remaining <= 0 or t.request.done:    # stale: drop
+                    self.runtime.release(slot, t, True, now)
+                    continue
+                if self._stall[slot] > 0:     # pay the migration first
+                    self._pending[slot] = t
+                    continue
             req: Request = t.request                      # type: ignore
             self.slot_req[slot] = req
             self.slot_thread[slot] = t
-            self._prefill_into_slot(slot, req)
+            # data policy: first/next-touch homing of the gang's KV pages
+            self.runtime.touch(slot, t)
+            parked = self._kv_park.pop(req.rid, None)
+            if parked is not None:
+                st, tok = parked
+                self.tokens[slot, 0] = tok    # resume the continuation
+            else:
+                tok, st = self.backend.prefill(req.prompt)
+                req.out_tokens.append(tok)
+                self.tokens[slot, 0] = tok
+                self.stats.prefills += 1
+            writes.append((slot, st))
+        if writes:
+            self.states = self.backend.splice(self.states, writes)
+            self.stats.kv_splices += 1
+            self.stats.kv_spliced_slots += len(writes)
 
-    def _prefill_into_slot(self, slot: int, req: Request) -> None:
-        """Run prefill for one request and splice its state into the batch
-        state at ``slot``."""
-        prompt = jnp.asarray(req.prompt[None, :])         # (1, S)
-        logits, st = api.make_prefill_fn(self.cfg, self.cache_len)(
-            self.params, {"tokens": prompt})
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
-        req.out_tokens.append(int(tok[0]))
-        self.tokens = self.tokens.at[slot, 0].set(tok[0])
-        self.states = _splice_states(self.states, st, slot)
-
-    def _evict(self, slot: int) -> None:
+    def _evict(self, slot: int, now: float) -> None:
         req = self.slot_req[slot]
         if req is not None:
             req.done = True
             self.completed.append(req)
         self.slot_req[slot] = None
-        self.slot_thread.pop(slot, None)
+        t = self.slot_thread.pop(slot, None)
+        if t is not None:
+            # the prefill token counts toward max_new_tokens but never
+            # decremented `remaining`; zero it so a later gang regeneration
+            # cannot resurrect the finished thread
+            t.remaining = 0.0
+            self.runtime.release(slot, t, True, now)
+        self.tokens[slot, 0] = 0              # freed slot: no stale decode
+
+    # -- queue-depth rebalance trigger ----------------------------------------
+    def _page_depths(self) -> list[int]:
+        """Runnable decode threads pinned under each page group's lists
+        (work on the global list is reachable by every slot and is not
+        skew)."""
+        depths = []
+        for comp in self.topo.components("page"):
+            n = 0
+            for sub in self.sched._bfs(comp):
+                for task in self.sched.queues.queue_of(sub).tasks:
+                    if isinstance(task, Bubble):
+                        n += sum(1 for th in task.threads()
+                                 if th.remaining > 0)
+                    elif task.remaining > 0:
+                        n += 1
+            depths.append(n)
+        return depths
+
+    def _maybe_rebalance(self, now: float) -> None:
+        """Decode-gang queue depths feed the same cost-benefit test the
+        adaptive simulator policy uses: when one page group's backlog
+        outruns another's by ``depth_skew`` and the steal cost recently
+        paid exceeds one bulk re-spread's bill, re-spread across the page
+        groups instead of letting slots drain the skew one costed steal at
+        a time."""
+        if self.mode != "runtime":
+            return
+        s = self.sched.stats
+        self._paid.append(s.steal_cost - self._cost_mark)
+        self._cost_mark = s.steal_cost
+        if len(self._paid) > self.window:
+            self._paid.popleft()
+        self._steps_since_rebalance += 1
+        if self._steps_since_rebalance < self.cooldown:
+            return
+        depths = self._page_depths()
+        if len(depths) < 2 or max(depths) - min(depths) < self.depth_skew:
+            return
+        if not self.runtime.rebalance_worth_it(sum(self._paid),
+                                               min_backlog=self.min_backlog,
+                                               level="page"):
+            return
+        # bill the re-spread to (a slot of) the emptiest page group — the
+        # one whose starvation triggered it.  The scheduler accrues the
+        # cost for its *next* consume_cost() caller, which outside an
+        # acquire would be an arbitrary slot; drain it here and stall the
+        # triggering slot explicitly instead.
+        page = min(range(len(depths)), key=depths.__getitem__)
+        slot = next(iter(self.topo.components("page")[page].leaves())).cpu
+        self.runtime.rebalance(slot, now, level="page")
+        cost = self.policy.consume_cost()
+        if cost:
+            self._stall[slot] += cost
+            self.stats.stall_steps += cost
+        self.stats.rebalances += 1
+        self._paid.clear()
+        self._cost_mark = self.sched.stats.steal_cost
+        self._steps_since_rebalance = 0
 
     # -- the decode loop -------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit, decode one token for every occupied
-        slot, retire finished requests.  Returns #active slots."""
-        self._admit()
-        active = [s for s in range(self.n_slots) if self.slot_req[s]]
+        """One engine iteration: consider a rebalance, admit, decode one
+        token for every occupied unstalled slot, retire finished requests.
+        Returns #slots decoded."""
+        now = float(self.steps)
+        self.steps += 1
+        self._maybe_rebalance(now)
+        self._admit(now)
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        for s in range(self.n_slots):
+            if self._stall[s] > 0:
+                self._stall[s] = max(0.0, self._stall[s] - 1.0)
         if not active:
             return 0
-        logits, self.states = self._decode(self.params, self.tokens,
-                                           self.states)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,)
-        self.tokens = next_tok[:, None]
-        self.steps += 1
+        next_tok, self.states = self.backend.decode(self.tokens, self.states)
         for s in active:
+            self.tokens[s, 0] = next_tok[s]
             req = self.slot_req[s]
             req.out_tokens.append(int(next_tok[s]))
             t = self.slot_thread[s]
             t.remaining -= 1.0
             if len(req.out_tokens) >= req.max_new_tokens:
-                self._evict(s)
+                self._evict(s, now)
         return len(active)
+
+    def _drained(self) -> bool:
+        return (not any(self.slot_req) and not self._pending
+                and self.sched.queues.total_tasks() == 0
+                and not any(st > 0 for st in self._stall))
 
     def run(self, max_steps: int = 1000) -> list[Request]:
         for _ in range(max_steps):
-            busy = self.step()
-            if busy == 0 and self.sched.queues.total_tasks() == 0:
+            self.step()
+            if self._drained():
                 break
         return self.completed
 
     # -- regeneration (backpressure / straggling client) ------------------------
     def regenerate_gang(self, gang: str) -> int:
-        """Pull a gang's requests out of the slots; re-queue the closed
-        bubble (affinity preserved)."""
-        b = getattr(self, "_gangs", {}).get(f"gang:{gang}")
+        """Pull a gang's requests out of the slots — parking each slot's KV
+        state and last token so the later re-admission resumes the
+        continuation via the batched splice — and re-queue the closed
+        bubble (affinity preserved).
+
+        The old engine left the freed slots' tokens and the popped threads'
+        running state behind: a re-queued gang decoded from stale tokens
+        and could never be woken again once finished."""
+        b = self._gangs.get(f"gang:{gang}")
         if b is None:
             return 0
+        now = float(self.steps)
+        # a member claimed into _pending (waiting out its steal stall) goes
+        # back into the bubble: the regenerated gang re-pushes it at its
+        # next burst, and leaving it pending too would double-schedule it
+        for s, t in list(self._pending.items()):
+            if t.parent is b:
+                del self._pending[s]
+                self.runtime.release(s, t, False, now)
         n = 0
         for s in range(self.n_slots):
             req = self.slot_req[s]
             if req is not None and req.gang == gang and not req.done:
-                self.slot_req[s] = None
                 t = self.slot_thread.pop(s)
+                self.slot_req[s] = None
+                self._kv_park[req.rid] = (self.backend.extract(self.states, s),
+                                          int(self.tokens[s, 0]))
+                self.stats.kv_parks += 1
+                self.tokens[s, 0] = 0
+                self.runtime.release(s, t, False, now)
                 n += 1
         self.sched.regenerate(b, running={})
         return n
 
-
-def _splice_states(batch_states, one_states, slot: int):
-    """Write a single-sequence decode state into batch position ``slot``."""
-    def splice(b, o):
-        return b.at[:, slot:slot + 1].set(o) if b.ndim >= 2 else b
-    return jax.tree.map(splice, batch_states, one_states)
+    # -- introspection ---------------------------------------------------------
+    def counters(self) -> dict:
+        """Engine + scheduler ledger in one dict (benchmark rows)."""
+        s = self.sched.stats
+        return {
+            "steps": self.steps,
+            "steals": s.steals, "steal_attempts": s.steal_attempts,
+            "steal_cost": round(s.steal_cost, 4),
+            "rebalances": s.rebalances,
+            "rebalance_moves": s.rebalance_moves,
+            "data_migrations": self.runtime.data_migrations,
+            "kv_migrations": self.stats.kv_migrations,
+            "kv_page_moves": self.stats.kv_page_moves,
+            "kv_splices": self.stats.kv_splices,
+            "kv_spliced_slots": self.stats.kv_spliced_slots,
+            "kv_parks": self.stats.kv_parks,
+            "prefills": self.stats.prefills,
+            "stall_steps": round(self.stats.stall_steps, 4),
+        }

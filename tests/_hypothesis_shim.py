@@ -77,15 +77,16 @@ def given(**strategies: Strategy):
 
     def deco(fn):
         # NOTE: no functools.wraps — pytest follows ``__wrapped__`` to the
-        # original signature and would mistake the drawn params for fixtures
-        def wrapper():
+        # original signature and would mistake the drawn params for fixtures.
+        # *args passes through ``self`` when the test is a method.
+        def wrapper(*args):
             n = getattr(wrapper, "_shim_max_examples",
                         DEFAULT_MAX_EXAMPLES)
             for i in range(n):
                 rng = random.Random(i)
                 drawn = {k: s.example(rng) for k, s in strategies.items()}
                 try:
-                    fn(**drawn)
+                    fn(*args, **drawn)
                 except Exception as e:  # annotate with the reproducing seed
                     raise AssertionError(
                         f"shim example #{i} (seed={i}) failed: {e!r}\n"

@@ -1,0 +1,147 @@
+"""SchedulerRuntime unit tests: the extracted decision loop itself.
+
+The two consumers pin the integration behaviour elsewhere (the simulator
+via the golden traces, the serving engine via tests/test_serving.py);
+these tests cover the runtime's own contract — acquire/billing, the
+first/next-touch data policy with the migration callback, the cost-benefit
+rebalance trigger, and the counter-delta ledger.
+"""
+
+import pytest
+
+from repro.core import (SchedulerRuntime, SimplePolicy, StealCostModel,
+                        StealPolicy, bubble, novascale_16, rebalance_worth_it,
+                        thread)
+from repro.core.scheduler import BubbleScheduler
+
+
+def _runtime(**kw):
+    topo = novascale_16()
+    pol = StealPolicy(topo, cost_model=kw.pop("cost_model", StealCostModel()))
+    return SchedulerRuntime(topo, pol, **kw), pol
+
+
+class TestDataPolicyResolution:
+    def test_policy_preference_wins_over_default(self):
+        rt, _ = _runtime()
+        assert rt.data_policy == "next_touch"        # StealPolicy preference
+
+    def test_explicit_arg_wins_over_preference(self):
+        rt, _ = _runtime(data_policy="first_touch")
+        assert rt.data_policy == "first_touch"
+
+    def test_flat_policy_defaults_to_first_touch(self):
+        topo = novascale_16()
+        rt = SchedulerRuntime(topo, SimplePolicy(topo))
+        assert rt.data_policy == "first_touch"
+        assert rt.sched is None
+        assert rt.counters() == {k: 0 for k in rt.SCHED_COUNTERS}
+        assert not rt.rebalance_worth_it(1e9)        # nothing to re-spread
+        assert rt.rebalance(0) == 0
+
+
+class TestTouch:
+    def test_first_toucher_homes_data(self):
+        rt, _ = _runtime()
+        t = thread(4.0, data="page")
+        assert rt.touch(3, t) == (3, False)
+        assert rt.homes["page"] == 3
+        assert rt.touch(9, t) == (3, False)          # not stolen: stays put
+
+    def test_stolen_thread_rehomes_once(self):
+        moved = []
+        rt, _ = _runtime(on_data_migrate=lambda *a: moved.append(a))
+        t = thread(4.0, data="page")
+        rt.homes["page"] = 12
+        t.stolen = True
+        assert rt.touch(0, t) == (0, True)
+        assert rt.homes["page"] == 0
+        assert rt.data_migrations == 1
+        assert moved == [("page", 12, 0)]
+        assert not t.stolen                           # flag is one-shot
+        assert rt.touch(0, t) == (0, False)           # now local for real
+        assert rt.migration_log == [("page", 12, 0)]
+
+    def test_first_touch_policy_consumes_flag_without_moving(self):
+        rt, _ = _runtime(data_policy="first_touch")
+        t = thread(4.0, data="page")
+        rt.homes["page"] = 12
+        t.stolen = True
+        assert rt.touch(0, t) == (12, False)
+        assert rt.data_migrations == 0 and not t.stolen
+
+    def test_dataless_thread_never_homes(self):
+        rt, _ = _runtime()
+        t = thread(4.0)
+        t.stolen = True
+        assert rt.touch(5, t) == (5, False)
+        assert rt.homes == {} and not t.stolen
+
+
+class TestAcquireBilling:
+    def test_acquire_returns_thread_and_steal_bill(self):
+        cm = StealCostModel(lock_penalty=2.0, level_penalty=4.0,
+                            thread_penalty=1.0)
+        rt, pol = _runtime(cost_model=cm)
+        grp = bubble(thread(2.0), thread(2.0), name="grp")
+        pol.sched.queues.queue_of(rt.topo.components("node")[3]).push(grp)
+        t, cost = rt.acquire(0)
+        assert t is not None
+        assert cost == pytest.approx(2.0 + 4.0 * 2 + 1.0 * 2)
+        _, again = rt.acquire(1)
+        assert again == 0.0                           # bill drained once
+
+    def test_release_returns_thread_to_policy(self):
+        rt, pol = _runtime()
+        pol.sched.submit_thread(thread(2.0, name="t"))
+        t, _ = rt.acquire(0)
+        assert pol.running[0] is t
+        rt.release(0, t, True)
+        assert 0 not in pol.running
+
+
+class TestRebalanceWorthIt:
+    CM = StealCostModel(lock_penalty=1.0, rebalance_base=2.0,
+                        rebalance_per_move=0.5)
+
+    def _loaded(self):
+        rt, pol = _runtime(cost_model=self.CM)
+        for _ in range(6):
+            pol.sched.queues.global_queue().push(thread(3.0))
+        return rt, pol
+
+    def test_spend_below_base_cost_never_triggers(self):
+        rt, _ = self._loaded()
+        assert not rt.rebalance_worth_it(2.0)         # <= rebalance_base
+        assert not rebalance_worth_it(rt.sched, 0.0)
+
+    def test_spend_above_bill_triggers(self):
+        rt, _ = self._loaded()
+        bill = self.CM.rebalance_cost(6)              # 2.0 + 3.0
+        assert rt.rebalance_worth_it(bill + 0.1)
+        assert not rt.rebalance_worth_it(bill)        # strict >
+
+    def test_min_backlog_gates(self):
+        rt, _ = self._loaded()
+        assert not rt.rebalance_worth_it(100.0, min_backlog=7)
+        assert rt.rebalance_worth_it(100.0, min_backlog=6)
+
+    def test_rebalance_bills_through_next_acquire(self):
+        rt, pol = self._loaded()
+        moves = rt.rebalance(0)
+        assert moves == 6
+        t, cost = rt.acquire(0)
+        assert cost == pytest.approx(self.CM.rebalance_cost(6))
+
+
+class TestLedger:
+    def test_counter_deltas_isolate_runs(self):
+        rt, pol = _runtime(cost_model=StealCostModel(lock_penalty=1.0))
+        pol.sched.queues.queue_of(rt.topo.components("node")[2]).push(
+            bubble(thread(2.0), name="g"))
+        before = rt.counters()
+        t, _ = rt.acquire(0)
+        assert t is not None
+        delta = rt.counter_deltas(before, rt.counters())
+        assert delta["steals"] == 1
+        assert delta["steal_cost"] == pytest.approx(1.0)

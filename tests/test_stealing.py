@@ -153,6 +153,141 @@ class TestStealPass:
 
 
 # ---------------------------------------------------------------------------
+# cost-aware victim selection (work-per-cost ranking under a nonzero model)
+# ---------------------------------------------------------------------------
+
+class TestCostAwareVictimSelection:
+    CM = StealCostModel(lock_penalty=1.0, level_penalty=4.0,
+                        thread_penalty=1.0)
+
+    def test_near_lighter_bubble_beats_far_heavier(self):
+        """The ROADMAP case: under a cost model, a nearer, slightly
+        lighter bubble is the better steal — raw heaviest-loot ranking
+        would take the heavier bubble two levels out and pay double the
+        level penalty."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.CM)
+        near = bubble(thread(4.5), thread(4.5), name="near")     # work 9
+        far = bubble(thread(6.0), thread(6.0), name="far")       # work 12
+        sched.queues.queue_of(topo.cpus[1]).push(near)   # sibling cpu: dist 1
+        sched.queues.queue_of(topo.components("node")[3]).push(far)  # dist 2
+        # scores: near 9/(1+4+2)=1.29 > far 12/(1+8+2)=1.09
+        got = sched._steal_pass(0)
+        assert got is not None and got[1] is near
+        assert sched.stats.last_steal_distance == 1
+
+    def test_fewer_threads_to_drag_wins_at_same_level(self):
+        """Same distance, same-ish work: the bubble dragging fewer live
+        threads has the better work-per-cost."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.CM)
+        many = bubble(*[thread(1.25) for _ in range(8)], name="many")  # w 10
+        few = bubble(thread(4.5), thread(4.5), name="few")             # w 9
+        q = sched.queues.queue_of(topo.components("node")[1])
+        q.push(many)
+        q.push(few)
+        # scores: many 10/(1+8+8)=0.59 < few 9/(1+8+2)=0.82
+        got = sched._steal_pass(0)
+        assert got is not None and got[1] is few
+
+    def test_far_worthwhile_bubble_beats_near_scrap_thread(self):
+        """The costed pass surveys *all* covering levels: a big affinity
+        group two levels out can out-score a near lone thread — the free
+        path would have stopped at the first level with any candidate."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.CM)
+        scrap = thread(2.0, name="scrap")
+        sched.queues.queue_of(topo.cpus[1]).push(scrap)
+        grp = bubble(*[thread(20.0) for _ in range(2)], name="grp")
+        sched.queues.queue_of(topo.components("node")[3]).push(grp)
+        got = sched._steal_pass(0)
+        assert got is not None and got[1] is grp
+
+    def test_zero_cost_keeps_heaviest_per_level(self):
+        """Control: with free steals the historical selection is intact —
+        closest level first, heaviest loot within it (the golden traces
+        additionally pin this end-to-end)."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo)                    # ZERO_COST
+        near = bubble(thread(4.5), thread(4.5), name="near")
+        far = bubble(thread(6.0), thread(6.0), name="far")
+        sched.queues.queue_of(topo.cpus[1]).push(near)
+        sched.queues.queue_of(topo.components("node")[3]).push(far)
+        got = sched._steal_pass(0)
+        assert got is not None and got[1] is near        # same pick here
+        sched2 = BubbleScheduler(topo)
+        scrap = thread(2.0, name="scrap")
+        sched2.queues.queue_of(topo.cpus[1]).push(scrap)
+        grp = bubble(*[thread(20.0) for _ in range(2)], name="grp")
+        sched2.queues.queue_of(topo.components("node")[3]).push(grp)
+        got2 = sched2._steal_pass(0)
+        assert got2 is not None and got2[1] is scrap     # closest level wins
+
+    def test_distance_histogram_filled(self):
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.CM)
+        sched.queues.queue_of(topo.cpus[1]).push(thread(1.0))
+        sched.queues.queue_of(topo.components("node")[3]).push(thread(9.0))
+        sched._steal_pass(0)
+        sched._steal_pass(0)
+        assert sched.stats.steal_distance_hist == {1: 1, 2: 1}
+
+
+# ---------------------------------------------------------------------------
+# adaptive rebalance level (derived from the steal-distance histogram)
+# ---------------------------------------------------------------------------
+
+class TestAdaptiveRebalanceLevel:
+    def test_explicit_level_always_wins(self):
+        sched = BubbleScheduler(novascale_16())
+        sched.stats.steal_distance_hist = {1: 100}
+        assert sched._resolve_spread_level("machine") == "machine"
+
+    def test_no_observations_falls_back_to_default(self):
+        sched = BubbleScheduler(novascale_16())
+        assert sched._resolve_spread_level(None) == "node"
+
+    def test_modal_distance_picks_matching_level(self):
+        sched = BubbleScheduler(novascale_16())
+        sched.stats.steal_distance_hist = {2: 5, 1: 2}   # cross-node mode
+        assert sched._resolve_spread_level(None) == "node"
+        sched.stats.steal_distance_hist = {1: 5, 2: 2}   # sibling-cpu mode
+        assert sched._resolve_spread_level(None) == "cpu"
+        sched.stats.steal_distance_hist = {1: 3, 2: 3}   # tie: wider wins
+        assert sched._resolve_spread_level(None) == "node"
+
+    def test_sibling_churn_respreads_at_cpu_level(self):
+        """End-to-end: steals observed only at distance 1 make a
+        level=None rebalance deal across the per-cpu lists."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo,
+                                cost_model=StealCostModel(lock_penalty=1.0))
+        for i in range(3):
+            sched.queues.queue_of(topo.cpus[1]).push(thread(5.0))
+        sched._steal_pass(0)                              # distance-1 steal
+        assert sched.stats.steal_distance_hist == {1: 1}
+        sched.rebalance(0)
+        cpu_qs = [len(sched.queues.queue_of(c)) for c in topo.cpus]
+        assert sum(cpu_qs) == 2                  # both queued tasks re-dealt
+        assert max(cpu_qs) == 1                  # ...across per-cpu lists
+
+    def test_thrash_workload_derives_node_and_still_wins(self):
+        """On the thrash tree the steal traffic is cross-node (modal
+        distance 2): the derived spread level is ``node``, rebalances
+        fire, and adaptive still beats costed steal (the PR 2 acceptance
+        preserved under the adaptive knob)."""
+        r_steal, ps = _sim(StealPolicy, thrash_stripes_workload,
+                           cost_model=THRASH_COST)
+        r_adapt, pa = _sim(AdaptivePolicy, thrash_stripes_workload,
+                           cost_model=THRASH_COST)
+        hist = pa.sched.stats.steal_distance_hist
+        assert max(hist, key=lambda k: (hist[k], k)) == 2
+        assert pa.sched._resolve_spread_level(None) == "node"
+        assert pa.sched.stats.rebalances > 0
+        assert r_adapt.time < r_steal.time
+
+
+# ---------------------------------------------------------------------------
 # conservation + integration through next_thread
 # ---------------------------------------------------------------------------
 
