@@ -11,7 +11,8 @@
 #                     benchmarks/baseline_smoke.json (>10% speedup drop fails)
 #   make serve-gate   stub-model serving-gang benchmark alone (seconds, no
 #                     jax) gated against the serve/ baseline rows
-#   make golden-check regenerate the golden traces and fail on any drift
+#   make golden-check regenerate the golden traces (simulator + serving
+#                     engine) and fail on any drift
 #   make bench        the full paper tables (slow: includes wall-clock
 #                     Table 1 and the roofline dry-run)
 
@@ -38,10 +39,11 @@ serve-gate:
 	$(PYTHON) benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_serve.json --prefix serve/
 
-# GOLDEN_OUT=path additionally writes the regenerated dict there (CI
-# uploads it as the paste-ready artifact on drift)
+# GOLDEN_OUT / SERVING_GOLDEN_OUT additionally write the regenerated
+# dicts there (CI uploads them as the paste-ready artifacts on drift)
 golden-check:
 	$(PYTHON) tests/test_golden.py --check $(if $(GOLDEN_OUT),--out $(GOLDEN_OUT))
+	$(PYTHON) tests/test_serving_golden.py --check $(if $(SERVING_GOLDEN_OUT),--out $(SERVING_GOLDEN_OUT))
 
 bench:
 	$(PYTHON) benchmarks/run.py

@@ -3,21 +3,34 @@
 Usage::
 
     python benchmarks/check_regression.py BASELINE.json CURRENT.json \
-        [--tolerance 0.10] [--prefix table2/]
+        [--tolerance 0.10] [--gain-tolerance 5.0] [--prefix table2/]
 
 ``--prefix`` restricts the gate to rows whose name starts with the given
 prefix — for partial runs (e.g. ``serve_gangs.py --smoke`` writes only
 ``serve/`` rows; gating the full baseline against it would flag every
-other row as missing).
+other row as missing).  A prefix that matches **zero** gated baseline rows
+is a usage error (exit 2): a typo'd prefix must not silently gate nothing
+and pass.
 
-Gates on ``kind == "speedup"`` rows (Table 2 + serving): the current speedup must be
-at least ``baseline * (1 - tolerance)``.  Gain-% and wall-clock rows are
-reported but not gated — speedups are the paper's headline metric and are
-fully deterministic in the simulator, so a >10% drop is a real scheduling
-regression, not noise.  A gated baseline row that disappears from the
-current run also fails (a silently dropped benchmark is a regression in
-coverage).  New rows are allowed — commit a refreshed baseline to start
-gating them.
+Two kinds of row are gated:
+
+* ``kind == "speedup"`` (Table 2 + serving): the current speedup must be
+  at least ``baseline * (1 - tolerance)`` — a *relative* band, because a
+  15x conduction speedup and a 1.3x serving speedup tolerate
+  proportionally similar jitter.
+* ``kind == "gain_pct"`` (Fig 5): the current gain must be at least
+  ``baseline - gain_tolerance`` — an *absolute* band in percentage
+  points.  Gains are already ratios of two runtimes expressed in percent;
+  a relative band would be meaninglessly tight near 0% and uselessly
+  loose near 60%, so the band is points (default 5.0 — generous for a
+  fully deterministic simulator, tight enough that a real placement
+  regression, which historically costs 10+ points, still fails).
+
+Wall-clock rows (``us_per_call``, ``step_ms``) are reported but not gated
+— they are the only nondeterministic rows.  A gated baseline row that
+disappears from the current run also fails (a silently dropped benchmark
+is a regression in coverage).  New rows are allowed — commit a refreshed
+baseline to start gating them.
 
 Exit codes: 0 ok, 1 regression(s), 2 usage/IO error.  To refresh the
 baseline after an intentional change::
@@ -30,6 +43,8 @@ from __future__ import annotations
 import json
 import sys
 
+GATED_KINDS = ("speedup", "gain_pct")
+
 
 def load_rows(path: str) -> dict[str, dict]:
     with open(path) as f:
@@ -38,21 +53,35 @@ def load_rows(path: str) -> dict[str, dict]:
     return {r["name"]: r for r in doc["rows"]}
 
 
+def floor_for(row: dict, tolerance: float, gain_tolerance: float) -> float:
+    """The gate floor: relative band for speedups, absolute points band
+    for gain percentages (see module docstring for the rationale)."""
+    if row.get("kind") == "gain_pct":
+        return row["value"] - gain_tolerance
+    return row["value"] * (1.0 - tolerance)
+
+
 def main(argv: list[str]) -> int:
     tolerance = 0.10
+    gain_tolerance = 5.0
     prefix = ""
     args = []
     i = 0
     while i < len(argv):
-        if argv[i] == "--tolerance":
+        if argv[i] in ("--tolerance", "--gain-tolerance"):
+            flag = argv[i]
             if i + 1 >= len(argv):
-                print("error: --tolerance needs a value")
+                print(f"error: {flag} needs a value")
                 return 2
             try:
-                tolerance = float(argv[i + 1])
+                value = float(argv[i + 1])
             except ValueError:
-                print(f"error: --tolerance needs a number, got {argv[i + 1]!r}")
+                print(f"error: {flag} needs a number, got {argv[i + 1]!r}")
                 return 2
+            if flag == "--tolerance":
+                tolerance = value
+            else:
+                gain_tolerance = value
             i += 2
             continue
         if argv[i] == "--prefix":
@@ -77,32 +106,47 @@ def main(argv: list[str]) -> int:
         print(f"error: {e}")
         return 2
 
-    failures, checked = [], 0
-    for name, brow in sorted(base.items()):
-        if brow.get("kind") != "speedup" or not name.startswith(prefix):
-            continue
+    gated = sorted(name for name, row in base.items()
+                   if row.get("kind") in GATED_KINDS
+                   and name.startswith(prefix))
+    if not gated:
+        # a typo'd prefix would otherwise gate nothing and exit 0 — the
+        # most dangerous way for a CI gate to "pass".  Distinguish the
+        # no-prefix case so an operator is not sent hunting a flag they
+        # never passed.
+        if prefix:
+            print(f"error: --prefix {prefix!r} matched no gated baseline "
+                  f"rows in {args[0]} ({len(base)} rows total)")
+        else:
+            print(f"error: {args[0]} contains no gated rows "
+                  f"(kinds {GATED_KINDS}; {len(base)} rows total)")
+        return 2
+
+    failures = []
+    for name in gated:
+        brow = base[name]
         crow = cur.get(name)
         if crow is None:
             failures.append(f"{name}: gated row missing from current run "
                             f"(baseline {brow['value']:.4f})")
             continue
-        checked += 1
-        floor = brow["value"] * (1.0 - tolerance)
+        floor = floor_for(brow, tolerance, gain_tolerance)
         status = "FAIL" if crow["value"] < floor else "ok"
         print(f"{status:4s} {name:40s} base={brow['value']:8.4f} "
               f"cur={crow['value']:8.4f} floor={floor:8.4f}")
         if crow["value"] < floor:
             failures.append(
                 f"{name}: {crow['value']:.4f} < floor {floor:.4f} "
-                f"({(1 - crow['value'] / brow['value']) * 100:.1f}% below "
-                f"baseline {brow['value']:.4f})")
+                f"(baseline {brow['value']:.4f}, "
+                f"{'abs' if brow.get('kind') == 'gain_pct' else 'rel'} band)")
     for name in sorted(set(cur) - set(base)):
-        if cur[name].get("kind") == "speedup" and name.startswith(prefix):
+        if cur[name].get("kind") in GATED_KINDS and name.startswith(prefix):
             print(f"new  {name:40s} cur={cur[name]['value']:8.4f} "
                   "(ungated; refresh baseline to gate)")
 
-    print(f"\n{checked} speedup rows checked against tolerance "
-          f"{tolerance:.0%}; {len(failures)} regression(s)")
+    print(f"\n{len(gated)} gated rows checked (speedup band {tolerance:.0%}, "
+          f"gain band {gain_tolerance:g} points); "
+          f"{len(failures)} regression(s)")
     for f in failures:
         print(f"REGRESSION: {f}")
     return 1 if failures else 0

@@ -17,6 +17,22 @@ a hash chain whose output detects any KV mishandling):
   migration: every interrupted request resumes its exact continuation
   (asserted), and the counters prove steals, KV migrations, and rebalances
   actually fired.
+* **multihost** — the pod-sharded fleet (2 pods x 2 hosts x 2 KV page
+  groups x 4 slots): a fat gang floods host0 while every other host holds
+  local backlog reachable only through the steal survey (homed on one of
+  its two page lists).  The DCN-naive engine ranks victims with flat
+  per-level costs (``FLAT_SERVE_COST``) but pays real DCN latency
+  (``bill_model=SERVE_COST``), so it keeps dragging heavy remote loot
+  across the pod boundary while its own backlog waits; the DCN-priced
+  engine steals its cheap sibling-page work first.
+  ``serve/multihost_steal_speedup`` is the gated row (acceptance: >= 1.2x,
+  identical decode streams asserted).
+* **hbm pressure** — per-page-group HBM budgets tighter than the slot
+  count: the capacity-aware engine refuses loot that will not fit (the
+  steal survey skips full groups, admission parks gangs), the
+  capacity-blind baseline claims first and discovers fullness at splice
+  time — paying steal bills for loot that bounces straight back.
+  ``serve/hbm_pressure_refusal_speedup`` is the gated row.
 
 Rows are schema-1 (see ``benchmarks/run.py``) with a ``counters`` dict; the
 standalone entry point merges them into ``BENCH_smoke.json`` so the
@@ -39,7 +55,8 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 import numpy as np
 
-from repro.serving import ServingEngine, StubModelBackend
+from repro.serving import (FLAT_SERVE_COST, SERVE_COST, ServingEngine,
+                           StubModelBackend)
 
 N_SLOTS = 8          # 2 KV page groups x 4 slots
 NEW_TOKENS = 12
@@ -88,6 +105,72 @@ def _streams(eng: ServingEngine) -> dict:
     return {r.rid: tuple(r.out_tokens) for r in eng.completed}
 
 
+# -- multi-host: the skewed-pod fleet ---------------------------------------
+
+def _multihost_engine(dcn_aware: bool) -> ServingEngine:
+    """2 pods x 2 hosts x 8 slots; the DCN-naive engine *ranks* steal
+    victims with flat per-level prices but *pays* the DCN table."""
+    if dcn_aware:
+        cost, bill = SERVE_COST, None
+    else:
+        cost, bill = FLAT_SERVE_COST, SERVE_COST
+    return ServingEngine(None, None, n_slots=32, pods=2, hosts=2,
+                         backend=StubModelBackend(), mode="runtime",
+                         cost_model=cost, bill_model=bill)
+
+
+def _submit_skewed_pod(eng: ServingEngine) -> int:
+    """One fat gang floods host0; every other host gets local backlog homed
+    on ONE of its two page lists — reachable by the host's other page only
+    through the steal survey, where the fat gang's heavier threads tempt a
+    flat-cost ranking into paying DCN drags it did not need."""
+    rng = np.random.default_rng(0)
+    n = 0
+    for _ in range(16):
+        eng.submit(rng.integers(1, 250, 8), 28, gang="fat", home="host0")
+        n += 1
+    for h in range(1, 4):
+        for g in range(2):
+            for _ in range(8):
+                eng.submit(rng.integers(1, 250, 8), 12, gang=f"h{h}g{g}",
+                           home=f"page{2 * h}")
+                n += 1
+    return n
+
+
+def _run_multihost(dcn_aware: bool) -> ServingEngine:
+    eng = _multihost_engine(dcn_aware)
+    n = _submit_skewed_pod(eng)
+    eng.run(max_steps=8000)
+    assert len(eng.completed) == n, (dcn_aware, len(eng.completed), n)
+    return eng
+
+
+# -- HBM pressure: budgets tighter than the slot count ----------------------
+
+def _run_hbm(capacity_aware: bool) -> ServingEngine:
+    """2 hosts x 2 page groups x 4 slots, 2 resident KV per group: a fat
+    gang pinned to host0 plus lone host1 requests keep every group at its
+    budget, so loot placement is capacity-bound, not work-bound."""
+    eng = ServingEngine(None, None, n_slots=16, hosts=2,
+                        backend=StubModelBackend(), mode="runtime",
+                        hbm_budget=2.0, kv_bytes=1.0,
+                        capacity_aware=capacity_aware)
+    rng = np.random.default_rng(0)
+    n = 0
+    for _ in range(24):
+        eng.submit(rng.integers(1, 250, 8), 10, gang="fat", home="host0")
+        n += 1
+    for _ in range(6):
+        eng.submit(rng.integers(1, 250, 8), 6, prio=1, home="host1")
+        n += 1
+    eng.run(max_steps=8000)
+    assert len(eng.completed) == n, (capacity_aware, len(eng.completed), n)
+    assert all(0.0 <= u <= eng.hbm_budget + 1e-9 for u in eng.hbm_used), \
+        eng.hbm_used
+    return eng
+
+
 def run(smoke: bool = False) -> list[tuple]:
     rows: list[tuple] = []
 
@@ -118,6 +201,40 @@ def run(smoke: bool = False) -> list[tuple]:
         f"steps {base.steps}->{fast.steps} kv_parks={c['kv_parks']}"
         f" kv_splices={c['kv_splices']} data_migrations="
         f"{c['data_migrations']}",
+        c))
+
+    # -- multi-host skewed pod: DCN-priced vs DCN-naive stealing -------------
+    naive = _run_multihost(dcn_aware=False)
+    aware = _run_multihost(dcn_aware=True)
+    # mispricing the DCN must never change what was decoded
+    assert _streams(naive) == _streams(aware), "DCN pricing changed output"
+    c = aware.counters()
+    c["steps_naive"] = naive.steps
+    c["naive_steal_cost"] = naive.counters()["steal_cost"]
+    c["naive_kv_host_moves"] = naive.counters()["kv_host_moves"]
+    rows.append((
+        "serve/multihost_steal_speedup", naive.steps / aware.steps,
+        f"steps {naive.steps}->{aware.steps}"
+        f" steal_cost {c['naive_steal_cost']}->{c['steal_cost']}"
+        f" kv_host_moves {c['naive_kv_host_moves']}->{c['kv_host_moves']}",
+        c))
+
+    # -- HBM pressure: capacity-aware vs capacity-blind placement ------------
+    blind = _run_hbm(capacity_aware=False)
+    awarekv = _run_hbm(capacity_aware=True)
+    assert _streams(blind) == _streams(awarekv), \
+        "capacity policy changed decode output"
+    c = awarekv.counters()
+    c["steps_blind"] = blind.steps
+    c["blind_steal_cost"] = blind.counters()["steal_cost"]
+    c["blind_hbm_refusals"] = blind.counters()["hbm_refusals"]
+    rows.append((
+        "serve/hbm_pressure_refusal_speedup", blind.steps / awarekv.steps,
+        f"steps {blind.steps}->{awarekv.steps}"
+        f" steal_cost {c['blind_steal_cost']}->{c['steal_cost']}"
+        f" steal_refusals={c['steal_refusals']}"
+        f" blind_bounces={c['blind_hbm_refusals']}"
+        f" slot_waits={c['hbm_slot_waits']}",
         c))
     return rows
 

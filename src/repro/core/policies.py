@@ -209,10 +209,12 @@ class BubblePolicy(Policy):
     name = "bubbles"
 
     def __init__(self, topo: Topology, *, respect_hints: bool = True,
-                 steal: bool = True, cost_model: StealCostModel = ZERO_COST):
+                 steal: bool = True, cost_model: StealCostModel = ZERO_COST,
+                 bill_model: Optional[StealCostModel] = None):
         super().__init__(topo)
         self.sched = BubbleScheduler(topo, respect_hints=respect_hints,
-                                     steal=steal, cost_model=cost_model)
+                                     steal=steal, cost_model=cost_model,
+                                     bill_model=bill_model)
         self.root: Optional[Bubble] = None
         self.running: dict[int, Thread] = {}
 
@@ -273,9 +275,10 @@ class StealPolicy(BubblePolicy):
     preferred_data_policy = "next_touch"
 
     def __init__(self, topo: Topology, *, respect_hints: bool = True,
-                 cost_model: StealCostModel = ZERO_COST):
+                 cost_model: StealCostModel = ZERO_COST,
+                 bill_model: Optional[StealCostModel] = None):
         super().__init__(topo, respect_hints=respect_hints, steal=True,
-                         cost_model=cost_model)
+                         cost_model=cost_model, bill_model=bill_model)
 
 
 class AdaptivePolicy(StealPolicy):

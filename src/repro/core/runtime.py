@@ -21,7 +21,11 @@ ARMS, arXiv:2112.09509):
   flagged ``stolen`` re-homes its data under the next toucher.  Consumers
   register ``on_data_migrate`` to give the migration a physical meaning
   (the simulator re-prices NUMA distance; the serving engine re-homes a
-  gang's KV pages with a batched splice);
+  gang's KV pages with a batched splice).  The capacity side is the
+  ``can_accept`` callback: a consumer whose destinations have finite room
+  (per-page HBM budgets) vetoes steals and rebalance placements that the
+  destination could not hold, and the refusals are accounted in the
+  ledger;
 * :meth:`SchedulerRuntime.rebalance_worth_it` /
   :meth:`SchedulerRuntime.rebalance` — the AdaptivePolicy-style cost-benefit
   trigger as a runtime callback: a proactive bulk re-spread fires only when
@@ -89,14 +93,15 @@ class SchedulerRuntime:
 
     # per-run deltas of the scheduler's steal/rebalance accounting, so a
     # reused runtime reports each run's own activity, not cumulatives
-    SCHED_COUNTERS = ("steals", "steal_attempts", "steal_distance",
-                      "steal_cost", "rebalances", "rebalance_moves",
-                      "rebalance_cost")
+    SCHED_COUNTERS = ("steals", "steal_attempts", "steal_refusals",
+                      "steal_distance", "steal_cost", "rebalances",
+                      "rebalance_moves", "rebalance_cost")
 
     def __init__(self, topo: Topology, policy, *,
                  data_policy: Optional[str] = None,
                  on_data_migrate: Optional[
-                     Callable[[str, int, int], None]] = None):
+                     Callable[[str, int, int], None]] = None,
+                 can_accept: Optional[Callable[..., bool]] = None):
         self.topo = topo
         self.policy = policy
         # memory policy: explicit arg > policy preference > first touch
@@ -104,6 +109,15 @@ class SchedulerRuntime:
             policy, "preferred_data_policy", "first_touch")
         assert self.data_policy in DATA_POLICIES, self.data_policy
         self.on_data_migrate = on_data_migrate
+        # capacity side of the data policy: ``can_accept(cpu, task,
+        # pending=())`` lets the consumer veto migrations whose
+        # destination cannot hold the task's data (the serving engine's
+        # per-page HBM budgets); ``pending`` carries the tasks a bulk
+        # rebalance deal has already routed to the same destination.
+        # Wired straight onto the scheduler's steal survey / rebalance
+        # deal; refusals surface in :meth:`counters` as ``steal_refusals``.
+        if can_accept is not None and self.sched is not None:
+            self.sched.capacity_cb = can_accept
         self.homes: dict[str, int] = {}          # data id -> home cpu
         self.data_migrations = 0                 # next-touch re-homes done
         self.migration_log: list[tuple[str, int, int]] = []  # (data, from, to)

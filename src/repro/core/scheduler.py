@@ -50,10 +50,20 @@ class StealCostModel:
     locks and the loot's threads drag cold caches / remote pages behind
     them.  Every successful steal charges the thief
 
-        ``lock_penalty + level_penalty * levels_crossed
+        ``lock_penalty + per_level * levels_crossed
                        + thread_penalty * live_threads_moved``
 
     in simulator quanta (:meth:`Topology.levels_crossed` is the distance).
+    ``per_level`` defaults to the uniform ``level_penalty``; a non-uniform
+    machine prices each boundary separately through ``level_table``, a
+    tuple of ``(level_name, penalty)`` pairs looked up by the *boundary*
+    the steal crosses (:meth:`Topology.crossing_level`) — on a pod-sharded
+    serving fleet a ``host`` crossing pays DCN round-trips and a ``pod``
+    crossing pays the data-center network, an order of magnitude over the
+    on-chip ``page`` shuffle, exactly the paper's NUMA-factor argument
+    applied to the cost side.  Levels absent from the table fall back to
+    ``level_penalty``.
+
     A proactive rebalance (:meth:`BubbleScheduler.rebalance`) charges
 
         ``rebalance_base + rebalance_per_move * tasks_moved``
@@ -69,9 +79,22 @@ class StealCostModel:
     thread_penalty: float = 0.0      # per live thread moved
     rebalance_base: float = 0.0      # flat cost per proactive rebalance
     rebalance_per_move: float = 0.0  # per task re-placed by a rebalance
+    # ((level_name, per-level penalty), ...): boundary-specific pricing —
+    # a tuple of pairs, not a dict, so the dataclass stays frozen/hashable
+    level_table: tuple = ()
 
-    def steal_cost(self, distance: int, n_threads: int) -> float:
-        return (self.lock_penalty + self.level_penalty * distance +
+    def level_cost(self, boundary: Optional[str]) -> float:
+        """Per-level penalty for a steal crossing ``boundary`` (the
+        outermost level the migration crosses); uniform fallback."""
+        if boundary is not None:
+            for name, penalty in self.level_table:
+                if name == boundary:
+                    return penalty
+        return self.level_penalty
+
+    def steal_cost(self, distance: int, n_threads: int,
+                   boundary: Optional[str] = None) -> float:
+        return (self.lock_penalty + self.level_cost(boundary) * distance +
                 self.thread_penalty * n_threads)
 
     def rebalance_cost(self, moves: int) -> float:
@@ -84,7 +107,8 @@ class StealCostModel:
         traces depend on it); any nonzero penalty switches victim
         selection to work-per-cost ranking."""
         return not (self.lock_penalty or self.level_penalty
-                    or self.thread_penalty)
+                    or self.thread_penalty
+                    or any(p for _, p in self.level_table))
 
 
 ZERO_COST = StealCostModel()
@@ -99,6 +123,7 @@ class SchedStats:
     bubble_steals: int = 0       # whole affinity groups moved intact
     thread_steals: int = 0       # lone-thread fallback steals
     steal_attempts: int = 0      # steal passes entered (incl. empty-handed)
+    steal_refusals: int = 0      # candidates skipped: destination full
     stolen_work: float = 0.0     # remaining work moved by steals
     migrations: int = 0          # thread ran on a different cpu than last time
     schedules: int = 0
@@ -131,12 +156,30 @@ class BubbleScheduler:
     """
 
     def __init__(self, topo: Topology, *, respect_hints: bool = True,
-                 steal: bool = True, cost_model: StealCostModel = ZERO_COST):
+                 steal: bool = True, cost_model: StealCostModel = ZERO_COST,
+                 bill_model: Optional[StealCostModel] = None):
         self.topo = topo
         self.queues = QueueHierarchy(topo)
         self.respect_hints = respect_hints
         self.steal = steal                           # idle cpus may steal
-        self.cost_model = cost_model                 # lock/latency penalties
+        self.cost_model = cost_model                 # decision-side pricing
+        # what a migration *actually* costs.  Victim selection and the
+        # rebalance trigger consult ``cost_model`` (what the scheduler
+        # believes); the ledger bills ``bill_model`` (what the machine
+        # charges).  They default to the same table — splitting them models
+        # a mispriced scheduler, e.g. a DCN-naive engine that ranks victims
+        # with flat per-level costs yet pays real cross-host latency.
+        self.bill_model = bill_model if bill_model is not None else cost_model
+        # consumer veto on destinations: ``capacity_cb(cpu, task, pending)
+        # -> bool`` (always called with all three args) answers whether
+        # the area around ``cpu`` can hold the loot on top of ``pending``
+        # (tasks a bulk rebalance deal has already routed there before the
+        # consumer's own ledger sees them; steals pass an empty tuple).  A
+        # full destination *refuses* — the steal survey skips the
+        # candidate (counted in ``stats.steal_refusals``) and a rebalance
+        # deals the unit elsewhere, instead of dragging state somewhere it
+        # cannot be admitted.
+        self.capacity_cb = None
         self.stats = SchedStats()
         self.last_queue: Optional[RunQueue] = None   # lock-domain of last pick
         self.last_steal: Optional[tuple[RunQueue, Task]] = None  # (victim, loot)
@@ -287,10 +330,14 @@ class BubbleScheduler:
                         if isinstance(t, Bubble):
                             if t.done():
                                 continue
+                            if not self._accepts(cpu, t):
+                                continue
                             w = t.total_work()
                             if best_bubble is None or w > best_bubble[2]:
                                 best_bubble = (q, t, w)
                         elif t.remaining > 0:
+                            if not self._accepts(cpu, t):
+                                continue
                             if best_thread is None or t.remaining > best_thread[2]:
                                 best_thread = (q, t, t.remaining)
             best = best_bubble or best_thread
@@ -299,6 +346,15 @@ class BubbleScheduler:
             victim, task, work = best
             return self._commit_steal(cpu, victim, task, work)
         return None
+
+    @staticmethod
+    def _steal_score(work: float, cost: float) -> float:
+        """Work-per-cost, with free loot scoring infinitely well: a model
+        whose only nonzero penalty lives in the level table leaves
+        un-tabled boundaries at cost 0, and dividing by it would crash the
+        survey.  Ties among free candidates resolve by scan order — the
+        most local one wins, as everywhere else."""
+        return work / cost if cost > 0 else float("inf")
 
     def _steal_pass_costed(self, cpu: int, path: list[Component]
                            ) -> Optional[tuple[RunQueue, Task]]:
@@ -319,19 +375,27 @@ class BubbleScheduler:
                     if not q.tasks:
                         continue
                     dist = self.topo.levels_crossed(cpu, comp)
+                    boundary = self.topo.crossing_level(cpu, comp)
                     for t in q.tasks:
                         if isinstance(t, Bubble):
                             if t.done():
                                 continue
+                            if not self._accepts(cpu, t):
+                                continue
                             w = t.total_work()
                             n = sum(1 for th in t.threads()
                                     if th.remaining > 0)
-                            score = w / self.cost_model.steal_cost(dist, n)
+                            score = self._steal_score(
+                                w, self.cost_model.steal_cost(
+                                    dist, n, boundary))
                             if best_bubble is None or score > best_bubble[0]:
                                 best_bubble = (score, q, t, w)
                         elif t.remaining > 0:
-                            score = t.remaining / \
-                                self.cost_model.steal_cost(dist, 1)
+                            if not self._accepts(cpu, t):
+                                continue
+                            score = self._steal_score(
+                                t.remaining, self.cost_model.steal_cost(
+                                    dist, 1, boundary))
                             if best_thread is None or score > best_thread[0]:
                                 best_thread = (score, q, t, t.remaining)
         best = best_bubble or best_thread
@@ -340,10 +404,21 @@ class BubbleScheduler:
         _, victim, task, work = best
         return self._commit_steal(cpu, victim, task, work)
 
+    def _accepts(self, cpu: int, task: Task) -> bool:
+        """Capacity veto for one steal candidate: the consumer's callback
+        decides whether the thief's area can hold the loot.  Refusals are
+        accounted — a high refusal count with idle cpus means the machine
+        is capacity-bound, not work-bound."""
+        if self.capacity_cb is None or self.capacity_cb(cpu, task, ()):
+            return True
+        self.stats.steal_refusals += 1
+        return False
+
     def _commit_steal(self, cpu: int, victim: RunQueue, task: Task,
                       work: float) -> tuple[RunQueue, Task]:
         """Book one successful steal: remove the loot (identity-safe), flag
-        its threads for next-touch, and settle the cost ledger."""
+        its threads for next-touch, and settle the cost ledger (billed at
+        ``bill_model`` prices — the machine's, not the scheduler's)."""
         victim.remove(task)
         self.stats.steals += 1
         self.stats.stolen_work += work
@@ -359,7 +434,8 @@ class BubbleScheduler:
             task.stolen = True
             n_moved = 1
         dist = self.topo.levels_crossed(cpu, victim.comp)
-        cost = self.cost_model.steal_cost(dist, n_moved)
+        cost = self.bill_model.steal_cost(
+            dist, n_moved, self.topo.crossing_level(cpu, victim.comp))
         self.stats.stolen_threads += n_moved
         self.stats.steal_distance += dist
         self.stats.steal_distance_hist[dist] = \
@@ -460,8 +536,12 @@ class BubbleScheduler:
 
         Threads landing outside the subtree of their last cpu are flagged
         ``stolen`` so the next-touch data policy re-homes their pages, the
-        same as a steal would.  Returns the number of tasks re-placed; the
-        triggering cpu is billed ``cost_model.rebalance_cost(moves)``.
+        same as a steal would.  When a ``capacity_cb`` is installed the
+        deal only targets components that can hold each unit (a full KV
+        page group refuses loot here exactly as it does in the steal
+        survey); units nothing accepts fall back to the global list.
+        Returns the number of tasks re-placed; the triggering cpu is
+        billed ``bill_model.rebalance_cost(moves)``.
         """
         comps = self.topo.components(self._resolve_spread_level(level))
         cap = self._capacity(comps[0])
@@ -476,18 +556,44 @@ class BubbleScheduler:
 
         units.sort(key=weight, reverse=True)          # LPT; ties keep order
         loads = [0.0] * len(comps)
+        placed: list[list[Task]] = [[] for _ in comps]
+
+        def comp_accepts(i: int, u: Task) -> bool:
+            # the callback answers for the area around one cpu; a target
+            # component above that granularity (a host spanning several
+            # page groups) accepts when *any* of its sub-areas does —
+            # admission remains the true guard once the unit is claimed
+            if self.capacity_cb is None:
+                return True
+            pending = tuple(placed[i])
+            return any(self.capacity_cb(leaf.cpu, u, pending)
+                       for leaf in comps[i].leaves())
+
         for u in units:
-            i = min(range(len(comps)), key=loads.__getitem__)
-            comp = comps[i]
+            # least-loaded component that can actually hold the unit *on
+            # top of what this deal already routed there* (the consumer's
+            # ledger only reserves at claim time, so without the pending
+            # list one deal could overcommit a destination that had room
+            # for a single unit); a unit nothing accepts goes to the
+            # global list — every cpu can reach it there and admission
+            # paces it in as capacity frees
+            fits = [i for i in range(len(comps)) if comp_accepts(i, u)]
+            if not fits:
+                self.stats.steal_refusals += 1
+                comp = self.topo.root
+            else:
+                i = min(fits, key=loads.__getitem__)
+                comp = comps[i]
+                loads[i] += weight(u)
+                placed[i].append(u)
             self.queues.queue_of(comp).push(u)
-            loads[i] += weight(u)
             threads = u.threads() if isinstance(u, Bubble) else (u,)
             for th in threads:
                 if (th.last_cpu is not None
                         and comp not in self.topo.cpus[th.last_cpu].path()):
                     th.stolen = True          # next-touch re-homes its data
         moves = len(units)
-        cost = self.cost_model.rebalance_cost(moves)
+        cost = self.bill_model.rebalance_cost(moves)
         self.stats.rebalances += 1
         self.stats.rebalance_moves += moves
         self.stats.rebalance_cost += cost

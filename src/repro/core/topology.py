@@ -148,6 +148,26 @@ class Topology:
                 return a.level.factor
         return 1.0
 
+    def crossing_level(self, cpu: int, comp: Component) -> Optional[str]:
+        """Name of the outermost boundary a migration from ``comp``'s list
+        to ``cpu`` crosses, or ``None`` when the list covers the cpu.
+
+        This is the level of the first differing component on the two
+        root→leaf paths — the same divergence point :meth:`distance_factor`
+        prices.  A :class:`~repro.core.scheduler.StealCostModel` with a
+        per-level penalty table looks the boundary up to price the steal:
+        crossing a ``host`` (DCN traffic) is categorically more expensive
+        than crossing a ``page`` (on-chip KV shuffle), not just linearly
+        further away.
+        """
+        path = self.cpus[cpu].path()
+        if comp in path:
+            return None
+        for a, b in zip(path, comp.path()):
+            if a is not b:
+                return a.level.name
+        return None
+
     def levels_crossed(self, cpu: int, comp: Component) -> int:
         """Hierarchy levels a migration from ``comp``'s list crosses to
         reach ``cpu``.

@@ -33,6 +33,14 @@ def main(argv=None):
                     choices=("runtime", "admission"))
     ap.add_argument("--stub", action="store_true",
                     help="deterministic numpy model stub (no jit compile)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="shard the slot fleet across this many pods "
+                         "(DCN-priced steals between them)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="hosts per pod; gangs are routed home round-robin")
+    ap.add_argument("--hbm-budget", type=float, default=None,
+                    help="KV byte budget per page group (1 unit = 1 "
+                         "resident request); full groups refuse loot")
     args = ap.parse_args(argv)
 
     if args.stub:
@@ -56,14 +64,22 @@ def main(argv=None):
     vocab = cfg.vocab if cfg is not None else 251
     eng = ServingEngine(cfg, params, n_slots=args.slots,
                         cache_len=args.cache_len, backend=backend,
-                        mode=args.mode)
+                        mode=args.mode, pods=args.pods, hosts=args.hosts,
+                        hbm_budget=args.hbm_budget)
+    n_hosts = args.pods * args.hosts
+    homes = [c.name for c in eng.topo.components("host")] \
+        if n_hosts > 1 else [None]
 
     t0 = time.time()
     for i in range(args.requests):
         prompt = rng.integers(1, vocab, size=args.prompt_len)
-        # every 4th request pair shares a gang (prefix-affine group)
+        # every 4th request pair shares a gang (prefix-affine group);
+        # gangs are routed to a home host round-robin (cross-host
+        # admission), lone requests stay on the global list
         gang = f"g{i//4}" if i % 2 == 0 else None
-        eng.submit(prompt, args.new_tokens, prio=i % 3, gang=gang)
+        home = homes[(i // 4) % len(homes)] if gang is not None else None
+        eng.submit(prompt, args.new_tokens, prio=i % 3, gang=gang,
+                   home=home)
 
     done = eng.run(max_steps=args.requests * args.new_tokens * 4)
     dt = time.time() - t0

@@ -1,5 +1,7 @@
-from .engine import (SERVE_COST, EngineStats, JaxModelBackend, Request,
-                     ServingEngine, StubModelBackend, slots_topology)
+from .engine import (FLAT_SERVE_COST, SERVE_COST, EngineStats,
+                     JaxModelBackend, Request, ServingEngine,
+                     StubModelBackend, slots_topology)
 
 __all__ = ["Request", "ServingEngine", "slots_topology", "SERVE_COST",
-           "EngineStats", "JaxModelBackend", "StubModelBackend"]
+           "FLAT_SERVE_COST", "EngineStats", "JaxModelBackend",
+           "StubModelBackend"]

@@ -9,14 +9,22 @@ the scheduling model exactly as the paper prescribes for any workload:
 scheduler concept  serving meaning
 =================  ==========================================================
 cpu (leaf)         decode batch slot
-level              KV page group (``page``): slots sharing a cache page
+level              ``pod`` > ``host`` > ``page``: DCN shards, hosts within a
+                   pod, and KV page groups (slots sharing a cache page) —
+                   the full hierarchy when ``pods``/``hosts`` > 1, just
+                   ``page`` on a single host
 data object        a gang's KV state (``Thread.data`` = gang id)
-steal              an idle slot pulls a queued gang from a loaded page group
+steal              an idle slot pulls a queued gang from a loaded page
+                   group — possibly across hosts, where the per-level cost
+                   table prices the DCN crossing ~10x a page crossing
 next touch         first post-migration admission re-homes the gang's KV via
                    a *batched* splice of parked per-request states — not the
                    old per-request re-prefill path
 rebalance          queue-depth skew across page groups triggers one bulk
                    LPT re-spread (`BubbleScheduler.rebalance`), cost-gated
+capacity           per-page-group HBM byte budgets: a full page group
+                   refuses loot (the steal survey skips it, admission parks
+                   the gang) instead of thrashing KV it cannot hold
 =================  ==========================================================
 
 The engine drives the same :class:`~repro.core.runtime.SchedulerRuntime`
@@ -60,9 +68,26 @@ from repro.core.topology import Level, Topology
 # engine steps (admission latency).  Small relative to typical decode
 # lengths, so stealing stays profitable but not free; the queue-depth
 # rebalance trigger needs the nonzero prices to pass its cost-benefit test.
+#
+# The ``level_table`` prices the multi-host boundaries: dragging KV across a
+# ``host`` pays DCN round-trips (~10x the on-chip page shuffle once the
+# extra tree distance is counted in) and across a ``pod`` pays the
+# data-center network on top.  Single-host topologies have neither level,
+# so every pre-existing single-host schedule is priced — and therefore
+# traced — identically.
 SERVE_COST = StealCostModel(lock_penalty=0.5, level_penalty=0.25,
                             thread_penalty=0.125, rebalance_base=1.0,
-                            rebalance_per_move=0.125)
+                            rebalance_per_move=0.125,
+                            level_table=(("host", 3.0), ("pod", 6.0)))
+
+# What a DCN-naive scheduler believes: the same prices with the per-level
+# table dropped — a cross-host steal looks barely dearer than a cross-page
+# one.  Derived from SERVE_COST so the two can only ever differ in the
+# table (the multihost benchmark's validity depends on exactly that).
+# Pair it with ``bill_model=SERVE_COST`` and the engine keeps choosing
+# remote loot it must then pay real DCN latency for: the measurable
+# baseline for ``serve/multihost_steal_speedup``.
+FLAT_SERVE_COST = dataclasses.replace(SERVE_COST, level_table=())
 
 
 @dataclasses.dataclass
@@ -86,29 +111,70 @@ class EngineStats:
     kv_parks: int = 0            # per-request KV states parked
     kv_migrations: int = 0       # next-touch re-homes of a gang's KV
     kv_page_moves: int = 0       # ...of which crossed page groups
+    kv_host_moves: int = 0       # ...of which crossed hosts (DCN traffic)
     rebalances: int = 0          # queue-depth-triggered re-spreads
     stall_steps: float = 0.0     # admission latency billed by the cost model
+    # the two HBM events are distinct: a *wait* is a capacity-aware slot
+    # sitting out an admission wave because its group is at budget (one
+    # count per slot per step with work queued — a backpressure gauge); a
+    # *refusal* is a capacity-blind claim bounced at splice time after the
+    # scheduler call (and any steal bill) already ran — wasted work
+    hbm_slot_waits: int = 0      # aware: full-group slots skipping waves
+    hbm_refusals: int = 0        # blind: claims bounced at splice time
 
 
-def slots_topology(n_slots: int, group: int = 4) -> Topology:
-    """Model the decode batch as a tiny hierarchy: slot groups share a KV
-    page (affinity level), slots are the leaves.
+def _fanout(sizes: list[int]):
+    """Collapse a uniform per-parent fanout list to its int form (keeps
+    ``Topology.describe()`` and the goldens' layouts identical for the
+    historical uniform cases)."""
+    return sizes[0] if len(set(sizes)) == 1 else sizes
 
-    ``n_slots`` need not divide evenly: the remainder is distributed so
-    group sizes differ by at most one and **every** slot is a schedulable
-    leaf (the old ``n_slots // group`` derivation silently dropped the
-    remainder — ``n_slots=9, group=4`` built 2x4 leaves and slot 8 could
-    never be admitted to)."""
+
+def slots_topology(n_slots: int, group: int = 4, *, hosts: int = 1,
+                   pods: int = 1, page_factor: float = 2.0,
+                   host_factor: float = 4.0,
+                   dcn_factor: float = 8.0) -> Topology:
+    """Model the decode fleet as a hierarchy: pods shard the fleet across
+    the DCN, hosts within a pod each own a decode batch, slot groups share
+    a KV page (affinity level), slots are the leaves.
+
+    ``n_slots`` is the total slot count and need not divide evenly at any
+    level: slots are dealt across the ``pods * hosts`` hosts (sizes differ
+    by at most one), each host's slots are split into KV page groups of at
+    most ``group``, and **every** slot is a schedulable leaf (the old
+    ``n_slots // group`` derivation silently dropped the remainder —
+    ``n_slots=9, group=4`` built 2x4 leaves and slot 8 could never be
+    admitted to).  Ragged splits everywhere ride on the per-parent fanout
+    lists :class:`~repro.core.topology.Level` grew for exactly this.
+
+    Level layout: ``batch > [pod >] [host >] page > slot`` — the ``pod``
+    level appears only when ``pods > 1`` and the ``host`` level whenever
+    the fleet has more than one host, so the historical single-host
+    topology (and every golden trace over it) is byte-identical.
+    """
     assert n_slots >= 1, n_slots
-    groups = max(-(-n_slots // group), 1)             # ceil division
-    base, rem = divmod(n_slots, groups)
-    sizes = [base + 1] * rem + [base] * (groups - rem)
-    fanout = sizes[0] if len(set(sizes)) == 1 else sizes
-    return Topology([
-        Level("batch", 1),
-        Level("page", groups, factor=2.0),
-        Level("slot", fanout),
-    ])
+    assert hosts >= 1 and pods >= 1, (hosts, pods)
+    n_hosts = hosts * pods
+    assert n_slots >= n_hosts, \
+        f"need >=1 slot per host ({n_slots} slots, {n_hosts} hosts)"
+    base, rem = divmod(n_slots, n_hosts)
+    host_slots = [base + 1] * rem + [base] * (n_hosts - rem)
+    page_counts: list[int] = []           # pages per host, host order
+    slot_sizes: list[int] = []            # slots per page, page order
+    for hs in host_slots:
+        groups = max(-(-hs // group), 1)             # ceil division
+        b, r = divmod(hs, groups)
+        page_counts.append(groups)
+        slot_sizes += [b + 1] * r + [b] * (groups - r)
+    levels = [Level("batch", 1)]
+    if pods > 1:
+        levels.append(Level("pod", pods, factor=dcn_factor))
+    if n_hosts > 1:
+        levels.append(Level("host", hosts if pods > 1 else n_hosts,
+                            factor=host_factor))
+    levels += [Level("page", _fanout(page_counts), factor=page_factor),
+               Level("slot", _fanout(slot_sizes))]
+    return Topology(levels)
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +300,21 @@ class ServingEngine:
       re-spread bill;
     * a request group that stalls (client backpressure) is *regenerated*:
       pulled out of the slots — its per-slot KV parked — and re-queued as a
-      closed bubble, keeping its affinity.
+      closed bubble, keeping its affinity;
+    * with ``pods``/``hosts`` > 1 the slot hierarchy is sharded across
+      hosts: steals cross the DCN when nothing nearer has work, priced by
+      the cost model's per-level table (``bill_model`` splits what the
+      scheduler *believes* a crossing costs from what it *pays* — the
+      DCN-naive baseline ranks victims flat and pays real DCN latency);
+    * with ``hbm_budget`` set, each KV page group carries a byte budget
+      (``kv_bytes`` per resident request): admission skips slots of a full
+      group (the gang parks on its queue instead of thrashing), the steal
+      survey and the rebalance deal refuse destinations that cannot hold
+      the loot, and the ledger in ``hbm_used`` never exceeds a group's
+      budget.  ``capacity_aware=False`` keeps the budget enforced but
+      discovers fullness only after the claim — loot is dragged (and its
+      steal billed) before bouncing back: the measurable capacity-blind
+      baseline for ``serve/hbm_pressure_refusal_speedup``.
 
     ``mode="admission"`` is the pre-runtime engine: plain admission, no
     steal, no rebalance, first-touch homing.
@@ -242,8 +322,12 @@ class ServingEngine:
 
     def __init__(self, cfg, params, *, n_slots: int = 8,
                  cache_len: int = 256, group: int = 4,
+                 hosts: int = 1, pods: int = 1,
                  backend=None, mode: str = "runtime",
                  cost_model: StealCostModel = SERVE_COST,
+                 bill_model: Optional[StealCostModel] = None,
+                 hbm_budget: Optional[float] = None, kv_bytes: float = 1.0,
+                 capacity_aware: bool = True,
                  depth_skew: int = 2, window: int = 16,
                  min_backlog: int = 2, cooldown: Optional[int] = None):
         assert mode in ("runtime", "admission"), mode
@@ -252,14 +336,32 @@ class ServingEngine:
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.mode = mode
-        self.topo = slots_topology(n_slots, group)
+        self.topo = slots_topology(n_slots, group, hosts=hosts, pods=pods)
         if mode == "runtime":
-            self.policy = StealPolicy(self.topo, cost_model=cost_model)
+            self.policy = StealPolicy(self.topo, cost_model=cost_model,
+                                      bill_model=bill_model)
         else:
             self.policy = BubblePolicy(self.topo, steal=False)
         self.sched = self.policy.sched
-        self.runtime = SchedulerRuntime(self.topo, self.policy,
-                                        on_data_migrate=self._on_kv_migrate)
+        # -- per-page-group HBM ledger (admission control) --
+        assert hbm_budget is None or hbm_budget >= kv_bytes, \
+            "a page group must hold at least one request's KV"
+        self.hbm_budget = hbm_budget
+        self.kv_bytes = kv_bytes
+        names = self.topo.level_names()
+        self._page_idx = names.index("page")
+        self._host_idx = names.index("host") if "host" in names else None
+        # slot -> global page-group index (its ancestor at the page level)
+        self._page_of = [self.topo.cpus[s].path()[self._page_idx].index
+                         for s in range(n_slots)]
+        self.hbm_used = [0.0] * len(self.topo.components("page"))
+        self._slot_charged = [False] * n_slots   # slot holds a reservation
+        self.capacity_aware = capacity_aware and hbm_budget is not None
+        self.runtime = SchedulerRuntime(
+            self.topo, self.policy, on_data_migrate=self._on_kv_migrate,
+            can_accept=(self._can_accept
+                        if self.capacity_aware and mode == "runtime"
+                        else None))
         self.backend = backend if backend is not None else \
             JaxModelBackend(cfg, params, cache_len)
         self.states, self.tokens = self.backend.init(n_slots)
@@ -285,7 +387,16 @@ class ServingEngine:
 
     # -- client API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
-               prio: int = 0, gang: Optional[str] = None) -> int:
+               prio: int = 0, gang: Optional[str] = None,
+               home: Optional[str] = None) -> int:
+        """Queue one request.  ``home`` names a topology component
+        (``"host1"``, ``"page3"``, ...) whose list receives the work — the
+        cross-host admission path: a front-end that routes a gang to one
+        shard wakes its bubble there, narrowing its scheduling area to
+        that subtree; other shards can still reach it, but only by paying
+        the steal survey's (DCN-priced) bill.  ``None`` keeps the global
+        list (any slot may admit it).  A gang that is already scheduled
+        keeps its current area — ``home`` steers fresh wake-ups only."""
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
@@ -294,8 +405,12 @@ class ServingEngine:
         t = thread(float(max_new_tokens), name=f"req{rid}", prio=prio,
                    data=gang or f"req{rid}")
         t.request = req                                   # type: ignore
+        at = self._home_queue(home)
         if gang is None:
-            self.sched.submit_thread(t)
+            if at is None:
+                self.sched.submit_thread(t)
+            else:
+                at.push(t)
             return rid
         g = self._gang_bubble(gang, prio)
         g.insert(t)
@@ -311,8 +426,43 @@ class ServingEngine:
             # members: (re-)wake it.  The old engine set a sticky ``_woken``
             # flag here, so a finished gang's bubble could never be woken
             # again and later submits to the same gang were lost.
-            self.sched.wake_up_bubble(g)
+            self.sched.wake_up_bubble(g, at=at)
+        elif not self._bubble_queued(g):
+            # the gang is live but only through its *members* (a rebalance
+            # expanded the closed bubble and dealt them out individually,
+            # or they occupy slots) — the bubble itself sits on no list and
+            # nothing will ever burst it, so a thread left only inside it
+            # is stranded: schedule the late joiner directly, like its
+            # expanded siblings
+            q = g.home_list if g.home_list is not None \
+                else self.sched.queues.global_queue()
+            q.push(t)
         return rid
+
+    def _bubble_queued(self, g: Bubble) -> bool:
+        """Whether the bubble object itself sits on some run queue (its
+        members being queued individually does not count)."""
+        return any(task is g for q in self.sched.queues.queues.values()
+                   for task in q.tasks)
+
+    def _home_queue(self, home: Optional[str]):
+        """Resolve a component name to its run queue (None = global).
+
+        Submit is the admission hot path, so the name->queue map is built
+        once per engine (component names are unique: ``level.name`` +
+        index)."""
+        if home is None:
+            return None
+        by_name = getattr(self, "_queues_by_name", None)
+        if by_name is None:
+            by_name = {q.comp.name: q
+                       for q in self.sched.queues.queues.values()}
+            self._queues_by_name = by_name
+        try:
+            return by_name[home]
+        except KeyError:
+            raise ValueError(f"unknown home component {home!r} "
+                             f"(topology: {self.topo.describe()})") from None
 
     def _gang_bubble(self, gang: str, prio: int) -> Bubble:
         key = f"gang:{gang}"
@@ -337,8 +487,51 @@ class ServingEngine:
     # -- KV homing (the data policy's physical side) --------------------------
     def _on_kv_migrate(self, data: str, old_slot: int, new_slot: int) -> None:
         self.stats.kv_migrations += 1
-        if self.topo.common_level(old_slot, new_slot).name == "batch":
+        names = self.topo.level_names()
+        common = names.index(self.topo.common_level(old_slot, new_slot).name)
+        if common < self._page_idx:
             self.stats.kv_page_moves += 1      # crossed KV page groups
+        if self._host_idx is not None and common < self._host_idx:
+            self.stats.kv_host_moves += 1      # crossed hosts: DCN traffic
+
+    # -- the per-page-group HBM ledger (admission control) ---------------------
+    def _headroom(self, page: int) -> float:
+        """Unreserved HBM bytes left in one page group's budget."""
+        if self.hbm_budget is None:
+            return float("inf")
+        return self.hbm_budget - self.hbm_used[page]
+
+    def _charge(self, slot: int) -> None:
+        """Reserve one request's KV bytes in the slot's page group — at
+        *claim* time, so a stolen thread waiting out its admission stall in
+        ``_pending`` cannot be overcommitted by later claims."""
+        if not self._slot_charged[slot]:
+            self.hbm_used[self._page_of[slot]] += self.kv_bytes
+            self._slot_charged[slot] = True
+
+    def _refund(self, slot: int) -> None:
+        """Release the slot's reservation (request finished, parked, or
+        folded back into a regenerated gang)."""
+        if self._slot_charged[slot]:
+            self.hbm_used[self._page_of[slot]] -= self.kv_bytes
+            self._slot_charged[slot] = False
+
+    def _kv_need(self, task) -> float:
+        """KV bytes one task would occupy: whole gangs need room for every
+        live member — stealing a gang a group cannot finish admitting
+        would strand the tail."""
+        if isinstance(task, Bubble):
+            live = sum(1 for th in task.threads() if th.remaining > 0)
+            return self.kv_bytes * max(live, 1)
+        return self.kv_bytes
+
+    def _can_accept(self, cpu: int, task, pending=()) -> bool:
+        """The scheduler's capacity veto: can ``cpu``'s page group hold the
+        loot's KV on top of what a bulk deal already routed there
+        (``pending``)?  A full page group refuses and the survey/deal
+        looks elsewhere."""
+        need = self._kv_need(task) + sum(self._kv_need(p) for p in pending)
+        return self._headroom(self._page_of[cpu]) >= need - 1e-9
 
     # -- slot management ------------------------------------------------------
     def _admit(self, now: float) -> None:
@@ -361,6 +554,16 @@ class ServingEngine:
                 continue
             t = self._pending.pop(slot, None)
             if t is None:
+                full = self._headroom(self._page_of[slot]) \
+                    < self.kv_bytes - 1e-9
+                # HBM admission control: a slot of a page group at its
+                # budget does not even run the scheduler call — the queued
+                # gang *parks* where it is (another group's slot, or time,
+                # will take it) instead of claiming KV it cannot splice in
+                if full and self.capacity_aware:
+                    if self.sched.queues.total_tasks():
+                        self.stats.hbm_slot_waits += 1
+                    continue
                 t, cost = self.runtime.acquire(slot, now)
                 if cost:
                     self._stall[slot] += cost
@@ -370,6 +573,17 @@ class ServingEngine:
                 if t.remaining <= 0 or t.request.done:    # stale: drop
                     self.runtime.release(slot, t, True, now)
                     continue
+                if full:
+                    # capacity-blind baseline: fullness is discovered only
+                    # at splice time, *after* the claim (and after any
+                    # steal dragged the loot here and billed its stall).
+                    # The request bounces back onto the page's list — the
+                    # thrash the capacity-aware survey exists to avoid.
+                    self.stats.hbm_refusals += 1
+                    self.runtime.release(slot, t, False, now)
+                    self.sched.queues.covering(slot)[1].push(t)
+                    continue
+                self._charge(slot)            # reserve the KV bytes now
                 if self._stall[slot] > 0:     # pay the migration first
                     self._pending[slot] = t
                     continue
@@ -406,6 +620,7 @@ class ServingEngine:
             # cannot resurrect the finished thread
             t.remaining = 0.0
             self.runtime.release(slot, t, True, now)
+        self._refund(slot)                    # its KV bytes leave the budget
         self.tokens[slot, 0] = 0              # freed slot: no stale decode
 
     # -- queue-depth rebalance trigger ----------------------------------------
@@ -520,13 +735,24 @@ class ServingEngine:
         if b is None:
             return 0
         now = float(self.steps)
+        # Members freed below go back onto a list *before* the bubble is
+        # regenerated.  If the gang bubble is still a burst husk the
+        # regeneration collects them (queued children are folded back in);
+        # but a closed bubble that a rebalance has *expanded* is itself on
+        # no queue and regenerate() is a no-op for it — releasing a member
+        # into thin air would lose the request forever (found by the HBM
+        # admit/park/steal property test).
+        fold = b.home_list if b.home_list is not None \
+            else self.sched.queues.global_queue()
         # a member claimed into _pending (waiting out its steal stall) goes
         # back into the bubble: the regenerated gang re-pushes it at its
         # next burst, and leaving it pending too would double-schedule it
         for s, t in list(self._pending.items()):
             if t.parent is b:
                 del self._pending[s]
+                self._refund(s)               # reservation never spliced in
                 self.runtime.release(s, t, False, now)
+                fold.push(t)
         n = 0
         for s in range(self.n_slots):
             req = self.slot_req[s]
@@ -537,7 +763,9 @@ class ServingEngine:
                                           int(self.tokens[s, 0]))
                 self.stats.kv_parks += 1
                 self.tokens[s, 0] = 0
+                self._refund(s)   # parked KV lives host-side, off the budget
                 self.runtime.release(s, t, False, now)
+                fold.push(t)
                 n += 1
         self.sched.regenerate(b, running={})
         return n
@@ -549,15 +777,19 @@ class ServingEngine:
         return {
             "steps": self.steps,
             "steals": s.steals, "steal_attempts": s.steal_attempts,
+            "steal_refusals": s.steal_refusals,
             "steal_cost": round(s.steal_cost, 4),
             "rebalances": s.rebalances,
             "rebalance_moves": s.rebalance_moves,
             "data_migrations": self.runtime.data_migrations,
             "kv_migrations": self.stats.kv_migrations,
             "kv_page_moves": self.stats.kv_page_moves,
+            "kv_host_moves": self.stats.kv_host_moves,
             "kv_splices": self.stats.kv_splices,
             "kv_spliced_slots": self.stats.kv_spliced_slots,
             "kv_parks": self.stats.kv_parks,
             "prefills": self.stats.prefills,
             "stall_steps": round(self.stats.stall_steps, 4),
+            "hbm_slot_waits": self.stats.hbm_slot_waits,
+            "hbm_refusals": self.stats.hbm_refusals,
         }

@@ -1,0 +1,206 @@
+"""Property tests for the pod-sharded serving topology + HBM accounting.
+
+Two families, both runnable under real ``hypothesis`` or the deterministic
+``tests/_hypothesis_shim.py``:
+
+* **topology** — over 1-4 pods x 1-4 hosts x ragged page/slot fanouts:
+  slot conservation (every submitted slot is a schedulable leaf, no page
+  group empty), ``levels_crossed`` symmetry between leaves, and
+  steal-survey reachability (work parked on *any* slot's list can be
+  stolen by *any* other slot, under both the free and the costed victim
+  selection — a partitioned survey would starve whole shards);
+* **HBM accounting** — random admit/park/steal/rebalance traffic against
+  per-page-group budgets: the KV ledger never goes negative or above
+  budget at any step, it always equals the sum of live slot reservations,
+  and refused loot is always re-admitted somewhere (every request
+  completes — no gang starves because a full group turned it away).
+"""
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # clean env: seeded-sampling shim
+    from _hypothesis_shim import given, settings
+    from _hypothesis_shim import strategies as st
+
+from repro.core.bubble import thread
+from repro.core.policies import StealPolicy
+from repro.core.scheduler import ZERO_COST, StealCostModel
+from repro.serving import (SERVE_COST, ServingEngine, StubModelBackend,
+                           slots_topology)
+
+
+@st.composite
+def fleet(draw):
+    """(pods, hosts, group, n_slots) with ragged splits everywhere."""
+    pods = draw(st.integers(min_value=1, max_value=4))
+    hosts = draw(st.integers(min_value=1, max_value=4))
+    group = draw(st.integers(min_value=1, max_value=5))
+    n_hosts = pods * hosts
+    n_slots = draw(st.integers(min_value=n_hosts, max_value=n_hosts * 9))
+    return pods, hosts, group, n_slots
+
+
+# ---------------------------------------------------------------------------
+# topology: conservation, symmetry, reachability
+# ---------------------------------------------------------------------------
+
+class TestFleetTopology:
+    @settings(max_examples=40)
+    @given(cfg=fleet())
+    def test_slot_conservation(self, cfg):
+        pods, hosts, group, n_slots = cfg
+        topo = slots_topology(n_slots, group, hosts=hosts, pods=pods)
+        assert topo.n_cpus == n_slots
+        pages = topo.components("page")
+        sizes = [len(p.children) for p in pages]
+        assert sum(sizes) == n_slots
+        assert min(sizes) >= 1                      # no empty page group
+        assert all(s <= group for s in sizes)       # group is a ceiling
+        # every host owns at least one page and sizes stay near-even
+        host_level = "host" if pods * hosts > 1 else "batch"
+        by_host = {}
+        for p in pages:
+            anc = p
+            while anc.level.name != host_level:
+                anc = anc.parent
+            by_host.setdefault(anc.index, 0)
+            by_host[anc.index] += len(p.children)
+        assert len(by_host) == max(pods * hosts, 1)
+        assert max(by_host.values()) - min(by_host.values()) <= 1
+
+    @settings(max_examples=25)
+    @given(cfg=fleet(), a=st.integers(min_value=0, max_value=10 ** 6),
+           b=st.integers(min_value=0, max_value=10 ** 6))
+    def test_levels_crossed_symmetry(self, cfg, a, b):
+        pods, hosts, group, n_slots = cfg
+        topo = slots_topology(n_slots, group, hosts=hosts, pods=pods)
+        ca, cb = topo.cpus[a % n_slots], topo.cpus[b % n_slots]
+        assert topo.levels_crossed(ca.cpu, cb) == \
+            topo.levels_crossed(cb.cpu, ca)
+        # the boundary level both directions price is the same one
+        assert topo.crossing_level(ca.cpu, cb) == \
+            topo.crossing_level(cb.cpu, ca)
+        if ca is cb:
+            assert topo.levels_crossed(ca.cpu, cb) == 0
+            assert topo.crossing_level(ca.cpu, cb) is None
+
+    @settings(max_examples=15, deadline=None)
+    @given(cfg=fleet(), costed=st.booleans())
+    def test_every_slot_reachable_by_steal_survey(self, cfg, costed):
+        """Work parked on any slot's own list must be stealable from any
+        other slot: the survey walks every covering level, so no shard of
+        the fleet is invisible to an idle slot anywhere else."""
+        pods, hosts, group, n_slots = cfg
+        topo = slots_topology(n_slots, group, hosts=hosts, pods=pods)
+        cm = SERVE_COST if costed else ZERO_COST
+        # pin src/dst spot checks to the fleet corners + a mid slot: the
+        # far corner pair crosses every level the topology has
+        srcs = {0, n_slots - 1, n_slots // 2}
+        for src in srcs:
+            for dst in srcs:
+                if src == dst:
+                    continue
+                pol = StealPolicy(topo, cost_model=cm)
+                t = thread(4.0, name="loot", data="loot")
+                pol.sched.queues.covering(dst)[0].push(t)
+                got = pol.next(src, 0.0)
+                assert got is t, (src, dst, costed)
+                assert got.stolen                    # flagged for next-touch
+                assert pol.sched.stats.steals == 1
+
+
+# ---------------------------------------------------------------------------
+# HBM accounting under random traffic
+# ---------------------------------------------------------------------------
+
+class TestHBMAccounting:
+    def _check_ledger(self, eng):
+        for page, used in enumerate(eng.hbm_used):
+            assert -1e-9 <= used <= eng.hbm_budget + 1e-9, \
+                (page, used, eng.hbm_budget)
+        recomputed = [0.0] * len(eng.hbm_used)
+        for slot, charged in enumerate(eng._slot_charged):
+            if charged:
+                recomputed[eng._page_of[slot]] += eng.kv_bytes
+        assert recomputed == pytest.approx(eng.hbm_used)
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10 ** 6),
+           capacity_aware=st.booleans())
+    def test_random_traffic_respects_budget_and_starves_nobody(
+            self, seed, capacity_aware):
+        rng = np.random.default_rng(seed)
+        pods = int(rng.integers(1, 3))
+        hosts = int(rng.integers(1, 3))
+        n_hosts = pods * hosts
+        n_slots = int(rng.integers(n_hosts, 4 * n_hosts + 1)) * 2
+        budget = float(rng.integers(1, 4))
+        eng = ServingEngine(None, None, n_slots=n_slots, group=4,
+                            hosts=hosts, pods=pods,
+                            backend=StubModelBackend(),
+                            hbm_budget=budget, kv_bytes=1.0,
+                            capacity_aware=capacity_aware)
+        hostnames = [c.name for c in eng.topo.components("host")] \
+            if n_hosts > 1 else [None]
+        gangs, n = [], 0
+        for g in range(int(rng.integers(2, 6))):
+            gang = f"g{g}" if rng.random() < 0.8 else None
+            if gang is not None:
+                gangs.append(gang)
+            home = hostnames[int(rng.integers(0, len(hostnames)))]
+            for _ in range(int(rng.integers(1, 7))):
+                eng.submit(rng.integers(1, 200, 6),
+                           int(rng.integers(2, 9)),
+                           prio=int(rng.integers(0, 3)), gang=gang,
+                           home=home)
+                n += 1
+        steps = 0
+        while not eng._drained() and steps < 6000:
+            eng.step()
+            steps += 1
+            self._check_ledger(eng)
+            if gangs and steps % 7 == 0:        # rolling backpressure
+                eng.regenerate_gang(gangs[(steps // 7) % len(gangs)])
+                self._check_ledger(eng)
+        # refused loot was always re-admitted somewhere: every request
+        # completed exactly once with exactly the asked-for tokens
+        rids = sorted(r.rid for r in eng.completed)
+        assert rids == list(range(n)), (n_slots, budget, len(rids), n)
+        for r in eng.completed:
+            assert len(r.out_tokens) == r.max_new_tokens
+        assert all(u == 0.0 for u in eng.hbm_used)   # drained: all refunded
+
+    def test_capacity_policy_never_changes_streams(self):
+        """Aware and blind engines decode identical streams — capacity
+        handling is pure scheduling."""
+        def run(aware):
+            eng = ServingEngine(None, None, n_slots=12, hosts=2,
+                                backend=StubModelBackend(), hbm_budget=2.0,
+                                capacity_aware=aware)
+            rng = np.random.default_rng(3)
+            for i in range(18):
+                eng.submit(rng.integers(1, 200, 6), 8,
+                           gang="fat" if i < 12 else None, home="host0")
+            eng.run(max_steps=4000)
+            return {r.rid: tuple(r.out_tokens) for r in eng.completed}
+
+        assert run(True) == run(False)
+
+    def test_full_group_refuses_steal_loot(self):
+        """A page group at budget refuses in the survey: steal_refusals
+        accounts it and no reservation ever exceeds the budget."""
+        eng = ServingEngine(None, None, n_slots=8, hosts=2,
+                            backend=StubModelBackend(), hbm_budget=1.0,
+                            capacity_aware=True)
+        rng = np.random.default_rng(0)
+        for _ in range(12):
+            eng.submit(rng.integers(1, 200, 6), 8, gang="fat", home="host0")
+        eng.run(max_steps=2000)
+        assert len(eng.completed) == 12
+        assert eng.sched.stats.steal_refusals > 0
+        assert eng.stats.hbm_slot_waits > 0         # parked, never bounced
+        assert eng.stats.hbm_refusals == 0          # aware mode: no bounces

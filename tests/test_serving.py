@@ -108,6 +108,28 @@ class TestGangsAndPriorities:
         assert prios[:4] == [2, 2, 2, 2]
         assert prios[4:] == [0, 0, 0, 0]
 
+    def test_late_submit_to_expanded_gang_is_scheduled(self):
+        """Regression: a rebalance can *expand* a regenerated (closed,
+        over-wide) gang bubble, dealing its members out individually and
+        leaving the bubble object on no queue.  A later submit to that
+        gang saw it 'scheduled' (members queued), inserted the new thread
+        into the off-queue bubble, and nothing ever burst it — the
+        request silently never decoded."""
+        eng = make_engine(n_slots=8)
+        n = submit_all(eng, [("fat", 16, 0), ("a", 2, 2)], new_tokens=12)
+        for _ in range(3):
+            eng.step()
+        assert eng.regenerate_gang("fat") > 0     # closed 16-wide bubble
+        guard = 0
+        while eng.stats.rebalances == 0 and guard < 200:
+            eng.step()
+            guard += 1
+        assert eng.stats.rebalances > 0, "rebalance never expanded the gang"
+        rid = eng.submit(np.arange(1, 9, dtype=np.int32), 4, gang="fat")
+        eng.run(max_steps=2000)
+        assert sorted(r.rid for r in eng.completed) == list(range(n + 1))
+        assert rid in {r.rid for r in eng.completed}
+
     def test_resubmit_to_finished_gang_is_scheduled(self):
         """Regression: the old sticky ``_woken`` flag meant a gang that
         completed (bubble dropped from the queues) could never be woken

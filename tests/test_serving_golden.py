@@ -1,0 +1,207 @@
+"""Golden-trace regression tests for the serving engine.
+
+The simulator's golden traces (``tests/test_golden.py``) pin the
+scheduler's behaviour on the paper's workloads; these pin the *serving*
+stack — stub-backend decode streams plus the engine/scheduler counter
+ledger — per engine mode and topology, single-host and multi-host:
+
+* ``single_skew`` — the PR 3 skewed-gang workload on 8 slots, in both
+  ``admission`` and ``runtime`` modes;
+* ``single_churn`` — gang regeneration (KV park + batched splice) under
+  steal traffic;
+* ``multihost_skew`` — the pod-sharded fleet (2 pods x 2 hosts), with the
+  DCN-priced cost table (``dcn``) and the flat-ranking/DCN-billed naive
+  engine (``naive``);
+* ``hbm_pressure`` — per-page-group HBM budgets, capacity-``aware`` vs
+  capacity-``blind``.
+
+Each snapshot records the engine step count, a digest of every completed
+request's full decode stream (the stub backend hashes token history, so
+*any* KV mishandling — lost splice, stale slot, wrong-slot write, a
+budget overcommit — changes the digest), and the counters that describe
+the schedule.  Everything is deterministic: prompts come from a seeded
+generator and the engine has no RNG.
+
+To regenerate after an *intentional* behaviour change::
+
+    PYTHONPATH=src python tests/test_serving_golden.py
+
+and paste the printed dict over ``GOLDEN``.  CI's golden-drift job runs::
+
+    PYTHONPATH=src python tests/test_serving_golden.py --check
+
+which regenerates every snapshot and fails (exit 1, printing the drifted
+entries) if any differs from the committed dict.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import reset_ids
+from repro.core.scheduler import StealCostModel  # noqa: F401  (re-export)
+from repro.serving import (FLAT_SERVE_COST, SERVE_COST, ServingEngine,
+                           StubModelBackend)
+
+COUNTER_KEYS = ("steals", "steal_refusals", "rebalances", "kv_migrations",
+                "kv_page_moves", "kv_host_moves", "kv_parks", "prefills",
+                "hbm_slot_waits", "hbm_refusals")
+
+
+def _submit(eng: ServingEngine, spec, seed: int = 0) -> int:
+    """spec: (gang, count, prio, home, new_tokens); returns count."""
+    rng = np.random.default_rng(seed)
+    n = 0
+    for gang, count, prio, home, new_tokens in spec:
+        for _ in range(count):
+            eng.submit(rng.integers(1, 250, 8), new_tokens, prio=prio,
+                       gang=gang, home=home)
+            n += 1
+    return n
+
+
+def _drive(eng: ServingEngine, n: int, regen=()) -> dict:
+    """Run to drain (bounded), snapshot streams + ledger."""
+    regen = dict(regen)                     # step -> gang to regenerate
+    steps = 0
+    while not eng._drained() and steps < 8000:
+        eng.step()
+        steps += 1
+        gang = regen.get(steps)
+        if gang is not None:
+            eng.regenerate_gang(gang)
+    assert len(eng.completed) == n, (len(eng.completed), n)
+    digest = hashlib.blake2b(
+        repr(sorted((r.rid, tuple(r.out_tokens))
+                    for r in eng.completed)).encode(),
+        digest_size=8).hexdigest()
+    c = eng.counters()
+    snap = {"steps": eng.steps, "streams": digest}
+    snap.update({k: c[k] for k in COUNTER_KEYS})
+    snap["stall_steps"] = round(c["stall_steps"], 4)
+    return snap
+
+
+SINGLE_SKEW = [("fat", 16, 0, None, 12), ("a", 2, 2, None, 12),
+               ("b", 1, 1, None, 12), (None, 2, 1, None, 12)]
+SINGLE_CHURN = [(f"g{i}", 2, i % 3, None, 12) for i in range(8)]
+# the benchmark's skewed-pod shape: heavy fat threads on host0 tempt a
+# flat-cost victim ranking across the DCN while light local backlog waits
+MULTI_SKEW = ([("fat", 16, 0, "host0", 28)] +
+              [(f"h{h}g{g}", 8, 0, f"page{2 * h}", 12)
+               for h in range(1, 4) for g in range(2)])
+HBM = [("fat", 24, 0, "host0", 10), (None, 6, 1, "host1", 6)]
+
+
+def build(case: str, variant: str) -> tuple[ServingEngine, list, tuple]:
+    stub = StubModelBackend()
+    if case == "single_skew":
+        eng = ServingEngine(None, None, n_slots=8, backend=stub,
+                            mode=variant)
+        return eng, SINGLE_SKEW, ()
+    if case == "single_churn":
+        eng = ServingEngine(None, None, n_slots=8, backend=stub,
+                            mode=variant)
+        return eng, SINGLE_CHURN, ((4, "g1"), (8, "g5"))
+    if case == "multihost_skew":
+        cost, bill = (SERVE_COST, None) if variant == "dcn" else \
+            (FLAT_SERVE_COST, SERVE_COST)
+        eng = ServingEngine(None, None, n_slots=32, pods=2, hosts=2,
+                            backend=stub, cost_model=cost, bill_model=bill)
+        return eng, MULTI_SKEW, ()
+    assert case == "hbm_pressure", case
+    eng = ServingEngine(None, None, n_slots=16, hosts=2, backend=stub,
+                        hbm_budget=2.0, kv_bytes=1.0,
+                        capacity_aware=(variant == "aware"))
+    return eng, HBM, ()
+
+
+def simulate(case: str, variant: str) -> dict:
+    reset_ids()
+    eng, spec, regen = build(case, variant)
+    n = _submit(eng, spec)
+    return _drive(eng, n, regen)
+
+
+CASES = [("single_skew", "admission"), ("single_skew", "runtime"),
+         ("single_churn", "runtime"),
+         ("multihost_skew", "naive"), ("multihost_skew", "dcn"),
+         ("hbm_pressure", "blind"), ("hbm_pressure", "aware")]
+
+
+# ---------------------------------------------------------------------------
+# snapshots (regenerate: PYTHONPATH=src python tests/test_serving_golden.py)
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    ('single_skew', 'admission'): {'steps': 55, 'streams': 'dbb35fc690fba08b', 'steals': 0, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 0, 'kv_page_moves': 0, 'kv_host_moves': 0, 'kv_parks': 0, 'prefills': 21, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 0.0},
+    ('single_skew', 'runtime'): {'steps': 35, 'streams': 'dbb35fc690fba08b', 'steals': 6, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 6, 'kv_page_moves': 2, 'kv_host_moves': 0, 'kv_parks': 0, 'prefills': 21, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 8.375},
+    ('single_churn', 'runtime'): {'steps': 22, 'streams': 'a378043789385b15', 'steals': 0, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 0, 'kv_page_moves': 0, 'kv_host_moves': 0, 'kv_parks': 4, 'prefills': 16, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 0.0},
+    ('multihost_skew', 'naive'): {'steps': 74, 'streams': '55cfc4500c9ca06d', 'steals': 17, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 31, 'kv_page_moves': 18, 'kv_host_moves': 12, 'kv_parks': 0, 'prefills': 64, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 259.25},
+    ('multihost_skew', 'dcn'): {'steps': 51, 'streams': '55cfc4500c9ca06d', 'steals': 12, 'steal_refusals': 0, 'rebalances': 2, 'kv_migrations': 28, 'kv_page_moves': 14, 'kv_host_moves': 9, 'kv_parks': 0, 'prefills': 64, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 80.5},
+    ('hbm_pressure', 'blind'): {'steps': 47, 'streams': 'ed6dbeec973b4ef5', 'steals': 20, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 15, 'kv_page_moves': 12, 'kv_host_moves': 9, 'kv_parks': 0, 'prefills': 30, 'hbm_slot_waits': 0, 'hbm_refusals': 203, 'stall_steps': 85.25},
+    ('hbm_pressure', 'aware'): {'steps': 37, 'streams': 'ed6dbeec973b4ef5', 'steals': 4, 'steal_refusals': 18, 'rebalances': 1, 'kv_migrations': 4, 'kv_page_moves': 2, 'kv_host_moves': 1, 'kv_parks': 0, 'prefills': 30, 'hbm_slot_waits': 228, 'hbm_refusals': 0, 'stall_steps': 24.75},
+}
+
+
+@pytest.mark.parametrize("case,variant", CASES)
+def test_serving_golden_trace(case: str, variant: str):
+    got = simulate(case, variant)
+    want = GOLDEN[(case, variant)]
+    assert got == want, (case, variant, got, want)
+
+
+def test_mode_never_changes_streams():
+    """Scheduling (steal pricing, capacity policy) must never change what
+    was decoded — the digests across variants of one case are equal."""
+    by_case: dict = {}
+    for case, variant in CASES:
+        by_case.setdefault(case, set()).add(GOLDEN[(case, variant)]["streams"])
+    for case, digests in by_case.items():
+        assert len(digests) == 1, (case, digests)
+
+
+def generate() -> dict:
+    return {(case, variant): simulate(case, variant)
+            for case, variant in CASES}
+
+
+def format_golden(snapshots: dict) -> str:
+    lines = ["GOLDEN = {"]
+    lines += [f"    {k!r}: {v!r}," for k, v in snapshots.items()]
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def check_drift(out_path=None) -> int:
+    """Regenerate all snapshots; report any that differ from GOLDEN."""
+    regen = generate()
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(format_golden(regen) + "\n")
+    drifted = {k: (GOLDEN.get(k), v) for k, v in regen.items()
+               if GOLDEN.get(k) != v}
+    missing = sorted(k for k in GOLDEN if k not in regen)
+    if not drifted and not missing:
+        print(f"serving golden traces stable: {len(regen)} snapshots match")
+        return 0
+    for k, (want, got) in sorted(drifted.items()):
+        print(f"DRIFT {k}:\n  committed:   {want!r}\n  regenerated: {got!r}")
+    for k in missing:
+        print(f"MISSING {k}: committed but no longer generated")
+    print(f"{len(drifted)} drifted, {len(missing)} missing — if intentional, "
+          "regenerate with `PYTHONPATH=src python tests/test_serving_golden"
+          ".py` and paste over GOLDEN")
+    return 1
+
+
+if __name__ == "__main__":
+    import sys
+    argv = sys.argv[1:]
+    if "--check" in argv:
+        out = None
+        if "--out" in argv:
+            out = argv[argv.index("--out") + 1]
+        sys.exit(check_drift(out))
+    print(format_golden(generate()))

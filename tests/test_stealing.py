@@ -234,6 +234,138 @@ class TestCostAwareVictimSelection:
 
 
 # ---------------------------------------------------------------------------
+# per-level penalty table + the decision/bill split (multi-host pricing)
+# ---------------------------------------------------------------------------
+
+class TestLevelTableAndBilling:
+    TABLE = StealCostModel(lock_penalty=1.0, level_penalty=0.5,
+                           thread_penalty=0.25,
+                           level_table=(("node", 10.0),))
+
+    def test_level_cost_lookup_and_fallback(self):
+        assert self.TABLE.level_cost("node") == 10.0
+        assert self.TABLE.level_cost("cpu") == 0.5       # fallback
+        assert self.TABLE.level_cost(None) == 0.5
+        assert self.TABLE.steal_cost(2, 1, "node") == \
+            pytest.approx(1.0 + 20.0 + 0.25)
+        assert self.TABLE.steal_cost(2, 1) == pytest.approx(1.0 + 1.0 + 0.25)
+
+    def test_table_alone_makes_steals_costed(self):
+        """A model whose only nonzero price sits in the table must still
+        switch victim selection to the costed survey."""
+        cm = StealCostModel(level_table=(("node", 5.0),))
+        assert not cm.steals_are_free
+        assert ZERO_COST.steals_are_free
+
+    def test_boundary_priced_steal_billed(self):
+        """Stealing across a NUMA node bills the table's per-level price;
+        a sibling-cpu steal keeps the uniform fallback."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        sched.queues.queue_of(topo.components("node")[3]).push(thread(9.0))
+        got = sched._steal_pass(0)                       # crosses "node"
+        assert got is not None
+        assert sched.stats.last_steal_cost == \
+            pytest.approx(1.0 + 10.0 * 2 + 0.25)
+        sched2 = BubbleScheduler(topo, cost_model=self.TABLE)
+        sched2.queues.queue_of(topo.cpus[1]).push(thread(9.0))
+        got2 = sched2._steal_pass(0)                     # sibling cpu
+        assert got2 is not None
+        assert sched2.stats.last_steal_cost == \
+            pytest.approx(1.0 + 0.5 + 0.25)
+
+    def test_bill_model_splits_belief_from_charge(self):
+        """A mispriced scheduler: victim selection consults ``cost_model``
+        (flat) while the ledger bills ``bill_model`` (the table) — the
+        DCN-naive serving baseline in unit form."""
+        flat = StealCostModel(lock_penalty=1.0, level_penalty=0.5,
+                              thread_penalty=0.25)
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=flat, bill_model=self.TABLE)
+        near = thread(4.0, name="near")
+        far = thread(9.0, name="far")
+        sched.queues.queue_of(topo.cpus[1]).push(near)
+        sched.queues.queue_of(topo.components("node")[3]).push(far)
+        got = sched._steal_pass(0)
+        # flat belief: far 9/(1+1+.25)=4.0 beats near 4/(1+.5+.25)=2.3 ...
+        assert got is not None and got[1] is far
+        # ... but the machine charges the node crossing at table prices
+        assert sched.stats.last_steal_cost == \
+            pytest.approx(1.0 + 10.0 * 2 + 0.25)
+        assert sched.consume_cost() == pytest.approx(1.0 + 10.0 * 2 + 0.25)
+
+    def test_capacity_callback_refuses_and_accounts(self):
+        """A vetoing capacity callback makes the survey skip the loot and
+        book the refusal."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        sched.capacity_cb = lambda cpu, task, pending: False
+        sched.queues.queue_of(topo.components("node")[3]).push(thread(9.0))
+        assert sched._steal_pass(0) is None
+        assert sched.stats.steal_refusals == 1
+        assert sched.stats.steals == 0
+        sched.capacity_cb = None
+        assert sched._steal_pass(0) is not None
+
+    def test_rebalance_deals_only_where_capacity_allows(self):
+        """The bulk re-spread respects the same veto: units land on the
+        accepting components only; units nothing accepts fall back to the
+        global list instead of flooding a full destination."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        allowed = {c.cpu for c in topo.components("node")[1].leaves()}
+        sched.capacity_cb = lambda cpu, task, pending=(): cpu in allowed
+        for _ in range(6):
+            sched.queues.global_queue().push(thread(3.0))
+        assert sched.rebalance(0, level="node") == 6
+        q1 = sched.queues.queue_of(topo.components("node")[1])
+        assert len(q1) == 6                   # every unit on the accepter
+        # nothing accepts: the units go back to the global list
+        sched2 = BubbleScheduler(topo, cost_model=self.TABLE)
+        sched2.capacity_cb = lambda cpu, task, pending=(): False
+        for _ in range(4):
+            sched2.queues.global_queue().push(thread(3.0))
+        assert sched2.rebalance(0, level="node") == 4
+        assert len(sched2.queues.global_queue()) == 4
+        assert sched2.stats.steal_refusals == 4
+
+    def test_rebalance_deal_counts_its_own_pending_routing(self):
+        """One bulk deal must not overcommit a destination that had room
+        for a single unit: the veto sees the tasks already routed there
+        within the same deal (the consumer's ledger only reserves at
+        claim time)."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        node1 = {c.cpu for c in topo.components("node")[1].leaves()}
+
+        def one_seat(cpu, task, pending=()):
+            return cpu in node1 and len(pending) < 1
+        sched.capacity_cb = one_seat
+        for _ in range(5):
+            sched.queues.global_queue().push(thread(3.0))
+        assert sched.rebalance(0, level="node") == 5
+        q1 = sched.queues.queue_of(topo.components("node")[1])
+        assert len(q1) == 1                  # exactly the seat it had
+        assert len(sched.queues.global_queue()) == 4   # overflow widened
+        assert sched.stats.steal_refusals == 4
+
+    def test_table_only_model_free_boundary_does_not_crash(self):
+        """Regression: a model whose only nonzero penalty is in the table
+        leaves un-tabled boundaries at cost 0 — the costed survey must
+        score that loot as infinitely cheap, not divide by zero."""
+        cm = StealCostModel(level_table=(("node", 5.0),))
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=cm)
+        near = thread(2.0, name="near")               # sibling cpu: cost 0
+        far = thread(9.0, name="far")                 # node crossing: 10
+        sched.queues.queue_of(topo.cpus[1]).push(near)
+        sched.queues.queue_of(topo.components("node")[3]).push(far)
+        got = sched._steal_pass(0)
+        assert got is not None and got[1] is near     # free beats priced
+        assert sched.stats.last_steal_cost == 0.0
+
+
+# ---------------------------------------------------------------------------
 # adaptive rebalance level (derived from the steal-distance histogram)
 # ---------------------------------------------------------------------------
 
