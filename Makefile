@@ -3,7 +3,8 @@
 #
 #   make test         tier-1 gate: the full pytest suite (hypothesis optional;
 #                     tests/_hypothesis_shim.py covers clean environments)
-#   make lint         fast syntax gate: byte-compile src/tests/benchmarks
+#   make lint         fast syntax gate: byte-compile src/tests/benchmarks +
+#                     docs-reference check (README/docs code pointers resolve)
 #   make bench-smoke  seconds-scale benchmark sanity run (Table 2 conduction
 #                     + imbalanced/thrash stealing rows + small Fig 5 sizes);
 #                     writes machine-readable BENCH_smoke.json
@@ -28,6 +29,7 @@ test:
 
 lint:
 	$(PYTHON) -m compileall -q src tests benchmarks
+	$(PYTHON) benchmarks/check_docs.py
 
 bench-smoke:
 	$(PYTHON) benchmarks/run.py --smoke --json BENCH_smoke.json

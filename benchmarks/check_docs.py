@@ -1,0 +1,183 @@
+"""Docs-reference gate: code references in the docs must resolve.
+
+Usage::
+
+    python benchmarks/check_docs.py            # checks README.md + docs/*.md
+
+Documentation that points into the tree rots silently: a rename leaves
+``docs/ARCHITECTURE.md`` recommending a module that no longer exists and
+nothing fails.  This checker (grep-based, zero imports of repro itself —
+it must run even when the tree is broken) extracts every backtick span
+from `README.md` and `docs/*.md` and verifies the ones that *look like*
+code references:
+
+* **paths** (contain ``/``): must exist relative to the repo root, OR
+  appear verbatim somewhere in the source corpus — the latter legitimises
+  non-file identifiers like benchmark row names (``serve/..._speedup``)
+  which are spelled path-ish but live as strings in ``benchmarks/``;
+* **dotted ``repro.*`` references** (``repro.core.runtime.SchedulerRuntime``):
+  the longest importable prefix must resolve under ``src/`` and any
+  leftover attribute parts must appear as words in the resolved module
+  (or anywhere under the resolved package);
+* **bare dotted identifiers** (``ServingEngine``, ``EngineStats.host_decode_steps``,
+  ``prefill_wave()``): every dotted component must appear as a word
+  somewhere in the source corpus (``src/``, ``tests/``, ``benchmarks/``,
+  ``Makefile``, CI config).
+
+Everything else — shell lines, flags, expressions, prose in backticks —
+is deliberately ignored: the gate exists to catch renamed files and
+symbols, not to parse English.  Exit 0 clean, 1 with unresolved
+references listed, 2 on usage/IO error.  Wired into ``make lint`` and the
+CI lint job.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_GLOBS = ("README.md", "docs/*.md")
+CORPUS_GLOBS = ("src/**/*.py", "tests/*.py", "benchmarks/*.py",
+                "examples/*.py", "Makefile", ".github/workflows/*.yml")
+
+SPAN_RE = re.compile(r"`([^`\n]+)`")
+IDENT_RE = re.compile(r"[A-Za-z_]\w*(\.[A-Za-z_]\w*)*")
+WORD_CACHE: dict[str, bool] = {}
+
+
+def _corpus() -> str:
+    parts = []
+    for pat in CORPUS_GLOBS:
+        for path in sorted(glob.glob(os.path.join(ROOT, pat),
+                                     recursive=True)):
+            try:
+                with open(path, encoding="utf-8", errors="replace") as f:
+                    parts.append(f.read())
+            except OSError:
+                pass
+    return "\n".join(parts)
+
+
+def _word_in_corpus(corpus: str, word: str) -> bool:
+    hit = WORD_CACHE.get(word)
+    if hit is None:
+        hit = re.search(rf"\b{re.escape(word)}\b", corpus) is not None
+        WORD_CACHE[word] = hit
+    return hit
+
+
+def _check_repro_ref(ref: str, corpus: str) -> str | None:
+    """``repro.a.b[.Symbol...]``: resolve the module prefix under src/,
+    then require leftover parts to appear in the resolved file/package."""
+    parts = ref.split(".")
+    base = os.path.join(ROOT, "src")
+    consumed = 0
+    resolved = None                      # file or package dir
+    for i, part in enumerate(parts):
+        cand_dir = os.path.join(base, part)
+        cand_py = cand_dir + ".py"
+        if os.path.isdir(cand_dir):
+            base, resolved, consumed = cand_dir, cand_dir, i + 1
+        elif os.path.isfile(cand_py):
+            resolved, consumed = cand_py, i + 1
+            break
+        else:
+            break
+    if resolved is None or consumed < 2:
+        return f"unresolvable module prefix (looked under src/): {ref}"
+    leftover = parts[consumed:]
+    if not leftover:
+        return None
+    if os.path.isdir(resolved):
+        text = _corpus_of_dir(resolved)
+    else:
+        with open(resolved, encoding="utf-8", errors="replace") as f:
+            text = f.read()
+    for sym in leftover:
+        if re.search(rf"\b{re.escape(sym)}\b", text) is None:
+            where = os.path.relpath(resolved, ROOT)
+            return f"symbol {sym!r} not found in {where} (from {ref})"
+    return None
+
+
+_DIR_CACHE: dict[str, str] = {}
+
+
+def _corpus_of_dir(path: str) -> str:
+    text = _DIR_CACHE.get(path)
+    if text is None:
+        parts = []
+        for py in sorted(glob.glob(os.path.join(path, "**", "*.py"),
+                                   recursive=True)):
+            with open(py, encoding="utf-8", errors="replace") as f:
+                parts.append(f.read())
+        text = _DIR_CACHE[path] = "\n".join(parts)
+    return text
+
+
+def check_span(span: str, corpus: str) -> str | None:
+    """Return an error string for a broken reference, None when the span
+    is fine or not a code reference at all."""
+    s = span.strip()
+    if not s or s.startswith("-") or "*" in s or "<" in s or "{" in s:
+        return None
+    first = s.split()[0].rstrip(",.:;")
+    if "/" in first:
+        if first.startswith(("http://", "https://", "~")):
+            return None
+        if os.path.exists(os.path.join(ROOT, first)):
+            return None
+        if _word_in_corpus(corpus, first) or first in corpus:
+            return None                  # row names etc., spelled path-ish
+        return f"path (or corpus string) not found: {first}"
+    if len(s.split()) > 1:
+        return None                      # shell line / prose
+    bare = s[:-2] if s.endswith("()") else s
+    bare = bare.rstrip(",.:;")
+    m = IDENT_RE.fullmatch(bare)
+    if m is None:
+        return None                      # expression, not an identifier
+    if bare.startswith("repro."):
+        return _check_repro_ref(bare, corpus)
+    for token in bare.split("."):
+        if not _word_in_corpus(corpus, token):
+            return f"identifier {token!r} (from `{span}`) not found in " \
+                   "the source corpus"
+    return None
+
+
+def main() -> int:
+    docs = []
+    for pat in DOC_GLOBS:
+        docs.extend(sorted(glob.glob(os.path.join(ROOT, pat))))
+    if not docs:
+        print("error: no docs found (README.md / docs/*.md)")
+        return 2
+    corpus = _corpus()
+    failures = []
+    n_spans = 0
+    for doc in docs:
+        with open(doc, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks are command transcripts, not references
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for match in SPAN_RE.finditer(text):
+            n_spans += 1
+            err = check_span(match.group(1), corpus)
+            if err:
+                line = text[:match.start()].count("\n") + 1
+                failures.append(
+                    f"{os.path.relpath(doc, ROOT)}:~{line}: {err}")
+    print(f"{len(docs)} docs, {n_spans} backtick spans checked, "
+          f"{len(failures)} unresolved")
+    for f in failures:
+        print(f"BROKEN REF: {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

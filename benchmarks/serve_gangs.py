@@ -33,6 +33,19 @@ a hash chain whose output detects any KV mishandling):
   capacity-blind baseline claims first and discovers fullness at splice
   time — paying steal bills for loot that bounces straight back.
   ``serve/hbm_pressure_refusal_speedup`` is the gated row.
+* **dcn rebalance** — the skewed-pod fleet again, but admission-bound:
+  every host's own backlog is homed on ONE of its two page lists (real
+  within-host skew on every host) and the small requests are short, so
+  throughput lives or dies on admission latency.  Both engines price
+  steals with the DCN table; they differ only in the rebalance mode.
+  The ``dcn_rebalance`` engine quotes each prospective re-spread through
+  ``BubbleScheduler.estimate_rebalance`` (every move priced by the
+  boundary it crosses) and buys host-local page shuffles; the baseline
+  keeps the historical flat-quoted machine-wide re-spread — whose moves
+  now bill their true level-table tolls, landing as admission freezes on
+  every page group that receives cross-host loot.
+  ``serve/dcn_rebalance_speedup`` is the gated row (acceptance: >= 1.2x,
+  identical decode streams asserted).
 
 Rows are schema-1 (see ``benchmarks/run.py``) with a ``counters`` dict; the
 standalone entry point merges them into ``BENCH_smoke.json`` so the
@@ -61,6 +74,15 @@ from repro.serving import (FLAT_SERVE_COST, SERVE_COST, ServingEngine,
 N_SLOTS = 8          # 2 KV page groups x 4 slots
 NEW_TOKENS = 12
 
+# Execution-model knobs threaded into every engine this benchmark builds:
+# ``--no-per-host-decode`` falls back to one global decode batch and
+# ``--no-wave-prefill`` to the per-request prefill loop.  Neither changes
+# a stream or a step count (slots are independent; the engines assert it),
+# so the gated rows are knob-invariant — the flags exist to A/B the
+# execution model itself (e.g. counter deltas: prefill_waves vs prefills,
+# per-host decode ledgers).
+ENGINE_KW: dict = {}
+
 # (gang, n_requests, prio): one fat gang, small gangs, lone requests.  The
 # fat gang is wider than a page group's slot count, so its backlog pins one
 # page while the other drains — only steal/rebalance keep both busy.
@@ -82,7 +104,8 @@ def _submit(eng: ServingEngine, spec) -> int:
 
 def _engine(mode: str) -> ServingEngine:
     return ServingEngine(None, None, n_slots=N_SLOTS,
-                         backend=StubModelBackend(), mode=mode)
+                         backend=StubModelBackend(), mode=mode,
+                         **ENGINE_KW)
 
 
 def _run(mode: str, spec, regen_every: int = 0) -> ServingEngine:
@@ -107,16 +130,19 @@ def _streams(eng: ServingEngine) -> dict:
 
 # -- multi-host: the skewed-pod fleet ---------------------------------------
 
-def _multihost_engine(dcn_aware: bool) -> ServingEngine:
+def _multihost_engine(dcn_aware: bool, **kw) -> ServingEngine:
     """2 pods x 2 hosts x 8 slots; the DCN-naive engine *ranks* steal
-    victims with flat per-level prices but *pays* the DCN table."""
+    victims with flat per-level prices but *pays* the DCN table — and it
+    does not know hosts exist, so its rebalancing is the flat-quoted
+    machine-wide mode too (``dcn_rebalance=False``)."""
     if dcn_aware:
-        cost, bill = SERVE_COST, None
+        cost, bill, dcn_reb = SERVE_COST, None, True
     else:
-        cost, bill = FLAT_SERVE_COST, SERVE_COST
+        cost, bill, dcn_reb = FLAT_SERVE_COST, SERVE_COST, False
     return ServingEngine(None, None, n_slots=32, pods=2, hosts=2,
                          backend=StubModelBackend(), mode="runtime",
-                         cost_model=cost, bill_model=bill)
+                         cost_model=cost, bill_model=bill,
+                         dcn_rebalance=dcn_reb, **{**ENGINE_KW, **kw})
 
 
 def _submit_skewed_pod(eng: ServingEngine) -> int:
@@ -146,16 +172,57 @@ def _run_multihost(dcn_aware: bool) -> ServingEngine:
     return eng
 
 
+# -- DCN-priced rebalancing: host-local vs flat machine-wide re-spreads -----
+
+def _submit_dcn_rebalance(eng: ServingEngine) -> int:
+    """Admission-bound within-host skew on every host: a fat gang floods
+    host0 and each host's own gangs are homed on its FIRST page list only,
+    so every host has a local fix available.  The machine-wide re-spread
+    scatters the lot across hosts — billing per-move DCN tolls that land
+    as admission freezes on the receiving page groups — where the
+    host-local mode buys four toll-free page shuffles."""
+    rng = np.random.default_rng(0)
+    n = 0
+    for _ in range(12):
+        eng.submit(rng.integers(1, 250, 8), 24, gang="fat", home="host0")
+        n += 1
+    for h in range(4):
+        for g in range(2):
+            for _ in range(8):
+                eng.submit(rng.integers(1, 250, 8), 4, gang=f"h{h}g{g}",
+                           home=f"page{2 * h}")
+                n += 1
+    return n
+
+
+def _run_dcn_rebalance(local: bool) -> ServingEngine:
+    eng = ServingEngine(None, None, n_slots=32, pods=2, hosts=2,
+                        backend=StubModelBackend(), mode="runtime",
+                        cost_model=SERVE_COST, dcn_rebalance=local,
+                        **ENGINE_KW)
+    n = _submit_dcn_rebalance(eng)
+    eng.run(max_steps=8000)
+    assert len(eng.completed) == n, (local, len(eng.completed), n)
+    return eng
+
+
 # -- HBM pressure: budgets tighter than the slot count ----------------------
 
 def _run_hbm(capacity_aware: bool) -> ServingEngine:
     """2 hosts x 2 page groups x 4 slots, 2 resident KV per group: a fat
     gang pinned to host0 plus lone host1 requests keep every group at its
-    budget, so loot placement is capacity-bound, not work-bound."""
+    budget, so loot placement is capacity-bound, not work-bound.
+
+    The rebalance mode is pinned flat (``dcn_rebalance=False``) for BOTH
+    variants: host-local re-spreads partially mask capacity-blind thrash
+    (they cheaply re-sort the backlog the blind claims bounced), and this
+    row isolates the *capacity* variable — the rebalance-mode contrast is
+    ``serve/dcn_rebalance_speedup``'s job."""
     eng = ServingEngine(None, None, n_slots=16, hosts=2,
                         backend=StubModelBackend(), mode="runtime",
                         hbm_budget=2.0, kv_bytes=1.0,
-                        capacity_aware=capacity_aware)
+                        capacity_aware=capacity_aware,
+                        **{**ENGINE_KW, "dcn_rebalance": False})
     rng = np.random.default_rng(0)
     n = 0
     for _ in range(24):
@@ -236,6 +303,23 @@ def run(smoke: bool = False) -> list[tuple]:
         f" blind_bounces={c['blind_hbm_refusals']}"
         f" slot_waits={c['hbm_slot_waits']}",
         c))
+
+    # -- DCN-priced rebalancing: host-local vs flat machine-wide -------------
+    flat = _run_dcn_rebalance(local=False)
+    local = _run_dcn_rebalance(local=True)
+    # the rebalance mode must never change what was decoded
+    assert _streams(flat) == _streams(local), "rebalance mode changed output"
+    c = local.counters()
+    c["steps_flat"] = flat.steps
+    c["flat_stall_steps"] = flat.counters()["stall_steps"]
+    c["flat_rebalances"] = flat.counters()["rebalances"]
+    rows.append((
+        "serve/dcn_rebalance_speedup", flat.steps / local.steps,
+        f"steps {flat.steps}->{local.steps}"
+        f" stall {c['flat_stall_steps']}->{c['stall_steps']}"
+        f" local_rebalances={c['local_rebalances']}"
+        f" host_decode_steps={c['host_decode_steps']}",
+        c))
     return rows
 
 
@@ -262,6 +346,11 @@ def merge_into_json(rows: list[tuple], path: str) -> None:
 def main() -> None:
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
+    # execution-model knobs (default on; see ENGINE_KW)
+    if "--no-per-host-decode" in argv:
+        ENGINE_KW["per_host_decode"] = False
+    if "--no-wave-prefill" in argv:
+        ENGINE_KW["wave_prefill"] = False
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")

@@ -56,7 +56,8 @@ DATA_POLICIES = ("first_touch", "next_touch")
 
 def rebalance_worth_it(sched: BubbleScheduler, paid: float, *,
                        min_backlog: int = 1,
-                       level: Optional[str] = None) -> bool:
+                       level: Optional[str] = None,
+                       scope=None, priced: bool = False) -> bool:
     """The cost-benefit test behind every proactive rebalance trigger.
 
     ``paid`` is the migration penalty recently spent (steal cost over a
@@ -69,10 +70,22 @@ def rebalance_worth_it(sched: BubbleScheduler, paid: float, *,
     stealing is free, ``paid`` can never cover even ``rebalance_base``,
     and the full-queue backlog walk is skipped entirely — cost-driven
     decisions need a cost model.
+
+    ``scope`` narrows both the backlog and the prospective deal to one
+    subtree (:meth:`BubbleScheduler.rebalance`'s host-local mode).
+    ``priced=True`` swaps the flat per-move estimate for the
+    boundary-priced :meth:`BubbleScheduler.estimate_rebalance` — on a
+    DCN-tabled fleet a machine-wide re-spread then has to justify its
+    ``host``/``pod`` tolls, not just its descriptor moves; on table-free
+    topologies both estimates are identical, so flat consumers keep
+    bit-identical trigger decisions either way.
     """
     if paid <= sched.cost_model.rebalance_base:
         return False
-    movable = sched.queued_movable(level)
+    if priced:
+        movable, est = sched.estimate_rebalance(level, scope)
+        return movable >= min_backlog and paid > est
+    movable = sched.queued_movable(level, scope)
     return (movable >= min_backlog
             and paid > sched.cost_model.rebalance_cost(movable))
 
@@ -181,24 +194,27 @@ class SchedulerRuntime:
         return getattr(self.policy, "sched", None)
 
     def rebalance_worth_it(self, paid: float, *, min_backlog: int = 1,
-                           level: Optional[str] = None) -> bool:
+                           level: Optional[str] = None,
+                           scope=None, priced: bool = False) -> bool:
         """Module-level :func:`rebalance_worth_it` over this runtime's
         scheduler; always False for flat-list policies (nothing to
-        re-spread hierarchically)."""
+        re-spread hierarchically).  ``scope``/``priced`` select the
+        host-local, boundary-priced variant of the test."""
         sched = self.sched
         if sched is None:
             return False
         return rebalance_worth_it(sched, paid, min_backlog=min_backlog,
-                                  level=level)
+                                  level=level, scope=scope, priced=priced)
 
     def rebalance(self, cpu: int, now: float = 0.0,
-                  level: Optional[str] = None) -> int:
-        """Trigger :meth:`BubbleScheduler.rebalance`; the billed cost
-        surfaces through the next :meth:`acquire` on the triggering cpu."""
+                  level: Optional[str] = None, scope=None) -> int:
+        """Trigger :meth:`BubbleScheduler.rebalance` (optionally scoped to
+        one subtree — the host-local mode); the billed cost surfaces
+        through the next :meth:`acquire` on the triggering cpu."""
         sched = self.sched
         if sched is None:
             return 0
-        return sched.rebalance(cpu, now, level=level)
+        return sched.rebalance(cpu, now, level=level, scope=scope)
 
     # -- the cost ledger -------------------------------------------------------
     def counters(self) -> dict:

@@ -65,13 +65,24 @@ class StealCostModel:
     ``level_penalty``.
 
     A proactive rebalance (:meth:`BubbleScheduler.rebalance`) charges
+    ``rebalance_base`` once plus, per task re-placed,
 
-        ``rebalance_base + rebalance_per_move * tasks_moved``
+        ``rebalance_per_move + level_table[boundary crossed by the move]``
 
-    once, to the cpu that triggered it — bulk re-placement amortises the
-    lock/latency cost that serial stealing pays per migration.  The
-    defaults are all zero, so unconfigured schedulers reproduce the PR 1
-    golden traces bit-for-bit.
+    to the cpu that triggered it — bulk re-placement amortises the
+    lock/latency cost that serial stealing pays per migration, but a move
+    that drags a unit across a *tabled* boundary (a ``host`` on the serving
+    fleet: DCN traffic) still pays that boundary's price
+    (:meth:`rebalance_move_cost`).  Unlike the steal side there is **no**
+    ``level_penalty`` fallback for rebalance moves: boundaries absent from
+    the table add nothing, so every flat-topology (and single-host) bill is
+    exactly the historical ``rebalance_base + rebalance_per_move * moves``.
+    The defaults are all zero, so unconfigured schedulers reproduce the
+    PR 1 golden traces bit-for-bit.
+
+    All prices are in the consumer's own currency — simulator stall quanta
+    for the discrete :class:`~repro.core.simulator.Simulator`, engine
+    admission-latency *steps* for the serving engine.
     """
 
     lock_penalty: float = 0.0        # flat cost per successful steal
@@ -98,7 +109,30 @@ class StealCostModel:
                 self.thread_penalty * n_threads)
 
     def rebalance_cost(self, moves: int) -> float:
+        """Flat (boundary-blind) price of a ``moves``-unit re-spread — the
+        *floor* of what :meth:`BubbleScheduler.rebalance` can bill, reached
+        when no move crosses a tabled boundary.  The cost-benefit trigger
+        uses this as its optimistic estimate; the boundary-priced estimate
+        lives in :meth:`BubbleScheduler.estimate_rebalance`."""
         return self.rebalance_base + self.rebalance_per_move * moves
+
+    def rebalance_move_cost(self, boundary: Optional[str] = None) -> float:
+        """Price of ONE rebalance move crossing ``boundary``: the flat
+        per-move descriptor cost plus the boundary's ``level_table`` entry.
+
+        Table-only, deliberately: a rebalance move inside an un-tabled
+        region (page→page on one host, or anywhere on a single-host fleet)
+        costs exactly ``rebalance_per_move``, keeping every pre-table
+        schedule's bill — and golden trace — byte-identical.  Only the
+        boundaries the machine actually prices (``host``/``pod`` DCN
+        crossings) add their toll."""
+        extra = 0.0
+        if boundary is not None:
+            for name, penalty in self.level_table:
+                if name == boundary:
+                    extra = penalty
+                    break
+        return self.rebalance_per_move + extra
 
     @property
     def steals_are_free(self) -> bool:
@@ -143,6 +177,15 @@ class SchedStats:
     last_steal_cost: float = 0.0  # cost of the latest steal (tracing)
     last_rebalance_moves: int = 0  # moves of the latest rebalance (tracing)
     last_rebalance_cost: float = 0.0  # billed cost of the latest rebalance
+    # destination-side share of the latest rebalance bill: component name →
+    # summed level-table extras of the moves dealt INTO it.  Billing-
+    # relevant only when the consumer opted into
+    # ``BubbleScheduler.ingest_billing`` (the serving engine, which stalls
+    # the receiving page group's admissions for these transfer tolls —
+    # consume_cost() then returns the flat trigger-side part only);
+    # otherwise the trigger cpu is billed everything and this is pure
+    # tracing.  Empty on any table-free model.
+    last_rebalance_ingest: dict = field(default_factory=dict)
 
 
 class BubbleScheduler:
@@ -180,6 +223,16 @@ class BubbleScheduler:
         # deals the unit elsewhere, instead of dragging state somewhere it
         # cannot be admitted.
         self.capacity_cb = None
+        # how a rebalance's level-table tolls are billed.  False (the
+        # default): the triggering cpu pays the WHOLE bill through
+        # consume_cost() — billed == accrued holds for every consumer,
+        # tabled model or not (the PR 2 ledger property).  True (a
+        # consumer that bills transfers where the data lands, e.g. the
+        # serving engine's admission freezes): consume_cost() returns the
+        # flat part only and the tolls are delivered via
+        # ``stats.last_rebalance_ingest`` — the opting-in consumer MUST
+        # bill them itself or they vanish from its stall ledger.
+        self.ingest_billing = False
         self.stats = SchedStats()
         self.last_queue: Optional[RunQueue] = None   # lock-domain of last pick
         self.last_steal: Optional[tuple[RunQueue, Task]] = None  # (victim, loot)
@@ -470,11 +523,23 @@ class BubbleScheduler:
             return self.topo.levels[idx].name
         return self.topo.levels[max(0, len(self.topo.levels) - 2)].name
 
-    def _gatherable(self):
+    def _resolve_scope(self, scope) -> Optional[Component]:
+        """``scope`` as a :class:`Component`: accepts a component object, a
+        component name (``"host1"``), or ``None`` (the whole machine)."""
+        if scope is None or isinstance(scope, Component):
+            return scope
+        return self.topo.component(scope)
+
+    def _gatherable(self, scope: Optional[Component] = None):
         """(queue, task) for every task a rebalance would move: runnable
         threads and closed non-empty bubbles on any list (burst husks stay
-        put for regeneration)."""
+        put for regeneration).  With ``scope`` set, only lists *inside*
+        that subtree are gathered — a host-local re-spread never touches
+        another host's backlog, or the lists covering the scope from
+        above (their work is already reachable by the whole scope)."""
         for q in self.queues.queues.values():
+            if scope is not None and scope not in q.comp.path():
+                continue
             for t in list(q.tasks):
                 if isinstance(t, Bubble):
                     if t.burst or t.done():
@@ -498,21 +563,135 @@ class BubbleScheduler:
         else:
             yield t
 
-    def queued_movable(self, level: Optional[str] = None) -> int:
+    def _spread_comps(self, level: Optional[str],
+                      scope: Optional[Component]) -> list[Component]:
+        """Target components a ``rebalance(level=, scope=)`` deals across:
+        the resolved spread level's components, restricted to ``scope``'s
+        subtree when one is given (a host-local re-spread deals across
+        that host's page groups only)."""
+        comps = self.topo.components(self._resolve_spread_level(level))
+        if scope is not None:
+            comps = [c for c in comps if scope in c.path()]
+        assert comps, (level, scope and scope.name)
+        return comps
+
+    def queued_movable(self, level: Optional[str] = None,
+                       scope=None) -> int:
         """Units a :meth:`rebalance` across ``level`` would re-place right
         now — counted *after* over-wide bubbles are expanded, so it equals
         the ``moves`` the rebalance would bill.  The adaptive policy's
         cost-benefit test uses this both as its backlog gate (an
         end-of-cycle steal-attempt spike over drained queues cannot
         trigger a rebalance that moves nothing but still bills its base
-        cost) and to price the prospective re-spread accurately."""
-        cap = self._capacity(
-            self.topo.components(self._resolve_spread_level(level))[0])
-        return sum(1 for _, t in self._gatherable()
+        cost) and to price the prospective re-spread accurately.  With
+        ``scope`` set only that subtree's backlog counts (the host-local
+        mode's gate)."""
+        scope = self._resolve_scope(scope)
+        cap = self._capacity(self._spread_comps(level, scope)[0])
+        return sum(1 for _, t in self._gatherable(scope)
                    for _ in self._expand_unit(t, cap))
 
+    def estimate_rebalance(self, level: Optional[str] = None,
+                           scope=None) -> tuple[int, float]:
+        """``(movable_units, prospective_cost)`` of a
+        :meth:`rebalance(level=, scope=)` — the *quote*.
+
+        The quote is exact, not a heuristic: it replays the very same
+        gather → expand → LPT deal the rebalance would run (without
+        touching any queue) and prices every resulting move by the
+        boundary it crosses, at ``cost_model`` (the scheduler's *belief*)
+        prices.  Anything cheaper would lie: on a pod-sharded fleet a
+        machine-wide deal *will* send units across ``host``/``pod``
+        boundaries, and a per-unit "cheapest destination" bound prices
+        every unit at its own page — flat — hiding exactly the DCN tolls
+        the mode exists to surface.
+
+        This is how a DCN-priced trigger compares modes: the machine-wide
+        quote carries its unavoidable tolls, a host-local ``scope`` quotes
+        flat page shuffles only, and the trigger buys the cheaper fix.  On
+        a table-free (or single-host) topology every boundary prices to
+        the flat per-move cost and the quote degenerates to exactly
+        ``cost_model.rebalance_cost(queued_movable(...))``, so flat
+        consumers see bit-identical trigger decisions."""
+        scope = self._resolve_scope(scope)
+        comps = self._spread_comps(level, scope)
+        cap = self._capacity(comps[0])
+        units = [(q.comp, u) for q, t in self._gatherable(scope)
+                 for u in self._expand_unit(t, cap)]
+        _, cost, _, _ = self._lpt_deal(units, comps, self.cost_model)
+        return len(units), cost
+
+    @staticmethod
+    def _unit_weight(t: Task) -> float:
+        return t.total_work() if isinstance(t, Bubble) else t.remaining
+
+    def _lpt_deal(self, units: list[tuple[Component, Task]],
+                  comps: list[Component], model: StealCostModel
+                  ) -> tuple[list[tuple[Task, Component]], float, int,
+                             dict[str, float]]:
+        """The deal itself, shared by :meth:`rebalance` (which commits it)
+        and :meth:`estimate_rebalance` (which only wants the bill): assign
+        ``(source_component, unit)`` pairs across ``comps``
+        longest-processing-time-first, respecting ``capacity_cb`` — the
+        least-loaded component that can hold the unit *on top of what this
+        deal already routed there* wins (the consumer's ledger only
+        reserves at claim time, so without the pending list one deal could
+        overcommit a destination that had room for a single unit); a unit
+        nothing accepts falls back to the global list, where every cpu can
+        reach it and admission paces it in as capacity frees.
+
+        Touches no queue and no ledger.  Returns ``(assignments, cost,
+        refused, ingest)``: the ``(unit, destination)`` list in deal
+        order; the total bill at ``model`` prices — ``rebalance_base``
+        plus each move's boundary-priced
+        :meth:`StealCostModel.rebalance_move_cost` for the source-list →
+        destination crossing (the global-list fallback crosses nothing);
+        the refused-unit count; and ``ingest``, the destination-side split
+        of the bill's level-table extras (component name → summed tolls of
+        the moves dealt into it) for consumers that bill transfers where
+        the data lands.  The sort is stable, so exact-weight ties keep
+        gather order (goldens depend on it)."""
+        units = sorted(units, key=lambda su: self._unit_weight(su[1]),
+                       reverse=True)
+        loads = [0.0] * len(comps)
+        placed: list[list[Task]] = [[] for _ in comps]
+        assignments: list[tuple[Task, Component]] = []
+        ingest: dict[str, float] = {}
+        refused = 0
+        cost = model.rebalance_base
+
+        def comp_accepts(i: int, u: Task) -> bool:
+            # the callback answers for the area around one cpu; a target
+            # component above that granularity (a host spanning several
+            # page groups) accepts when *any* of its sub-areas does —
+            # admission remains the true guard once the unit is claimed
+            if self.capacity_cb is None:
+                return True
+            pending = tuple(placed[i])
+            return any(self.capacity_cb(leaf.cpu, u, pending)
+                       for leaf in comps[i].leaves())
+
+        for src, u in units:
+            fits = [i for i in range(len(comps)) if comp_accepts(i, u)]
+            if not fits:
+                refused += 1
+                comp = self.topo.root
+            else:
+                i = min(fits, key=loads.__getitem__)
+                comp = comps[i]
+                loads[i] += self._unit_weight(u)
+                placed[i].append(u)
+            move = model.rebalance_move_cost(
+                self.topo.crossing_between(src, comp))
+            cost += move
+            extra = move - model.rebalance_per_move
+            if extra > 0:
+                ingest[comp.name] = ingest.get(comp.name, 0.0) + extra
+            assignments.append((u, comp))
+        return assignments, cost, refused, ingest
+
     def rebalance(self, cpu: int, now: float = 0.0,
-                  level: Optional[str] = None) -> int:
+                  level: Optional[str] = None, scope=None) -> int:
         """Re-gather every queued task and re-spread the lot hierarchically.
 
         Serial stealing drains an overloaded list one migration at a time,
@@ -525,6 +704,15 @@ class BubbleScheduler:
         above the leaves, e.g. NUMA nodes) longest-processing-time-first,
         so each component's list receives a near-equal share of remaining
         work and subsequent lookups succeed locally instead of stealing.
+
+        ``scope`` (a :class:`~repro.core.topology.Component` or its name,
+        e.g. ``"host1"``) is the **host-local mode**: both the gather and
+        the deal are restricted to that subtree, so the re-spread fixes
+        skew *inside* one machine region without quoting — or paying —
+        any boundary outside it.  On a DCN-priced fleet that is the
+        difference between a free page shuffle and a bill of per-move
+        ``host``/``pod`` tolls; :meth:`estimate_rebalance` is how a
+        trigger compares the two before committing.
 
         Placement is *hierarchical*: a gathered bubble wider than one
         component of the target level cannot fit anywhere and would flood
@@ -541,51 +729,25 @@ class BubbleScheduler:
         page group refuses loot here exactly as it does in the steal
         survey); units nothing accepts fall back to the global list.
         Returns the number of tasks re-placed; the triggering cpu is
-        billed ``bill_model.rebalance_cost(moves)``.
+        billed ``bill_model.rebalance_base`` plus, per move, the
+        boundary-priced :meth:`StealCostModel.rebalance_move_cost` for the
+        crossing between the unit's source list and its destination —
+        flat topologies (no ``level_table``) bill exactly the historical
+        ``rebalance_cost(moves)``.
         """
-        comps = self.topo.components(self._resolve_spread_level(level))
+        scope = self._resolve_scope(scope)
+        comps = self._spread_comps(level, scope)
         cap = self._capacity(comps[0])
-        gathered: list[Task] = []
-        for q, t in self._gatherable():
+        gathered: list[tuple[Component, Task]] = []
+        for q, t in self._gatherable(scope):
             q.remove(t)
-            gathered.append(t)
-        units = [u for t in gathered for u in self._expand_unit(t, cap)]
-
-        def weight(t: Task) -> float:
-            return t.total_work() if isinstance(t, Bubble) else t.remaining
-
-        units.sort(key=weight, reverse=True)          # LPT; ties keep order
-        loads = [0.0] * len(comps)
-        placed: list[list[Task]] = [[] for _ in comps]
-
-        def comp_accepts(i: int, u: Task) -> bool:
-            # the callback answers for the area around one cpu; a target
-            # component above that granularity (a host spanning several
-            # page groups) accepts when *any* of its sub-areas does —
-            # admission remains the true guard once the unit is claimed
-            if self.capacity_cb is None:
-                return True
-            pending = tuple(placed[i])
-            return any(self.capacity_cb(leaf.cpu, u, pending)
-                       for leaf in comps[i].leaves())
-
-        for u in units:
-            # least-loaded component that can actually hold the unit *on
-            # top of what this deal already routed there* (the consumer's
-            # ledger only reserves at claim time, so without the pending
-            # list one deal could overcommit a destination that had room
-            # for a single unit); a unit nothing accepts goes to the
-            # global list — every cpu can reach it there and admission
-            # paces it in as capacity frees
-            fits = [i for i in range(len(comps)) if comp_accepts(i, u)]
-            if not fits:
-                self.stats.steal_refusals += 1
-                comp = self.topo.root
-            else:
-                i = min(fits, key=loads.__getitem__)
-                comp = comps[i]
-                loads[i] += weight(u)
-                placed[i].append(u)
+            gathered.append((q.comp, t))
+        units = [(src, u) for src, t in gathered
+                 for u in self._expand_unit(t, cap)]
+        assignments, cost, refused, ingest = self._lpt_deal(units, comps,
+                                                            self.bill_model)
+        self.stats.steal_refusals += refused
+        for u, comp in assignments:
             self.queues.queue_of(comp).push(u)
             threads = u.threads() if isinstance(u, Bubble) else (u,)
             for th in threads:
@@ -593,13 +755,22 @@ class BubbleScheduler:
                         and comp not in self.topo.cpus[th.last_cpu].path()):
                     th.stolen = True          # next-touch re-homes its data
         moves = len(units)
-        cost = self.bill_model.rebalance_cost(moves)
         self.stats.rebalances += 1
         self.stats.rebalance_moves += moves
         self.stats.rebalance_cost += cost
         self.stats.last_rebalance_moves = moves
         self.stats.last_rebalance_cost = cost
-        self._unbilled += cost
+        self.stats.last_rebalance_ingest = ingest
+        # Under ``ingest_billing`` the bill is split: the triggering cpu
+        # pays the flat descriptor sweep (base + per-move) through
+        # consume_cost(), as it always has, and the level-table tolls are
+        # *transfer* costs the consumer bills where the data lands
+        # (``last_rebalance_ingest``).  Without it the trigger cpu pays
+        # everything — billed == accrued for consumers (the simulator)
+        # that never read the ingest side.  Table-free models: ingest is
+        # empty and both paths are the historical ledger, bit for bit.
+        self._unbilled += self.bill_model.rebalance_cost(moves) \
+            if self.ingest_billing else cost
         return moves
 
     @staticmethod

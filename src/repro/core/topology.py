@@ -99,6 +99,11 @@ class Topology:
         self.cpus: list[Component] = list(self.root.leaves())
         for i, leaf in enumerate(self.cpus):
             leaf.cpu = i
+        # name -> component, built once: component names are unique
+        # (level name + per-level index) and name resolution sits on
+        # consumer hot paths (scoped rebalances, ingest billing)
+        self._by_name: dict[str, Component] = {
+            c.name: c for comps in self._by_level.values() for c in comps}
 
     # -- queries -----------------------------------------------------------
     @property
@@ -107,6 +112,16 @@ class Topology:
 
     def components(self, level: str) -> list[Component]:
         return self._by_level[level]
+
+    def component(self, name: str) -> Component:
+        """Look a component up by its unique name (``level.name + index``,
+        e.g. ``"host1"``, ``"page3"``) — the handle consumers use to scope
+        a rebalance or home a submission to one subtree."""
+        try:
+            return self._by_name[name]
+        except KeyError:
+            raise KeyError(f"unknown component {name!r} "
+                           f"({self.describe()})") from None
 
     def level_names(self) -> list[str]:
         return [l.name for l in self.levels]
@@ -160,12 +175,24 @@ class Topology:
         than crossing a ``page`` (on-chip KV shuffle), not just linearly
         further away.
         """
-        path = self.cpus[cpu].path()
-        if comp in path:
-            return None
-        for a, b in zip(path, comp.path()):
-            if a is not b:
-                return a.level.name
+        return self.crossing_between(self.cpus[cpu], comp)
+
+    def crossing_between(self, a: Component, b: Component) -> Optional[str]:
+        """Outermost boundary between two components of the tree, or
+        ``None`` when one covers the other (an ancestor's list is reachable
+        without crossing anything).
+
+        The comp↔comp generalisation of :meth:`crossing_level`: a bulk
+        rebalance prices each move by the boundary between the *source
+        queue's* component and the *destination* component — a unit dealt
+        from one host's page list to a sibling page crosses ``page``; dealt
+        to another host it crosses ``host`` (DCN); folded back onto the
+        global list it crosses nothing.
+        """
+        pa, pb = a.path(), b.path()
+        for x, y in zip(pa, pb):
+            if x is not y:
+                return x.level.name
         return None
 
     def levels_crossed(self, cpu: int, comp: Component) -> int:

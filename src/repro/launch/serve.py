@@ -41,6 +41,24 @@ def main(argv=None):
     ap.add_argument("--hbm-budget", type=float, default=None,
                     help="KV byte budget per page group (1 unit = 1 "
                          "resident request); full groups refuse loot")
+    ap.add_argument("--per-host-decode", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="drive one decode_step per host batch (one jit "
+                         "per host, per-host step/occupancy ledgers); "
+                         "--no-per-host-decode falls back to the single "
+                         "global batch.  Streams are identical either way")
+    ap.add_argument("--wave-prefill", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="prefill same-length fresh prompts of one "
+                         "admission wave in a single batched call per "
+                         "host; --no-wave-prefill runs the per-request "
+                         "prefill loop.  Streams are identical either way")
+    ap.add_argument("--dcn-rebalance", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="quote re-spreads per boundary crossed and buy "
+                         "host-local ones when machine-wide moves are "
+                         "overpriced; --no-dcn-rebalance keeps the "
+                         "flat-quoted machine-wide re-spread")
     args = ap.parse_args(argv)
 
     if args.stub:
@@ -65,7 +83,10 @@ def main(argv=None):
     eng = ServingEngine(cfg, params, n_slots=args.slots,
                         cache_len=args.cache_len, backend=backend,
                         mode=args.mode, pods=args.pods, hosts=args.hosts,
-                        hbm_budget=args.hbm_budget)
+                        hbm_budget=args.hbm_budget,
+                        per_host_decode=args.per_host_decode,
+                        wave_prefill=args.wave_prefill,
+                        dcn_rebalance=args.dcn_rebalance)
     n_hosts = args.pods * args.hosts
     homes = [c.name for c in eng.topo.components("host")] \
         if n_hosts > 1 else [None]
@@ -88,6 +109,14 @@ def main(argv=None):
           f"{toks} tokens in {dt:.1f}s "
           f"({toks/max(dt,1e-9):.1f} tok/s, {eng.steps} engine steps)")
     print("counters:", eng.counters())
+    # per-host execution ledger: decode calls each host batch actually ran
+    # and its mean occupancy — the skew view per-host decode exists for
+    for h, (calls, occ) in enumerate(zip(eng.stats.host_decode_steps,
+                                         eng.stats.host_active_slots)):
+        lo, hi = eng._exec_groups[h]
+        mean = occ / calls if calls else 0.0
+        print(f"  host batch {h} (slots {lo}-{hi - 1}): "
+              f"{calls} decode steps, mean occupancy {mean:.2f}")
     assert len(done) == args.requests
     return 0
 

@@ -41,12 +41,25 @@ by a slot's scheduler call (remote page-group locks, KV drag) is billed as
 its next decode, so steal-happy schedules pay for their migrations in the
 engine's own currency.
 
-The decode loop itself is one jitted ``decode_step`` over the whole batch;
-slot occupancy is a boolean mask (empty slots decode padding at negligible
-marginal cost on TPU).  The model is behind a two-method backend so the
-scheduler stack can be exercised hermetically: :class:`JaxModelBackend`
-runs the real zoo, :class:`StubModelBackend` is a deterministic numpy
-stand-in (no jit compile) for tests and CI benchmarks.
+**Execution follows the placement hierarchy** (the paper's core claim
+applied to the execution substrate, not just the decisions): on a
+multi-host fleet each host owns an independent decode batch — one
+``decode_step`` call (one jit, one KV shard) per host per engine step —
+and fresh same-length prompts admitted in one wave are prefilled in one
+batched call per host (``prefill_wave``) instead of a per-request loop.
+A host whose batch is empty skips its decode entirely, which is exactly
+the per-shard latency a flat whole-fleet batch cannot model.  Slot
+occupancy within a host batch is still a mask (empty slots decode padding
+at negligible marginal cost on TPU).  Sharding the execution never
+changes the decoded streams: slots are independent in every backend, so
+per-host batches produce bit-identical tokens to the historical global
+batch (property-tested across fleet topologies), and a single-host engine
+*is* the historical global batch, byte for byte.
+
+The model is behind a small backend interface so the scheduler stack can
+be exercised hermetically: :class:`JaxModelBackend` runs the real zoo,
+:class:`StubModelBackend` is a deterministic numpy stand-in (no jit
+compile) for tests and CI benchmarks.
 """
 
 from __future__ import annotations
@@ -103,9 +116,34 @@ class Request:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Engine-side ledger (scheduler counters live in ``sched.stats``)."""
+    """Engine-side ledger (scheduler counters live in ``sched.stats``).
 
-    prefills: int = 0            # fresh prompt prefills run
+    Counting conventions worth pinning down (previously folklore):
+
+    * ``prefills`` counts **requests** prefilled (each fresh prompt once,
+      however they are batched); ``prefill_waves`` counts the **backend
+      calls** that ran them — with wave batching on, ``prefill_waves <=
+      prefills`` and the gap is the batching win.
+    * ``kv_splices`` counts batched splice **ops** (one per host batch per
+      admission wave), ``kv_spliced_slots`` the slots they wrote.
+    * ``hbm_slot_waits`` vs ``hbm_refusals`` — the two HBM events are
+      distinct and mode-exclusive: a *wait* is a capacity-**aware** slot
+      sitting out an admission wave because its page group is at budget
+      (one count per slot per step with work queued — a backpressure
+      gauge, no work wasted); a *refusal* is a capacity-**blind** claim
+      bounced at splice time, after the scheduler call and any steal bill
+      already ran — pure wasted work.  Comparing the two across modes is
+      how ``serve/hbm_pressure_refusal_speedup`` reads.
+    * ``host_decode_steps[h]`` / ``host_active_slots[h]`` — the per-host
+      execution ledger: decode calls host ``h`` actually ran (it skips
+      steps where its batch is empty) and the cumulative occupied-slot
+      count over those calls.  Host skew that placement hides shows up
+      here: a flooded host runs every step near-full while its neighbours
+      idle.  Single-host engines have one entry (the whole batch).
+    """
+
+    prefills: int = 0            # fresh REQUESTS prefilled (not calls)
+    prefill_waves: int = 0       # batched prefill CALLS issued
     kv_splices: int = 0          # batched splice ops issued
     kv_spliced_slots: int = 0    # slots written by those splices
     kv_parks: int = 0            # per-request KV states parked
@@ -113,14 +151,13 @@ class EngineStats:
     kv_page_moves: int = 0       # ...of which crossed page groups
     kv_host_moves: int = 0       # ...of which crossed hosts (DCN traffic)
     rebalances: int = 0          # queue-depth-triggered re-spreads
+    local_rebalances: int = 0    # ...of which host-scoped (DCN-free)
     stall_steps: float = 0.0     # admission latency billed by the cost model
-    # the two HBM events are distinct: a *wait* is a capacity-aware slot
-    # sitting out an admission wave because its group is at budget (one
-    # count per slot per step with work queued — a backpressure gauge); a
-    # *refusal* is a capacity-blind claim bounced at splice time after the
-    # scheduler call (and any steal bill) already ran — wasted work
     hbm_slot_waits: int = 0      # aware: full-group slots skipping waves
     hbm_refusals: int = 0        # blind: claims bounced at splice time
+    # per-host execution ledger (sized by the engine at construction)
+    host_decode_steps: list = dataclasses.field(default_factory=list)
+    host_active_slots: list = dataclasses.field(default_factory=list)
 
 
 def _fanout(sizes: list[int]):
@@ -209,6 +246,24 @@ class JaxModelBackend:
         tok = int(jnp.argmax(logits, axis=-1).astype(jnp.int32)[0])
         return tok, st
 
+    def prefill_wave(self, prompts: list) -> list:
+        """Prefill a wave of same-length prompts in ONE model call.
+
+        ``lm.prefill`` is natively batched ((B, S) tokens → (B, V) last
+        logits + batch-axis-1 states), so the wave costs one forward pass;
+        the batched state is split back into per-sequence slices so the
+        admission splice can route each to its slot.  Returns
+        ``[(first_token, state), ...]`` in prompt order — identical values
+        to ``prefill`` run per request."""
+        jnp = self._jax.numpy
+        logits, st = self._prefill(self.params,
+                                   {"tokens": jnp.asarray(np.stack(prompts))})
+        toks = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        return [(int(toks[i]),
+                 self._jax.tree.map(
+                     lambda b: b[:, i:i + 1] if b.ndim >= 2 else b, st))
+                for i in range(len(prompts))]
+
     def decode(self, tokens: np.ndarray, states) -> tuple[np.ndarray, object]:
         jnp = self._jax.numpy
         logits, states = self._decode(self.params, jnp.asarray(tokens), states)
@@ -262,6 +317,19 @@ class StubModelBackend:
             acc = self._fold(acc, tok)
         return acc % self.vocab, np.array([len(prompt), acc], np.int64)
 
+    def prefill_wave(self, prompts: list) -> list:
+        """Vectorised same-length prefill: fold all rows column by column.
+
+        Exact-equal to per-request :meth:`prefill` (the fold stays inside
+        int64: acc < 2^31, so acc*31 + tok fits with room to spare) —
+        wave batching must never change a stream."""
+        arr = np.asarray(np.stack(prompts), np.int64)          # (B, S)
+        acc = np.zeros(len(arr), np.int64)
+        for j in range(arr.shape[1]):
+            acc = (acc * 31 + arr[:, j] + 1) % self.M
+        return [(int(a % self.vocab), np.array([arr.shape[1], a], np.int64))
+                for a in acc]
+
     def decode(self, tokens: np.ndarray, states: np.ndarray
                ) -> tuple[np.ndarray, np.ndarray]:
         acc = (states[:, 1] * 31 + tokens[:, 0].astype(np.int64) + 1) % self.M
@@ -314,10 +382,39 @@ class ServingEngine:
       budget.  ``capacity_aware=False`` keeps the budget enforced but
       discovers fullness only after the claim — loot is dragged (and its
       steal billed) before bouncing back: the measurable capacity-blind
-      baseline for ``serve/hbm_pressure_refusal_speedup``.
+      baseline for ``serve/hbm_pressure_refusal_speedup``;
+    * **execution is host-sharded** (``per_host_decode``, default on):
+      each host drives its own decode batch — one ``decode_step`` per host
+      per engine step over that host's KV shard, skipped when the host's
+      batch is empty — and same-length fresh prompts admitted in one wave
+      are prefilled in one ``prefill_wave`` call per host
+      (``wave_prefill``, default on).  Neither changes a single decoded
+      token (slots are independent; property-tested), they change what
+      the engine *models*: per-shard step latency and per-host occupancy
+      skew (``EngineStats.host_decode_steps`` / ``host_active_slots``)
+      instead of one fleet-wide batch no real DCN-sharded deployment
+      runs;
+    * **rebalancing is DCN-priced** (``dcn_rebalance``, default on): each
+      re-spread move is billed by the boundary it crosses through the
+      cost model's ``level_table`` (a cross-host move pays the DCN toll,
+      not flat ``rebalance_per_move``), and the queue-depth trigger
+      compares a machine-wide re-spread against **host-local** ones
+      (`BubbleScheduler.rebalance(scope=)`), buying the local page
+      shuffle whenever the machine-wide quote is dearer.
+      ``dcn_rebalance=False`` keeps the flat-priced, machine-wide-only
+      trigger — the measurable baseline for
+      ``serve/dcn_rebalance_speedup``.  Single-host fleets have no tabled
+      boundary, so both settings are byte-identical there.
 
     ``mode="admission"`` is the pre-runtime engine: plain admission, no
     steal, no rebalance, first-touch homing.
+
+    Knob units, for the record: every cost-model price is in **engine
+    steps** (admission latency); ``hbm_budget``/``kv_bytes`` are in the
+    same abstract bytes as each other (only their ratio matters — the
+    resident-request count a page group can hold); ``window``/``cooldown``
+    are engine steps, ``depth_skew``/``min_backlog`` are queued decode
+    threads.
     """
 
     def __init__(self, cfg, params, *, n_slots: int = 8,
@@ -328,6 +425,8 @@ class ServingEngine:
                  bill_model: Optional[StealCostModel] = None,
                  hbm_budget: Optional[float] = None, kv_bytes: float = 1.0,
                  capacity_aware: bool = True,
+                 per_host_decode: bool = True, wave_prefill: bool = True,
+                 dcn_rebalance: bool = True,
                  depth_skew: int = 2, window: int = 16,
                  min_backlog: int = 2, cooldown: Optional[int] = None):
         assert mode in ("runtime", "admission"), mode
@@ -354,6 +453,11 @@ class ServingEngine:
         # slot -> global page-group index (its ancestor at the page level)
         self._page_of = [self.topo.cpus[s].path()[self._page_idx].index
                          for s in range(n_slots)]
+        # page-group index -> owning host component (None on single host):
+        # the rebalance trigger uses it to spot skew that is host-local
+        self._page_host = [
+            p.path()[self._host_idx] if self._host_idx is not None else None
+            for p in self.topo.components("page")]
         self.hbm_used = [0.0] * len(self.topo.components("page"))
         self._slot_charged = [False] * n_slots   # slot holds a reservation
         self.capacity_aware = capacity_aware and hbm_budget is not None
@@ -362,9 +466,40 @@ class ServingEngine:
             can_accept=(self._can_accept
                         if self.capacity_aware and mode == "runtime"
                         else None))
+        # this engine bills a rebalance's level-table tolls where the KV
+        # lands (admission freezes on the receiving page groups, see
+        # _maybe_rebalance), so opt into the scheduler's split billing —
+        # consume_cost() then returns the flat trigger-side part only
+        self.sched.ingest_billing = True
         self.backend = backend if backend is not None else \
             JaxModelBackend(cfg, params, cache_len)
-        self.states, self.tokens = self.backend.init(n_slots)
+        # -- host-sharded execution: one decode batch (one backend state
+        # shard, one decode_step per engine step) per execution group.
+        # With per_host_decode on a multi-host fleet the groups are the
+        # hosts' (contiguous) slot ranges; otherwise one group spans the
+        # whole fleet — the historical global batch, byte for byte.
+        self.per_host_decode = per_host_decode
+        self.wave_prefill = wave_prefill
+        self.dcn_rebalance = dcn_rebalance
+        if per_host_decode and self._host_idx is not None:
+            ranges = []
+            for h in self.topo.components("host"):
+                cpus = [leaf.cpu for leaf in h.leaves()]
+                assert cpus == list(range(cpus[0], cpus[-1] + 1)), cpus
+                ranges.append((cpus[0], cpus[-1] + 1))
+            self._exec_groups = ranges
+        else:
+            self._exec_groups = [(0, n_slots)]
+        self._group_of = [g for g, (lo, hi) in enumerate(self._exec_groups)
+                          for _ in range(lo, hi)]   # slot -> exec group
+        self._states = []
+        tok_shards = []
+        for lo, hi in self._exec_groups:
+            st, tok = self.backend.init(hi - lo)
+            self._states.append(st)
+            tok_shards.append(tok)
+        self.tokens = tok_shards[0] if len(tok_shards) == 1 else \
+            np.concatenate(tok_shards, axis=0)
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_thread: dict[int, Thread] = {}
         self._reqs: dict[int, Request] = {}
@@ -381,7 +516,9 @@ class ServingEngine:
         self._paid: deque[float] = deque()        # steal cost per step
         self._steps_since_rebalance = self.cooldown   # start armed
         self._cost_mark = 0.0
-        self.stats = EngineStats()
+        self.stats = EngineStats(
+            host_decode_steps=[0] * len(self._exec_groups),
+            host_active_slots=[0] * len(self._exec_groups))
         self.steps = 0
         self.completed: list[Request] = []
 
@@ -549,6 +686,9 @@ class ServingEngine:
         bill is paid — the slot never holds a half-migrated request whose
         state the whole-batch decode would advance."""
         writes: list[tuple[int, object]] = []
+        # (exec group, prompt len) -> [(slot, req)]: fresh prompts grouped
+        # into one wave-batched prefill call per host per length
+        fresh: dict[tuple[int, int], list] = {}
         for slot in range(self.n_slots):
             if self.slot_req[slot] is not None or self._stall[slot] > 0:
                 continue
@@ -596,15 +736,40 @@ class ServingEngine:
             if parked is not None:
                 st, tok = parked
                 self.tokens[slot, 0] = tok    # resume the continuation
+                writes.append((slot, st))
+            elif self.wave_prefill:
+                # defer: fresh prompts of one wave batch into one prefill
+                # call per (host, prompt length) — see below
+                key = (self._group_of[slot], len(req.prompt))
+                fresh.setdefault(key, []).append((slot, req))
             else:
                 tok, st = self.backend.prefill(req.prompt)
                 req.out_tokens.append(tok)
                 self.tokens[slot, 0] = tok
                 self.stats.prefills += 1
-            writes.append((slot, st))
+                writes.append((slot, st))
+        # wave-batched prefill: the per-request loop this replaces ran one
+        # model call per fresh prompt; the splice below was already batched
+        for (_, _), batch in fresh.items():
+            results = self.backend.prefill_wave(
+                [req.prompt for _, req in batch])
+            self.stats.prefill_waves += 1
+            for (slot, req), (tok, st) in zip(batch, results):
+                req.out_tokens.append(tok)
+                self.tokens[slot, 0] = tok
+                self.stats.prefills += 1
+                writes.append((slot, st))
         if writes:
-            self.states = self.backend.splice(self.states, writes)
-            self.stats.kv_splices += 1
+            # one batched splice per host batch (execution group): each
+            # group's KV shard is written in a single traversal
+            by_group: dict[int, list[tuple[int, object]]] = {}
+            for slot, st in writes:
+                g = self._group_of[slot]
+                lo = self._exec_groups[g][0]
+                by_group.setdefault(g, []).append((slot - lo, st))
+            for g, pairs in by_group.items():
+                self._states[g] = self.backend.splice(self._states[g], pairs)
+                self.stats.kv_splices += 1
             self.stats.kv_spliced_slots += len(writes)
 
     def _evict(self, slot: int, now: float) -> None:
@@ -641,13 +806,69 @@ class ServingEngine:
             depths.append(n)
         return depths
 
+    _NO_SCOPE = object()       # sentinel: no re-spread is worth buying
+
+    def _rebalance_candidates(self, depths: list[int]) -> list:
+        """Candidate re-spread scopes, most local first: every host whose
+        *own* page depths are skewed (a host-local re-spread can fix those
+        without quoting a single DCN crossing), then the whole machine
+        (``None``).  The flat mode — and any single-host fleet — only ever
+        has the machine-wide candidate."""
+        cands = []
+        if self.dcn_rebalance and self._host_idx is not None:
+            by_host: dict[int, list[int]] = {}   # host index -> page depths
+            for p, d in enumerate(depths):
+                by_host.setdefault(self._page_host[p].index, []).append(d)
+            hosts = self.topo.components("host")
+            for h, ds in by_host.items():
+                if len(ds) >= 2 and max(ds) - min(ds) >= self.depth_skew:
+                    cands.append(hosts[h])
+        cands.append(None)
+        return cands
+
+    def _choose_rebalance_scope(self, depths: list[int], paid: float):
+        """Pick the cheapest re-spread worth buying, or ``_NO_SCOPE``.
+
+        With ``dcn_rebalance`` each candidate is quoted through
+        :meth:`BubbleScheduler.estimate_rebalance` — every prospective
+        move priced by the boundary it crosses via the cost model's
+        ``level_table`` — and the cheapest worthwhile quote wins, ties to
+        the most local.  That is the whole point of the mode: when remote
+        backlog makes the machine-wide quote dear (per-move DCN tolls), a
+        host-local page shuffle that fixes the *local* skew is bought
+        instead.  Flat mode keeps the historical single machine-wide test
+        (flat per-move estimate), bit for bit."""
+        if not self.dcn_rebalance:
+            # flat mode: the historical single machine-wide test, bit for
+            # bit (flat per-move estimate via queued_movable)
+            if self.runtime.rebalance_worth_it(
+                    paid, min_backlog=self.min_backlog, level="page"):
+                return None
+            return self._NO_SCOPE
+        if paid <= self.sched.cost_model.rebalance_base:
+            return self._NO_SCOPE           # cannot cover even the base
+        best, best_cost = self._NO_SCOPE, None
+        for scope in self._rebalance_candidates(depths):
+            # one quote per candidate: worth-it test AND ranking read the
+            # same estimate (quoting replays the whole LPT deal — doing
+            # it twice per candidate would double the trigger's hot-path
+            # work for nothing)
+            movable, est = self.sched.estimate_rebalance("page", scope)
+            if movable < self.min_backlog or paid <= est:
+                continue
+            if best_cost is None or est < best_cost:
+                best, best_cost = scope, est
+        return best
+
     def _maybe_rebalance(self, now: float) -> None:
         """Decode-gang queue depths feed the same cost-benefit test the
         adaptive simulator policy uses: when one page group's backlog
         outruns another's by ``depth_skew`` and the steal cost recently
         paid exceeds one bulk re-spread's bill, re-spread across the page
         groups instead of letting slots drain the skew one costed steal at
-        a time."""
+        a time.  Under ``dcn_rebalance`` the re-spread itself is chosen by
+        quote: host-local when the machine-wide deal would pay DCN tolls
+        the local fix avoids (:meth:`_choose_rebalance_scope`)."""
         if self.mode != "runtime":
             return
         s = self.sched.stats
@@ -661,23 +882,37 @@ class ServingEngine:
         depths = self._page_depths()
         if len(depths) < 2 or max(depths) - min(depths) < self.depth_skew:
             return
-        if not self.runtime.rebalance_worth_it(sum(self._paid),
-                                               min_backlog=self.min_backlog,
-                                               level="page"):
+        scope = self._choose_rebalance_scope(depths, sum(self._paid))
+        if scope is self._NO_SCOPE:
             return
-        # bill the re-spread to (a slot of) the emptiest page group — the
-        # one whose starvation triggered it.  The scheduler accrues the
-        # cost for its *next* consume_cost() caller, which outside an
-        # acquire would be an arbitrary slot; drain it here and stall the
-        # triggering slot explicitly instead.
-        page = min(range(len(depths)), key=depths.__getitem__)
+        # bill the re-spread to (a slot of) the emptiest page group in the
+        # chosen scope — the one whose starvation triggered it.  The
+        # scheduler accrues the cost for its *next* consume_cost() caller,
+        # which outside an acquire would be an arbitrary slot; drain it
+        # here and stall the triggering slot explicitly instead.
+        pages = [p for p in range(len(depths))
+                 if scope is None or self._page_host[p] is scope]
+        page = min(pages, key=depths.__getitem__)
         slot = next(iter(self.topo.components("page")[page].leaves())).cpu
-        self.runtime.rebalance(slot, now, level="page")
+        self.runtime.rebalance(slot, now, level="page", scope=scope)
         cost = self.policy.consume_cost()
         if cost:
             self._stall[slot] += cost
             self.stats.stall_steps += cost
+        # the DCN side of the bill lands where the KV lands: every slot of
+        # a page group that received boundary-crossing loot waits out the
+        # transfer (the group's level-table toll) before its next
+        # admission — a machine-wide re-spread that scatters work across
+        # hosts freezes admissions fleet-wide, which is exactly why the
+        # priced trigger above prefers the host-local fix.  Single-host
+        # deals cross no tabled boundary: ingest is empty, nothing stalls.
+        for comp_name, extra in self.sched.stats.last_rebalance_ingest.items():
+            for leaf in self.topo.component(comp_name).leaves():
+                self._stall[leaf.cpu] += extra
+                self.stats.stall_steps += extra
         self.stats.rebalances += 1
+        if scope is not None:
+            self.stats.local_rebalances += 1
         self._paid.clear()
         self._cost_mark = self.sched.stats.steal_cost
         self._steps_since_rebalance = 0
@@ -686,7 +921,15 @@ class ServingEngine:
     def step(self) -> int:
         """One engine iteration: consider a rebalance, admit, decode one
         token for every occupied unstalled slot, retire finished requests.
-        Returns #slots decoded."""
+        Returns #slots decoded.
+
+        Decode is driven **per host batch**: each execution group with any
+        occupied slot gets its own ``decode_step`` over its own KV shard
+        (one jit per host batch on the jax backend); a host whose batch is
+        empty this step skips the call entirely.  Slots are independent in
+        every backend, so the union of per-host calls decodes exactly what
+        one global call would — sharding execution models per-shard
+        latency without touching the streams."""
         now = float(self.steps)
         self.steps += 1
         self._maybe_rebalance(now)
@@ -698,15 +941,22 @@ class ServingEngine:
                 self._stall[s] = max(0.0, self._stall[s] - 1.0)
         if not active:
             return 0
-        next_tok, self.states = self.backend.decode(self.tokens, self.states)
-        for s in active:
-            self.tokens[s, 0] = next_tok[s]
-            req = self.slot_req[s]
-            req.out_tokens.append(int(next_tok[s]))
-            t = self.slot_thread[s]
-            t.remaining -= 1.0
-            if len(req.out_tokens) >= req.max_new_tokens:
-                self._evict(s, now)
+        for g, (lo, hi) in enumerate(self._exec_groups):
+            active_g = [s for s in active if lo <= s < hi]
+            if not active_g:
+                continue                     # idle host: no decode launched
+            next_tok, self._states[g] = self.backend.decode(
+                self.tokens[lo:hi], self._states[g])
+            self.stats.host_decode_steps[g] += 1
+            self.stats.host_active_slots[g] += len(active_g)
+            for s in active_g:
+                self.tokens[s, 0] = next_tok[s - lo]
+                req = self.slot_req[s]
+                req.out_tokens.append(int(next_tok[s - lo]))
+                t = self.slot_thread[s]
+                t.remaining -= 1.0
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    self._evict(s, now)
         return len(active)
 
     def _drained(self) -> bool:
@@ -759,8 +1009,11 @@ class ServingEngine:
             if req is not None and req.gang == gang and not req.done:
                 t = self.slot_thread.pop(s)
                 self.slot_req[s] = None
-                self._kv_park[req.rid] = (self.backend.extract(self.states, s),
-                                          int(self.tokens[s, 0]))
+                g = self._group_of[s]
+                self._kv_park[req.rid] = (
+                    self.backend.extract(self._states[g],
+                                         s - self._exec_groups[g][0]),
+                    int(self.tokens[s, 0]))
                 self.stats.kv_parks += 1
                 self.tokens[s, 0] = 0
                 self._refund(s)   # parked KV lives host-side, off the budget
@@ -789,7 +1042,11 @@ class ServingEngine:
             "kv_spliced_slots": self.stats.kv_spliced_slots,
             "kv_parks": self.stats.kv_parks,
             "prefills": self.stats.prefills,
+            "prefill_waves": self.stats.prefill_waves,
+            "local_rebalances": self.stats.local_rebalances,
             "stall_steps": round(self.stats.stall_steps, 4),
             "hbm_slot_waits": self.stats.hbm_slot_waits,
             "hbm_refusals": self.stats.hbm_refusals,
+            "host_decode_steps": list(self.stats.host_decode_steps),
+            "host_active_slots": list(self.stats.host_active_slots),
         }

@@ -13,7 +13,12 @@ Two families, both runnable under real ``hypothesis`` or the deterministic
   per-page-group budgets: the KV ledger never goes negative or above
   budget at any step, it always equals the sum of live slot reservations,
   and refused loot is always re-admitted somewhere (every request
-  completes — no gang starves because a full group turned it away).
+  completes — no gang starves because a full group turned it away);
+* **per-host execution determinism** — on every 1-4 pod x 1-4 host fleet,
+  the host-sharded execution model (one ``decode_step`` per host batch,
+  wave-batched prefill) produces bit-identical decode streams *and* step
+  counts to the historical global batch: sharding execution is pure
+  modeling, never scheduling.
 """
 
 import numpy as np
@@ -111,6 +116,134 @@ class TestFleetTopology:
                 assert got is t, (src, dst, costed)
                 assert got.stolen                    # flagged for next-touch
                 assert pol.sched.stats.steals == 1
+
+
+# ---------------------------------------------------------------------------
+# per-host execution determinism: sharding the decode changes nothing
+# ---------------------------------------------------------------------------
+
+class TestPerHostDecodeDeterminism:
+    """The tentpole invariant: per-host decode batches + wave-batched
+    prefill are *execution* changes only.  On any fleet shape, with mixed
+    gangs / priorities / cross-host homes / mid-run regeneration, the
+    sharded engine must decode bit-identical streams in the exact same
+    number of engine steps as the global-batch engine."""
+
+    def _drive(self, cfg, seed, per_host, wave):
+        pods, hosts, group, n_slots = cfg
+        eng = ServingEngine(None, None, n_slots=n_slots, group=group,
+                            hosts=hosts, pods=pods,
+                            backend=StubModelBackend(),
+                            per_host_decode=per_host, wave_prefill=wave)
+        rng = np.random.default_rng(seed)
+        hostnames = [c.name for c in eng.topo.components("host")] \
+            if pods * hosts > 1 else [None]
+        gangs, n = [], 0
+        for g in range(int(rng.integers(2, 5))):
+            gang = f"g{g}" if rng.random() < 0.7 else None
+            if gang is not None:
+                gangs.append(gang)
+            home = hostnames[int(rng.integers(0, len(hostnames)))]
+            for _ in range(int(rng.integers(1, 6))):
+                eng.submit(rng.integers(1, 200, 6), int(rng.integers(2, 8)),
+                           prio=int(rng.integers(0, 3)), gang=gang,
+                           home=home)
+                n += 1
+        steps = 0
+        while not eng._drained() and steps < 4000:
+            eng.step()
+            steps += 1
+            if gangs and steps % 5 == 0:
+                eng.regenerate_gang(gangs[(steps // 5) % len(gangs)])
+        assert len(eng.completed) == n, (cfg, len(eng.completed), n)
+        return (eng.steps, {r.rid: tuple(r.out_tokens)
+                            for r in eng.completed}, eng)
+
+    @settings(max_examples=10, deadline=None)
+    @given(cfg=fleet(), seed=st.integers(min_value=0, max_value=10 ** 6))
+    def test_per_host_streams_equal_global_batch(self, cfg, seed):
+        steps_g, streams_g, _ = self._drive(cfg, seed, False, False)
+        steps_h, streams_h, eng = self._drive(cfg, seed, True, True)
+        assert steps_h == steps_g
+        assert streams_h == streams_g
+        # the sharded engine really ran one batch per host
+        n_hosts = cfg[0] * cfg[1]
+        assert len(eng._exec_groups) == (n_hosts if n_hosts > 1 else 1)
+        # every decoded token is accounted to exactly one host batch
+        # (each request's FIRST token comes from prefill, not decode)
+        assert sum(eng.stats.host_active_slots) == \
+            sum(len(s) for s in streams_h.values()) - eng.stats.prefills
+
+    def test_idle_host_skips_decode(self):
+        """A host whose batch is empty launches no decode_step: its
+        per-host ledger stays behind the busy host's."""
+        eng = ServingEngine(None, None, n_slots=8, hosts=2,
+                            backend=StubModelBackend())
+        rng = np.random.default_rng(0)
+        for _ in range(4):
+            eng.submit(rng.integers(1, 200, 6), 6, home="host0")
+        eng.run(max_steps=200)
+        assert eng.stats.host_decode_steps[0] > 0
+        assert eng.stats.host_decode_steps[1] == 0    # never woke up
+
+
+# ---------------------------------------------------------------------------
+# DCN-priced rebalancing: the host-local mode
+# ---------------------------------------------------------------------------
+
+class TestDCNRebalanceMode:
+    def _run(self, local: bool):
+        eng = ServingEngine(None, None, n_slots=32, pods=2, hosts=2,
+                            backend=StubModelBackend(),
+                            cost_model=SERVE_COST, dcn_rebalance=local)
+        rng = np.random.default_rng(0)
+        n = 0
+        for _ in range(12):
+            eng.submit(rng.integers(1, 250, 8), 24, gang="fat",
+                       home="host0")
+            n += 1
+        for h in range(4):
+            for g in range(2):
+                for _ in range(8):
+                    eng.submit(rng.integers(1, 250, 8), 4,
+                               gang=f"h{h}g{g}", home=f"page{2 * h}")
+                    n += 1
+        eng.run(max_steps=8000)
+        assert len(eng.completed) == n
+        return eng
+
+    def test_local_mode_buys_host_local_respreads(self):
+        """On admission-bound within-host skew the priced trigger buys
+        host-local re-spreads; the flat trigger never does (it has no
+        host-local candidates at all) and its machine-wide deal pays
+        level-table tolls — more stall for more steps.  Either way the
+        decode streams are identical: rebalance mode is pure
+        scheduling."""
+        local = self._run(True)
+        flat = self._run(False)
+        assert local.stats.local_rebalances > 0
+        assert flat.stats.local_rebalances == 0
+        assert local.steps < flat.steps
+        assert {r.rid: tuple(r.out_tokens) for r in local.completed} == \
+            {r.rid: tuple(r.out_tokens) for r in flat.completed}
+
+    def test_single_host_modes_identical(self):
+        """No tabled boundary on a single host: both rebalance modes make
+        bit-identical decisions and bills (the goldens depend on it)."""
+        def run(local):
+            eng = ServingEngine(None, None, n_slots=8,
+                                backend=StubModelBackend(),
+                                dcn_rebalance=local)
+            rng = np.random.default_rng(1)
+            for i in range(20):
+                eng.submit(rng.integers(1, 200, 6), 8,
+                           gang="fat" if i < 14 else None)
+            eng.run(max_steps=2000)
+            return (eng.steps, eng.stats.rebalances,
+                    eng.sched.stats.rebalance_cost,
+                    {r.rid: tuple(r.out_tokens) for r in eng.completed})
+
+        assert run(True) == run(False)
 
 
 # ---------------------------------------------------------------------------

@@ -245,7 +245,6 @@ class TestKVNextTouch:
         assert eng.stats.kv_spliced_slots == 8
         assert eng.stats.kv_splices == 1
 
-
     def test_regenerate_while_member_pending_does_not_duplicate(self):
         """A gang member claimed by a steal but still waiting out its
         admission stall (``_pending``) must fold back into the regenerated
@@ -271,6 +270,61 @@ class TestKVNextTouch:
         submit_all(ref, SKEW)
         ref.run(max_steps=2000)
         assert streams(ref) == streams(eng)
+
+
+# ---------------------------------------------------------------------------
+# wave-batched prefill: one model call per (host, length) per wave
+# ---------------------------------------------------------------------------
+
+class TestWavePrefill:
+    def test_one_call_per_wave_not_per_request(self):
+        """8 same-length prompts admitted in one wave prefill in ONE
+        backend call; the per-request ledger still counts all 8."""
+        eng = make_engine(n_slots=8)
+        submit_all(eng, [(None, 8, 0)])
+        eng.step()
+        assert eng.stats.prefills == 8        # requests prefilled
+        assert eng.stats.prefill_waves == 1   # backend calls issued
+
+    def test_mixed_lengths_split_waves(self):
+        """A wave mixes prompt lengths: one call per distinct length (the
+        backend stacks same-shape prompts only)."""
+        eng = make_engine(n_slots=8)
+        rng = np.random.default_rng(0)
+        for i in range(8):
+            eng.submit(rng.integers(1, 200, 6 + (i % 2)), 4)
+        eng.step()
+        assert eng.stats.prefills == 8
+        assert eng.stats.prefill_waves == 2
+
+    def test_wave_prefill_streams_equal_per_request_loop(self):
+        """Batching the prefill must never change a stream or a step."""
+        spec = [("g", 4, 0), (None, 3, 1), ("h", 2, 2)]
+
+        def run(wave):
+            eng = make_engine(n_slots=8, wave_prefill=wave)
+            n = submit_all(eng, spec, new_tokens=8)
+            eng.run(max_steps=500)
+            assert len(eng.completed) == n
+            return eng.steps, streams(eng), eng
+
+        steps_w, st_w, eng_w = run(True)
+        steps_l, st_l, eng_l = run(False)
+        assert (steps_w, st_w) == (steps_l, st_l)
+        assert eng_w.stats.prefills == eng_l.stats.prefills == 9
+        assert eng_w.stats.prefill_waves < eng_w.stats.prefills
+        assert eng_l.stats.prefill_waves == 0    # loop mode: no wave calls
+
+    def test_stub_wave_matches_scalar_prefill(self):
+        """The vectorised stub fold is exact, not approximately equal."""
+        backend = StubModelBackend()
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(1, 250, 11) for _ in range(6)]
+        wave = backend.prefill_wave(prompts)
+        for prompt, (tok, state) in zip(prompts, wave):
+            stok, sstate = backend.prefill(prompt)
+            assert tok == stok
+            assert (state == sstate).all()
 
 
 # ---------------------------------------------------------------------------

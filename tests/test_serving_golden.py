@@ -11,9 +11,16 @@ ledger — per engine mode and topology, single-host and multi-host:
   steal traffic;
 * ``multihost_skew`` — the pod-sharded fleet (2 pods x 2 hosts), with the
   DCN-priced cost table (``dcn``) and the flat-ranking/DCN-billed naive
-  engine (``naive``);
+  engine (``naive``, which also keeps the flat machine-wide rebalance
+  mode — a DCN-naive engine does not know hosts exist);
 * ``hbm_pressure`` — per-page-group HBM budgets, capacity-``aware`` vs
-  capacity-``blind``.
+  capacity-``blind`` (rebalance mode pinned flat in both, isolating the
+  capacity variable — matching ``benchmarks/serve_gangs.py``);
+* ``dcn_rebalance`` — the DCN-priced rebalance path: admission-bound
+  within-host skew on every host; ``local`` quotes re-spreads through the
+  boundary-priced estimate and buys host-local page shuffles, ``flat``
+  keeps the flat-quoted machine-wide deal and pays its level-table tolls
+  as admission freezes on the receiving page groups.
 
 Each snapshot records the engine step count, a digest of every completed
 request's full decode stream (the stub backend hashes token history, so
@@ -92,6 +99,11 @@ MULTI_SKEW = ([("fat", 16, 0, "host0", 28)] +
               [(f"h{h}g{g}", 8, 0, f"page{2 * h}", 12)
                for h in range(1, 4) for g in range(2)])
 HBM = [("fat", 24, 0, "host0", 10), (None, 6, 1, "host1", 6)]
+# the benchmark's dcn-rebalance shape: short small requests (admission-
+# bound) with every host's own backlog homed on its FIRST page list
+DCN_REB = ([("fat", 12, 0, "host0", 24)] +
+           [(f"h{h}g{g}", 8, 0, f"page{2 * h}", 4)
+            for h in range(4) for g in range(2)])
 
 
 def build(case: str, variant: str) -> tuple[ServingEngine, list, tuple]:
@@ -108,12 +120,19 @@ def build(case: str, variant: str) -> tuple[ServingEngine, list, tuple]:
         cost, bill = (SERVE_COST, None) if variant == "dcn" else \
             (FLAT_SERVE_COST, SERVE_COST)
         eng = ServingEngine(None, None, n_slots=32, pods=2, hosts=2,
-                            backend=stub, cost_model=cost, bill_model=bill)
+                            backend=stub, cost_model=cost, bill_model=bill,
+                            dcn_rebalance=(variant == "dcn"))
         return eng, MULTI_SKEW, ()
+    if case == "dcn_rebalance":
+        eng = ServingEngine(None, None, n_slots=32, pods=2, hosts=2,
+                            backend=stub, cost_model=SERVE_COST,
+                            dcn_rebalance=(variant == "local"))
+        return eng, DCN_REB, ()
     assert case == "hbm_pressure", case
     eng = ServingEngine(None, None, n_slots=16, hosts=2, backend=stub,
                         hbm_budget=2.0, kv_bytes=1.0,
-                        capacity_aware=(variant == "aware"))
+                        capacity_aware=(variant == "aware"),
+                        dcn_rebalance=False)
     return eng, HBM, ()
 
 
@@ -127,7 +146,8 @@ def simulate(case: str, variant: str) -> dict:
 CASES = [("single_skew", "admission"), ("single_skew", "runtime"),
          ("single_churn", "runtime"),
          ("multihost_skew", "naive"), ("multihost_skew", "dcn"),
-         ("hbm_pressure", "blind"), ("hbm_pressure", "aware")]
+         ("hbm_pressure", "blind"), ("hbm_pressure", "aware"),
+         ("dcn_rebalance", "flat"), ("dcn_rebalance", "local")]
 
 
 # ---------------------------------------------------------------------------
@@ -138,10 +158,12 @@ GOLDEN = {
     ('single_skew', 'admission'): {'steps': 55, 'streams': 'dbb35fc690fba08b', 'steals': 0, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 0, 'kv_page_moves': 0, 'kv_host_moves': 0, 'kv_parks': 0, 'prefills': 21, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 0.0},
     ('single_skew', 'runtime'): {'steps': 35, 'streams': 'dbb35fc690fba08b', 'steals': 6, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 6, 'kv_page_moves': 2, 'kv_host_moves': 0, 'kv_parks': 0, 'prefills': 21, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 8.375},
     ('single_churn', 'runtime'): {'steps': 22, 'streams': 'a378043789385b15', 'steals': 0, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 0, 'kv_page_moves': 0, 'kv_host_moves': 0, 'kv_parks': 4, 'prefills': 16, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 0.0},
-    ('multihost_skew', 'naive'): {'steps': 74, 'streams': '55cfc4500c9ca06d', 'steals': 17, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 31, 'kv_page_moves': 18, 'kv_host_moves': 12, 'kv_parks': 0, 'prefills': 64, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 259.25},
-    ('multihost_skew', 'dcn'): {'steps': 51, 'streams': '55cfc4500c9ca06d', 'steals': 12, 'steal_refusals': 0, 'rebalances': 2, 'kv_migrations': 28, 'kv_page_moves': 14, 'kv_host_moves': 9, 'kv_parks': 0, 'prefills': 64, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 80.5},
-    ('hbm_pressure', 'blind'): {'steps': 47, 'streams': 'ed6dbeec973b4ef5', 'steals': 20, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 15, 'kv_page_moves': 12, 'kv_host_moves': 9, 'kv_parks': 0, 'prefills': 30, 'hbm_slot_waits': 0, 'hbm_refusals': 203, 'stall_steps': 85.25},
+    ('multihost_skew', 'naive'): {'steps': 82, 'streams': '55cfc4500c9ca06d', 'steals': 17, 'steal_refusals': 0, 'rebalances': 2, 'kv_migrations': 31, 'kv_page_moves': 18, 'kv_host_moves': 13, 'kv_parks': 0, 'prefills': 64, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 809.75},
+    ('multihost_skew', 'dcn'): {'steps': 65, 'streams': '55cfc4500c9ca06d', 'steals': 22, 'steal_refusals': 0, 'rebalances': 2, 'kv_migrations': 34, 'kv_page_moves': 9, 'kv_host_moves': 4, 'kv_parks': 0, 'prefills': 64, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 296.625},
+    ('hbm_pressure', 'blind'): {'steps': 55, 'streams': 'ed6dbeec973b4ef5', 'steals': 35, 'steal_refusals': 0, 'rebalances': 2, 'kv_migrations': 16, 'kv_page_moves': 11, 'kv_host_moves': 6, 'kv_parks': 0, 'prefills': 30, 'hbm_slot_waits': 0, 'hbm_refusals': 173, 'stall_steps': 261.25},
     ('hbm_pressure', 'aware'): {'steps': 37, 'streams': 'ed6dbeec973b4ef5', 'steals': 4, 'steal_refusals': 18, 'rebalances': 1, 'kv_migrations': 4, 'kv_page_moves': 2, 'kv_host_moves': 1, 'kv_parks': 0, 'prefills': 30, 'hbm_slot_waits': 228, 'hbm_refusals': 0, 'stall_steps': 24.75},
+    ('dcn_rebalance', 'flat'): {'steps': 64, 'streams': '90b7d19ba0bb5e62', 'steals': 17, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 32, 'kv_page_moves': 11, 'kv_host_moves': 9, 'kv_parks': 0, 'prefills': 76, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 483.125},
+    ('dcn_rebalance', 'local'): {'steps': 39, 'streams': '90b7d19ba0bb5e62', 'steals': 19, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 36, 'kv_page_moves': 5, 'kv_host_moves': 4, 'kv_parks': 0, 'prefills': 76, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 298.5},
 }
 
 

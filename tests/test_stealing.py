@@ -366,6 +366,130 @@ class TestLevelTableAndBilling:
 
 
 # ---------------------------------------------------------------------------
+# DCN-priced + scoped rebalancing (per-move boundary billing, host-local
+# mode, the exact quote)
+# ---------------------------------------------------------------------------
+
+class TestScopedAndPricedRebalance:
+    TABLE = StealCostModel(rebalance_base=1.0, rebalance_per_move=0.5,
+                           level_table=(("node", 10.0),))
+
+    def test_move_cost_is_table_only(self):
+        """Rebalance moves have NO level_penalty fallback: un-tabled (and
+        un-crossed) boundaries price to the flat per-move cost, so every
+        pre-table bill is reproduced exactly."""
+        cm = StealCostModel(level_penalty=7.0, rebalance_per_move=0.5,
+                            level_table=(("node", 10.0),))
+        assert cm.rebalance_move_cost("node") == pytest.approx(10.5)
+        assert cm.rebalance_move_cost("cpu") == pytest.approx(0.5)
+        assert cm.rebalance_move_cost(None) == pytest.approx(0.5)
+
+    def test_moves_priced_by_boundary_crossed(self):
+        """4 equal units gathered from node3's list and LPT-dealt across
+        the 4 nodes: the 3 that leave node3 pay the table's toll, the one
+        that stays pays flat.  Without an ingest-billing consumer the
+        triggering cpu pays the WHOLE bill through consume_cost() —
+        billed == accrued holds for the simulator path even under a
+        tabled model."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        for _ in range(4):
+            sched.queues.queue_of(topo.components("node")[3]).push(
+                thread(3.0))
+        moves = sched.rebalance(0, level="node")
+        assert moves == 4
+        assert sched.stats.rebalance_cost == \
+            pytest.approx(1.0 + 4 * 0.5 + 3 * 10.0)
+        assert sched.consume_cost() == pytest.approx(sched.stats.rebalance_cost)
+        ingest = sched.stats.last_rebalance_ingest
+        assert sum(ingest.values()) == pytest.approx(3 * 10.0)
+        assert set(ingest) == {"node0", "node1", "node2"}
+
+    def test_ingest_billing_splits_the_bill(self):
+        """An ingest-billing consumer (the serving engine) gets the flat
+        trigger-side part from consume_cost() and bills the tolls where
+        the data lands; flat part + ingest == the full accrued cost, so
+        nothing is double-billed or dropped."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        sched.ingest_billing = True
+        for _ in range(4):
+            sched.queues.queue_of(topo.components("node")[3]).push(
+                thread(3.0))
+        sched.rebalance(0, level="node")
+        flat = sched.consume_cost()
+        assert flat == pytest.approx(1.0 + 4 * 0.5)
+        assert flat + sum(sched.stats.last_rebalance_ingest.values()) == \
+            pytest.approx(sched.stats.rebalance_cost)
+
+    def test_scope_restricts_gather_and_deal(self):
+        """A node-scoped re-spread touches only that node's subtree: work
+        outside the scope stays put, every unit lands inside the scope,
+        and no move crosses a tabled boundary (ingest empty)."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        n0 = topo.components("node")[0]
+        for c in n0.children:
+            sched.queues.queue_of(c).push(thread(2.0))
+        outside = thread(9.0)
+        sched.queues.queue_of(topo.components("node")[1]).push(outside)
+        moves = sched.rebalance(0, level="cpu", scope="node0")
+        assert moves == 4
+        q1 = sched.queues.queue_of(topo.components("node")[1])
+        assert outside in q1.tasks                     # untouched
+        inside = [t for c in n0.children
+                  for t in sched.queues.queue_of(c).tasks]
+        assert len(inside) == 4                        # dealt inside scope
+        assert sched.stats.last_rebalance_ingest == {}
+        assert sched.consume_cost() == pytest.approx(1.0 + 4 * 0.5)
+
+    def test_estimate_is_the_bill(self):
+        """The quote replays the deal: estimate_rebalance returns exactly
+        the moves and cost the committed rebalance then bills (cost and
+        bill model being the same here)."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        for i, node in enumerate((0, 0, 2, 3)):
+            sched.queues.queue_of(topo.components("node")[node]).push(
+                thread(2.0 + i))
+        sched.queues.global_queue().push(thread(7.0))
+        movable, quote = sched.estimate_rebalance("node")
+        moves = sched.rebalance(0, level="node")
+        assert moves == movable == 5
+        assert sched.stats.last_rebalance_cost == pytest.approx(quote)
+
+    def test_flat_model_quote_degenerates_to_flat_cost(self):
+        """Table-free models: the exact quote equals the historical flat
+        estimate, so flat consumers keep bit-identical trigger
+        decisions."""
+        cm = StealCostModel(rebalance_base=2.0, rebalance_per_move=0.5)
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=cm)
+        for _ in range(6):
+            sched.queues.global_queue().push(thread(1.0))
+        movable, quote = sched.estimate_rebalance("node")
+        assert movable == 6
+        assert quote == pytest.approx(cm.rebalance_cost(6))
+
+    def test_estimate_touches_no_queue(self):
+        """Quoting is free: the queues are bit-identical before and
+        after."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.TABLE)
+        for node in (0, 1, 3):
+            sched.queues.queue_of(topo.components("node")[node]).push(
+                thread(4.0))
+        before = {q.comp.name: list(q.tasks)
+                  for q in sched.queues.queues.values()}
+        sched.estimate_rebalance("node")
+        sched.estimate_rebalance("node", scope="node0")
+        after = {q.comp.name: list(q.tasks)
+                 for q in sched.queues.queues.values()}
+        assert before == after
+        assert sched.stats.rebalances == 0
+
+
+# ---------------------------------------------------------------------------
 # adaptive rebalance level (derived from the steal-distance histogram)
 # ---------------------------------------------------------------------------
 
