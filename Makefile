@@ -10,8 +10,9 @@
 #                     writes machine-readable BENCH_smoke.json
 #   make bench-gate   bench-smoke + regression check against the committed
 #                     benchmarks/baseline_smoke.json (>10% speedup drop fails)
-#   make serve-gate   stub-model serving-gang benchmark alone (seconds, no
-#                     jax) gated against the serve/ baseline rows
+#   make serve-gate   stub-model serving benchmarks alone (gang + open-loop
+#                     SLA rows; seconds, no jax) gated against the serve/
+#                     baseline rows
 #   make golden-check regenerate the golden traces (simulator + serving
 #                     engine) and fail on any drift
 #   make bench        the full paper tables (slow: includes wall-clock
@@ -37,8 +38,11 @@ bench-smoke:
 bench-gate: bench-smoke
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_smoke.json
 
+# order matters: serve_gangs' merge replaces every serve/ row, so the
+# open-loop merge (which replaces only its own rows) must run after it
 serve-gate:
 	$(PYTHON) benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
+	$(PYTHON) benchmarks/serve_open_loop.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_serve.json --prefix serve/
 
 # GOLDEN_OUT / SERVING_GOLDEN_OUT additionally write the regenerated

@@ -3,7 +3,8 @@
 Usage::
 
     python benchmarks/check_regression.py BASELINE.json CURRENT.json \
-        [--tolerance 0.10] [--gain-tolerance 5.0] [--prefix table2/]
+        [--tolerance 0.10] [--gain-tolerance 5.0] [--latency-tolerance 3.0] \
+        [--prefix table2/]
 
 ``--prefix`` restricts the gate to rows whose name starts with the given
 prefix — for partial runs (e.g. ``serve_gangs.py --smoke`` writes only
@@ -12,7 +13,7 @@ other row as missing).  A prefix that matches **zero** gated baseline rows
 is a usage error (exit 2): a typo'd prefix must not silently gate nothing
 and pass.
 
-Two kinds of row are gated:
+Three kinds of row are gated:
 
 * ``kind == "speedup"`` (Table 2 + serving): the current speedup must be
   at least ``baseline * (1 - tolerance)`` — a *relative* band, because a
@@ -25,6 +26,11 @@ Two kinds of row are gated:
   loose near 60%, so the band is points (default 5.0 — generous for a
   fully deterministic simulator, tight enough that a real placement
   regression, which historically costs 10+ points, still fails).
+* ``kind == "latency"`` (the open-loop p99-TTFT rows): **lower is
+  better** — the current value must be at most ``baseline +
+  latency_tolerance``, an absolute band in the row's own units (engine
+  steps; same spirit as the gain band: percentile latencies near zero
+  would make any relative band meaningless).
 
 Wall-clock rows (``us_per_call``, ``step_ms``) are reported but not gated
 — they are the only nondeterministic rows.  A gated baseline row that
@@ -43,7 +49,7 @@ from __future__ import annotations
 import json
 import sys
 
-GATED_KINDS = ("speedup", "gain_pct")
+GATED_KINDS = ("speedup", "gain_pct", "latency")
 
 
 def load_rows(path: str) -> dict[str, dict]:
@@ -53,22 +59,29 @@ def load_rows(path: str) -> dict[str, dict]:
     return {r["name"]: r for r in doc["rows"]}
 
 
-def floor_for(row: dict, tolerance: float, gain_tolerance: float) -> float:
-    """The gate floor: relative band for speedups, absolute points band
-    for gain percentages (see module docstring for the rationale)."""
+def bound_for(row: dict, tolerance: float, gain_tolerance: float,
+              latency_tolerance: float) -> tuple[float, bool]:
+    """The gate bound and its direction as ``(bound, lower_is_better)``:
+    a relative floor for speedups, an absolute-points floor for gain
+    percentages, and an absolute-band *ceiling* for latency rows (see the
+    module docstring for the rationale)."""
+    if row.get("kind") == "latency":
+        return row["value"] + latency_tolerance, True
     if row.get("kind") == "gain_pct":
-        return row["value"] - gain_tolerance
-    return row["value"] * (1.0 - tolerance)
+        return row["value"] - gain_tolerance, False
+    return row["value"] * (1.0 - tolerance), False
 
 
 def main(argv: list[str]) -> int:
     tolerance = 0.10
     gain_tolerance = 5.0
+    latency_tolerance = 3.0
     prefix = ""
     args = []
     i = 0
     while i < len(argv):
-        if argv[i] in ("--tolerance", "--gain-tolerance"):
+        if argv[i] in ("--tolerance", "--gain-tolerance",
+                       "--latency-tolerance"):
             flag = argv[i]
             if i + 1 >= len(argv):
                 print(f"error: {flag} needs a value")
@@ -80,8 +93,10 @@ def main(argv: list[str]) -> int:
                 return 2
             if flag == "--tolerance":
                 tolerance = value
-            else:
+            elif flag == "--gain-tolerance":
                 gain_tolerance = value
+            else:
+                latency_tolerance = value
             i += 2
             continue
         if argv[i] == "--prefix":
@@ -130,22 +145,30 @@ def main(argv: list[str]) -> int:
             failures.append(f"{name}: gated row missing from current run "
                             f"(baseline {brow['value']:.4f})")
             continue
-        floor = floor_for(brow, tolerance, gain_tolerance)
-        status = "FAIL" if crow["value"] < floor else "ok"
+        bound, lower_better = bound_for(brow, tolerance, gain_tolerance,
+                                        latency_tolerance)
+        if lower_better:
+            bad = crow["value"] > bound
+            word, cmp = "ceil", ">"
+        else:
+            bad = crow["value"] < bound
+            word, cmp = "floor", "<"
+        status = "FAIL" if bad else "ok"
         print(f"{status:4s} {name:40s} base={brow['value']:8.4f} "
-              f"cur={crow['value']:8.4f} floor={floor:8.4f}")
-        if crow["value"] < floor:
+              f"cur={crow['value']:8.4f} {word}={bound:8.4f}")
+        if bad:
+            band = "rel" if brow.get("kind") == "speedup" else "abs"
             failures.append(
-                f"{name}: {crow['value']:.4f} < floor {floor:.4f} "
-                f"(baseline {brow['value']:.4f}, "
-                f"{'abs' if brow.get('kind') == 'gain_pct' else 'rel'} band)")
+                f"{name}: {crow['value']:.4f} {cmp} {word} {bound:.4f} "
+                f"(baseline {brow['value']:.4f}, {band} band)")
     for name in sorted(set(cur) - set(base)):
         if cur[name].get("kind") in GATED_KINDS and name.startswith(prefix):
             print(f"new  {name:40s} cur={cur[name]['value']:8.4f} "
                   "(ungated; refresh baseline to gate)")
 
     print(f"\n{len(gated)} gated rows checked (speedup band {tolerance:.0%}, "
-          f"gain band {gain_tolerance:g} points); "
+          f"gain band {gain_tolerance:g} points, "
+          f"latency band {latency_tolerance:g} steps); "
           f"{len(failures)} regression(s)")
     for f in failures:
         print(f"REGRESSION: {f}")

@@ -13,7 +13,7 @@ the full run).  Schema::
 
     {"schema": 1, "suite": "smoke"|"full",
      "rows": [{"name": "table2/thrash_adaptive", "value": 10.26,
-               "kind": "speedup"|"gain_pct"|"us_per_call"|"step_ms",
+               "kind": "speedup"|"gain_pct"|"latency"|"us_per_call"|"step_ms",
                "derived": "...",
                "counters": {"steals": ..., "steals_by_level": {...},
                             "rebalances": ..., "steal_cost": ...}}]}
@@ -55,14 +55,16 @@ def main() -> None:
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     json_path = _json_path(argv, smoke)
-    from benchmarks import fig5_fibonacci, serve_gangs, table2_conduction
+    from benchmarks import (fig5_fibonacci, serve_gangs, serve_open_loop,
+                            table2_conduction)
 
     if smoke:
-        mods = [table2_conduction, fig5_fibonacci, serve_gangs]
+        mods = [table2_conduction, fig5_fibonacci, serve_gangs,
+                serve_open_loop]
     else:
         from benchmarks import roofline, table1_cost
         mods = [table1_cost, table2_conduction, fig5_fibonacci, roofline,
-                serve_gangs]
+                serve_gangs, serve_open_loop]
 
     failed = 0
     out_rows = []
@@ -72,10 +74,14 @@ def main() -> None:
             for row in rows:
                 name, v, d = row[:3]
                 counters = row[3] if len(row) > 3 else None
+                # optional per-row kind override (5th element) — the
+                # open-loop bench mixes lower-is-better "latency" rows
+                # into a prefix whose default kind is "speedup"
+                kind = row[4] if len(row) > 4 else \
+                    _KINDS.get(name.split("/")[0], "value")
                 print(f"{name},{v:.4f},{d}")
                 entry = {"name": name, "value": round(v, 6),
-                         "kind": _KINDS.get(name.split("/")[0], "value"),
-                         "derived": d}
+                         "kind": kind, "derived": d}
                 if counters:
                     entry["counters"] = counters
                 out_rows.append(entry)

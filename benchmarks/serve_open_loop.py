@@ -1,0 +1,166 @@
+"""Open-loop serving benchmark: SLA-tiered scheduling vs hold-the-slot FIFO.
+
+Every other ``serve/`` row drains a closed batch; this one replays an
+**open-loop trace** (Poisson arrivals, heavy-tailed lengths, three SLA
+classes — ``repro.serving.workload``) against two engines and gates the
+suite's first *latency-percentile* rows:
+
+* the **FIFO baseline** (``mode="admission"``, no ``sla_classes``): a
+  request that gets a slot holds it to completion, admission is arrival
+  order — every class queues behind whatever arrived first;
+* the **SLA engine** (``sla_classes`` + ``preempt``): class priorities ride
+  the covering-list walk (paper §3.3.2), a weighted deficit round-robin
+  arbitrates admission so ``batch`` is never starved, long-runners demote
+  (multilevel feedback), and an ``interactive`` backlog with no free slot
+  parks a ``batch`` gang's KV (the PR 3 park/splice path) and restores it
+  later without re-prefill.
+
+Gated rows (both against the same trace, seed-pinned):
+
+* ``serve/openloop_p99_ttft`` — the SLA engine's p99 TTFT for the
+  ``interactive`` class, in engine steps.  **Lower is better** (kind
+  ``latency``): the regression gate fails when the current value exceeds
+  the baseline by more than the absolute tolerance band.
+* ``serve/sla_preempt_goodput`` — goodput-under-SLA ratio, SLA engine over
+  FIFO (completed requests whose TTFT met their contract SLO; both engines
+  judged by the same SLOs).  Higher is better (kind ``speedup``).
+
+Scheduling must never change *what* is decoded, only *when*: the two
+engines' per-request streams are asserted identical, and a same-class
+trace is replayed under two admission orders (per-step arrival order
+reversed) to assert order-invariant streams.
+
+Standalone entry point merges rows into the serve-gate JSON — run AFTER
+``serve_gangs.py`` (whose merge replaces every ``serve/`` row) and it only
+replaces its own rows::
+
+    python benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
+    python benchmarks/serve_open_loop.py --smoke --json BENCH_serve.json
+    python benchmarks/check_regression.py benchmarks/baseline_smoke.json \
+        BENCH_serve.json --prefix serve/
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.core.bubble import reset_ids
+from repro.serving import (SLA_CLASSES, ServingEngine, StubModelBackend,
+                           drive, make_trace)
+
+N_SLOTS = 16          # 2 hosts x 2 KV page groups x 4 slots
+TRACE = dict(steps=160, rate=1.6, seed=0)   # ~1.1x the fleet's drain rate
+
+
+def _engine(**kw) -> ServingEngine:
+    reset_ids()       # fresh task ids: runs are independent and replayable
+    return ServingEngine(None, None, n_slots=N_SLOTS, group=4, hosts=2,
+                         backend=StubModelBackend(), **kw)
+
+
+def _streams(eng: ServingEngine) -> dict:
+    return {r.rid: tuple(r.out_tokens) for r in eng.completed}
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    trace = make_trace(**TRACE)
+    fifo = drive(_engine(mode="admission"), trace, max_steps=60000)
+    sla = drive(_engine(sla_classes=SLA_CLASSES, preempt=True), trace,
+                max_steps=60000)
+    assert len(fifo.completed) == len(trace) == len(sla.completed), \
+        (len(fifo.completed), len(sla.completed), len(trace))
+    # scheduling (priorities, WDRR, preemption, park/splice) must never
+    # change a decoded token — only when it lands
+    assert _streams(fifo) == _streams(sla), "SLA scheduling changed output"
+    # preemption actually exercised the park/splice path on this trace
+    assert sla.stats.preemptions > 0 and sla.stats.preempt_parks > 0, \
+        (sla.stats.preemptions, sla.stats.preempt_parks)
+
+    # admission-order invariance for same-class traffic: same arrivals,
+    # per-step submission order reversed -> identical streams per request
+    same = [r for r in make_trace(**{**TRACE, "steps": 64, "seed": 1})
+            if r.sla == "standard"]
+    a = drive(_engine(sla_classes=SLA_CLASSES), list(same), max_steps=60000)
+    rev = []
+    for r in same:
+        if rev and rev[-1][0] == r.step:
+            rev[-1][1].insert(0, r)
+        else:
+            rev.append((r.step, [r]))
+    flipped = [r for _, group in rev for r in group]
+    b = drive(_engine(sla_classes=SLA_CLASSES), flipped, max_steps=60000)
+    sa = sorted((tuple(r.prompt), tuple(r.out_tokens)) for r in a.completed)
+    sb = sorted((tuple(r.prompt), tuple(r.out_tokens)) for r in b.completed)
+    assert sa == sb, "admission order changed same-class streams"
+
+    fs, ss = fifo.latency_summary(), sla.latency_summary()
+    p99 = ss["classes"]["interactive"]["ttft_p99"]
+    goodput = ss["goodput"]["frac"] / max(fs["goodput"]["frac"], 1e-9)
+    c = sla.counters()
+    c["fifo_steps"] = fifo.steps
+    c["fifo_goodput"] = round(fs["goodput"]["frac"], 6)
+    c["sla_goodput"] = round(ss["goodput"]["frac"], 6)
+    c["fifo_interactive_p99_ttft"] = fs["classes"]["interactive"]["ttft_p99"]
+    c["interactive_p50_ttft"] = ss["classes"]["interactive"]["ttft_p50"]
+    c["batch_p99_ttft"] = ss["classes"]["batch"]["ttft_p99"]
+    rows = [
+        ("serve/openloop_p99_ttft", p99,
+         f"interactive p99 TTFT {p99} steps (fifo "
+         f"{c['fifo_interactive_p99_ttft']}) over {len(trace)} arrivals",
+         c, "latency"),
+        ("serve/sla_preempt_goodput", goodput,
+         f"goodput {c['fifo_goodput']}->{c['sla_goodput']} "
+         f"preemptions={c['preemptions']} parks={c['preempt_parks']}",
+         c, "speedup"),
+    ]
+    return rows
+
+
+def merge_into_json(rows: list[tuple], path: str) -> None:
+    """Merge this module's rows into a schema-1 BENCH json, replacing ONLY
+    rows of the same names (``serve_gangs.merge_into_json`` replaces every
+    ``serve/`` row, so this one must run after it and touch only its
+    own)."""
+    doc = {"schema": 1, "suite": "smoke", "rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc.get("schema") == 1, doc.get("schema")
+        mine = {name for name, *_ in rows}
+        doc["rows"] = [r for r in doc["rows"] if r["name"] not in mine]
+    for name, v, d, counters, kind in rows:
+        doc["rows"].append({"name": name, "value": round(v, 6),
+                            "kind": kind, "derived": d,
+                            "counters": counters})
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# merged {len(rows)} open-loop rows into {path}",
+          file=sys.stderr)
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        json_path = argv[i + 1] if i + 1 < len(argv) and \
+            not argv[i + 1].startswith("-") else "BENCH_smoke.json"
+    elif smoke:
+        json_path = "BENCH_smoke.json"
+    rows = run(smoke=smoke)
+    for name, v, d, _, kind in rows:
+        print(f"{name},{v:.4f},{d}")
+    if json_path:
+        merge_into_json(rows, json_path)
+
+
+if __name__ == "__main__":
+    main()

@@ -222,8 +222,9 @@ class BubblePolicy(Policy):
         self.root = root
         self.sched.wake_up_bubble(root)
 
-    def next(self, cpu: int, now: float) -> Optional[Thread]:
-        t = self.sched.next_thread(cpu, now)
+    def next(self, cpu: int, now: float,
+             task_filter=None) -> Optional[Thread]:
+        t = self.sched.next_thread(cpu, now, task_filter=task_filter)
         if t is not None:
             self.running[cpu] = t
             lq = self.sched.last_queue
@@ -371,10 +372,11 @@ class AdaptivePolicy(StealPolicy):
                                   min_backlog=self.min_backlog,
                                   level=self.rebalance_level)
 
-    def next(self, cpu: int, now: float) -> Optional[Thread]:
+    def next(self, cpu: int, now: float,
+             task_filter=None) -> Optional[Thread]:
         s = self.sched.stats
         attempts0, cost0 = s.steal_attempts, s.steal_cost
-        t = super().next(cpu, now)
+        t = super().next(cpu, now, task_filter)
         self._attempts.append(s.steal_attempts - attempts0)
         self._costs.append(s.steal_cost - cost0)
         if len(self._attempts) > self.window:

@@ -58,18 +58,28 @@ class RunQueue:
                 return True
         return False
 
-    def best_prio(self) -> Optional[int]:
-        return max((t.prio for t in self.tasks), default=None)
+    def best_prio(self, task_filter=None) -> Optional[int]:
+        """Highest priority present; with ``task_filter`` set, highest among
+        the tasks the filter admits (the WDRR class gate of the serving
+        engine's admission wave)."""
+        if task_filter is None:
+            return max((t.prio for t in self.tasks), default=None)
+        return max((t.prio for t in self.tasks if task_filter(t)),
+                   default=None)
 
-    def pop_best(self, min_prio: Optional[int] = None) -> Optional[Task]:
+    def pop_best(self, min_prio: Optional[int] = None,
+                 task_filter=None) -> Optional[Task]:
         """Claim the highest-priority task (FIFO among equals).
 
         Deletion is by index so the claimed object — and not an equal-looking
         sibling nearer the head — is the one that leaves the queue, keeping
         pass-2 revalidation sound when tasks sit at non-head positions.
+        ``task_filter`` restricts the claim to tasks the filter admits.
         """
         best_i, best_p = -1, None
         for i, t in enumerate(self.tasks):
+            if task_filter is not None and not task_filter(t):
+                continue
             if best_p is None or t.prio > best_p:
                 best_i, best_p = i, t.prio
         if best_i < 0 or (min_prio is not None and best_p < min_prio):
@@ -114,31 +124,36 @@ class QueueHierarchy:
         return self._cover[cpu]
 
     # -- the paper's two-pass lookup ----------------------------------------
-    def find(self, cpu: int) -> Optional[tuple[RunQueue, Task]]:
+    def find(self, cpu: int, task_filter=None
+             ) -> Optional[tuple[RunQueue, Task]]:
         """Find + claim the max-priority task among lists covering ``cpu``.
 
         Ties break toward the most local list (scanned first) — that is what
         gives the hierarchy its locality benefit.  Complexity is linear in
-        the number of hierarchical levels (paper §4).
+        the number of hierarchical levels (paper §4).  ``task_filter``
+        narrows both passes to tasks the filter admits — the covering-list
+        walk is unchanged, only ineligible tasks become invisible to it
+        (the serving engine's weighted-deficit class gate rides on this).
         """
         self.lookups += 1
         while True:
             best_q, best_p, snap = None, None, 0
             for q in self._cover[cpu]:                      # pass 1, no lock
                 self.lookup_steps += 1
-                p = q.best_prio()
+                p = q.best_prio(task_filter)
                 if p is not None and (best_p is None or p > best_p):
                     best_q, best_p, snap = q, p, q.version
             if best_q is None:
                 return None
             best_q.lock_count += 1                           # pass 2, locked
             if best_q.version != snap:
-                task = best_q.pop_best(min_prio=best_p)
+                task = best_q.pop_best(min_prio=best_p,
+                                       task_filter=task_filter)
                 if task is None:                             # raced: restart
                     self.retries += 1
                     continue
             else:
-                task = best_q.pop_best()
+                task = best_q.pop_best(task_filter=task_filter)
             return task and (best_q, task)
 
     # NOTE: stealing lives in :meth:`BubbleScheduler._steal_pass` — the

@@ -136,7 +136,7 @@ class SchedulerRuntime:
         self.migration_log: list[tuple[str, int, int]] = []  # (data, from, to)
 
     # -- the decision loop ---------------------------------------------------
-    def acquire(self, cpu: int, now: float = 0.0
+    def acquire(self, cpu: int, now: float = 0.0, task_filter=None
                 ) -> tuple[Optional[Thread], float]:
         """One idle-cpu scheduler call.
 
@@ -145,8 +145,16 @@ class SchedulerRuntime:
         adaptive rebalance) and drains the penalty that call accrued.
         Returns ``(thread_or_None, cost)``; the consumer bills ``cost`` in
         its own currency (simulated stall quanta, engine steps).
+
+        ``task_filter`` (bubble-family policies only) makes tasks the
+        filter rejects invisible to the lookup and the steal survey — the
+        consumer-side admission gate behind the serving engine's SLA-class
+        weighted-deficit round-robin.
         """
-        t = self.policy.next(cpu, now)
+        if task_filter is None:
+            t = self.policy.next(cpu, now)
+        else:
+            t = self.policy.next(cpu, now, task_filter=task_filter)
         return t, self.policy.consume_cost()
 
     def release(self, cpu: int, t: Thread, done: bool, now: float = 0.0

@@ -288,17 +288,22 @@ class BubbleScheduler:
 
     # -- the scheduler entry point ----------------------------------------------
     def next_thread(self, cpu: int, now: float = 0.0,
-                    allow_steal: bool = True) -> Optional[Thread]:
+                    allow_steal: bool = True,
+                    task_filter=None) -> Optional[Thread]:
         """Called by an (idle or preempting) cpu.  Returns a runnable thread.
 
         While looking for threads, also "pulls down" bubbles from high list
         levels and makes them burst on a more local level (§4).
+        ``task_filter`` makes ineligible tasks invisible to the lookup AND
+        the steal survey — a consumer-side admission gate (the serving
+        engine's weighted-deficit round-robin across SLA classes) that
+        keeps the walk itself, and every unfiltered schedule, untouched.
         """
         for _ in range(64 * len(self.topo.levels)):       # progress bound
-            found = self.queues.find(cpu)
+            found = self.queues.find(cpu, task_filter)
             if found is None:
                 if allow_steal and self.steal:
-                    stolen = self._steal_pass(cpu)
+                    stolen = self._steal_pass(cpu, task_filter)
                     if stolen is not None:
                         _, task = stolen
                         # re-home the stolen task near us and retry
@@ -336,7 +341,8 @@ class BubbleScheduler:
         self.stats.bursts += 1
 
     # -- hierarchical work stealing (§3.3.3) ----------------------------------
-    def _steal_pass(self, cpu: int) -> Optional[tuple[RunQueue, Task]]:
+    def _steal_pass(self, cpu: int, task_filter=None
+                    ) -> Optional[tuple[RunQueue, Task]]:
         """Steal a whole bubble, preferring the victim worth its price.
 
         Two victim-selection regimes, switched by the cost model:
@@ -370,7 +376,7 @@ class BubbleScheduler:
         self.stats.steal_attempts += 1
         path = self.topo.cpus[cpu].path()                 # root → leaf
         if not self.cost_model.steals_are_free:
-            return self._steal_pass_costed(cpu, path)
+            return self._steal_pass_costed(cpu, path, task_filter)
         for depth in range(len(path) - 2, -1, -1):        # local → global
             anc, mine = path[depth], path[depth + 1]
             best_bubble = best_thread = None              # (queue, task, work)
@@ -380,6 +386,8 @@ class BubbleScheduler:
                 for comp in self._bfs(sib):
                     q = self.queues.queue_of(comp)
                     for t in q.tasks:
+                        if task_filter is not None and not task_filter(t):
+                            continue
                         if isinstance(t, Bubble):
                             if t.done():
                                 continue
@@ -409,7 +417,8 @@ class BubbleScheduler:
         most local one wins, as everywhere else."""
         return work / cost if cost > 0 else float("inf")
 
-    def _steal_pass_costed(self, cpu: int, path: list[Component]
+    def _steal_pass_costed(self, cpu: int, path: list[Component],
+                           task_filter=None
                            ) -> Optional[tuple[RunQueue, Task]]:
         """Cost-aware victim selection: survey every covering level and
         maximise work-per-cost (ROADMAP follow-up to the PR 2 cost model).
@@ -430,6 +439,8 @@ class BubbleScheduler:
                     dist = self.topo.levels_crossed(cpu, comp)
                     boundary = self.topo.crossing_level(cpu, comp)
                     for t in q.tasks:
+                        if task_filter is not None and not task_filter(t):
+                            continue
                         if isinstance(t, Bubble):
                             if t.done():
                                 continue

@@ -47,10 +47,10 @@ class Tracer:
         orig_rebalance = sched.rebalance
         tracer = self
 
-        def next_thread(cpu, now=0.0, allow_steal=True):
+        def next_thread(cpu, now=0.0, allow_steal=True, task_filter=None):
             steals0 = sched.stats.steals
             sinks0 = sched.stats.sinks
-            t = orig_next(cpu, now, allow_steal)
+            t = orig_next(cpu, now, allow_steal, task_filter=task_filter)
             if sched.stats.steals > steals0:
                 # the scheduler remembers its latest (victim queue, loot)
                 vq, loot = sched.last_steal or (None, None)

@@ -76,6 +76,8 @@ from repro.core.runtime import SchedulerRuntime
 from repro.core.scheduler import StealCostModel
 from repro.core.topology import Level, Topology
 
+from .workload import goodput_under_sla, percentile
+
 # The serving price list: a steal pays remote page-group lock traffic plus a
 # per-level / per-request KV drag, a rebalance pays one bulk charge — all in
 # engine steps (admission latency).  Small relative to typical decode
@@ -112,6 +114,18 @@ class Request:
     gang: Optional[str] = None         # co-schedule group (shared prefix)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # -- SLA / latency ledger (open-loop traffic) --
+    # ``sla`` is the submitted CONTRACT class — immutable, it is what the
+    # request's TTFT/goodput are judged by.  ``tier`` is the SCHEDULING
+    # class — starts equal to ``sla`` and sinks under the multilevel-
+    # feedback demotion rule (a long-runner stops competing as
+    # interactive, but is still *measured* as one).
+    sla: Optional[str] = None
+    tier: Optional[str] = None
+    submit_step: int = 0               # engine step the request was queued
+    first_token_step: Optional[int] = None   # step the prefill token landed
+    last_token_step: Optional[int] = None    # step of the latest token
+    finish_step: Optional[int] = None        # step the request completed
 
 
 @dataclasses.dataclass
@@ -153,6 +167,9 @@ class EngineStats:
     rebalances: int = 0          # queue-depth-triggered re-spreads
     local_rebalances: int = 0    # ...of which host-scoped (DCN-free)
     stall_steps: float = 0.0     # admission latency billed by the cost model
+    preemptions: int = 0         # SLA preemption firings (one victim each)
+    preempt_parks: int = 0       # requests parked by those firings
+    demotions: int = 0           # multilevel-feedback tier demotions
     hbm_slot_waits: int = 0      # aware: full-group slots skipping waves
     hbm_refusals: int = 0        # blind: claims bounced at splice time
     # per-host execution ledger (sized by the engine at construction)
@@ -428,7 +445,9 @@ class ServingEngine:
                  per_host_decode: bool = True, wave_prefill: bool = True,
                  dcn_rebalance: bool = True,
                  depth_skew: int = 2, window: int = 16,
-                 min_backlog: int = 2, cooldown: Optional[int] = None):
+                 min_backlog: int = 2, cooldown: Optional[int] = None,
+                 sla_classes: Optional[dict] = None, preempt: bool = False,
+                 preempt_cooldown: int = 8):
         assert mode in ("runtime", "admission"), mode
         self.cfg = cfg
         self.params = params
@@ -516,6 +535,26 @@ class ServingEngine:
         self._paid: deque[float] = deque()        # steal cost per step
         self._steps_since_rebalance = self.cooldown   # start armed
         self._cost_mark = 0.0
+        # -- SLA tiers (open-loop traffic) --
+        # ``sla_classes`` maps class name -> :class:`~repro.serving.
+        # workload.SLAClass`; set, it turns on the weighted-deficit
+        # round-robin admission gate (a task filter over the covering-list
+        # walk), multilevel-feedback demotion, and — with ``preempt`` —
+        # KV park/splice preemption of preemptible tiers under
+        # ``preempts``-class backlog.  ``None`` (default) is the
+        # historical class-blind engine, bit for bit.
+        self.sla_classes = dict(sla_classes) if sla_classes else None
+        self.preempt = preempt and self.sla_classes is not None
+        self.preempt_cooldown = preempt_cooldown
+        self._last_preempt = -(10 ** 9)
+        # WDRR deficit ledger: classes start with one quantum of credit
+        self._wdrr_credit = ({n: float(c.weight)
+                              for n, c in self.sla_classes.items()}
+                             if self.sla_classes else {})
+        # latency ledgers, keyed by CONTRACT class (``Request.sla``;
+        # ``None``-classed requests land under "unclassed")
+        self._ttft: dict[str, list] = {}
+        self._gaps: dict[str, list] = {}
         self.stats = EngineStats(
             host_decode_steps=[0] * len(self._exec_groups),
             host_active_slots=[0] * len(self._exec_groups))
@@ -524,20 +563,33 @@ class ServingEngine:
 
     # -- client API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
-               prio: int = 0, gang: Optional[str] = None,
-               home: Optional[str] = None) -> int:
+               prio: Optional[int] = None, gang: Optional[str] = None,
+               home: Optional[str] = None, sla: Optional[str] = None) -> int:
         """Queue one request.  ``home`` names a topology component
         (``"host1"``, ``"page3"``, ...) whose list receives the work — the
         cross-host admission path: a front-end that routes a gang to one
         shard wakes its bubble there, narrowing its scheduling area to
         that subtree; other shards can still reach it, but only by paying
         the steal survey's (DCN-priced) bill.  ``None`` keeps the global
-        list (any slot may admit it).  A gang that is already scheduled
-        keeps its current area — ``home`` steers fresh wake-ups only."""
+        list (any slot may admit it).  A late joiner to an already-burst
+        gang honors its own ``home`` (it lands on that list) and falls
+        back to the gang's burst list otherwise — ``home`` always wins
+        over where the gang happened to burst.
+
+        ``sla`` labels the request with an SLA class.  On an engine built
+        with ``sla_classes`` the class also *schedules*: ``prio`` defaults
+        to the class's paper priority (§3.3.2) and the class rides the
+        WDRR admission gate; without ``sla_classes`` the label is carried
+        for measurement only (the FIFO baseline's requests are judged by
+        the same SLOs)."""
+        if prio is None:
+            prio = (self.sla_classes[sla].prio
+                    if self.sla_classes and sla in self.sla_classes else 0)
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
-                      prio=prio, gang=gang)
+                      prio=prio, gang=gang, sla=sla, tier=sla,
+                      submit_step=self.steps)
         self._reqs[rid] = req
         t = thread(float(max_new_tokens), name=f"req{rid}", prio=prio,
                    data=gang or f"req{rid}")
@@ -552,11 +604,14 @@ class ServingEngine:
         g = self._gang_bubble(gang, prio)
         g.insert(t)
         if g.burst:
-            # the gang already burst: late joiners land on the list where
-            # it burst (its scheduling area) — inserting into an off-queue
-            # burst husk would strand them forever
-            q = g.home_list if g.home_list is not None \
-                else self.sched.queues.global_queue()
+            # the gang already burst: late joiners must land on a live
+            # list (inserting into an off-queue burst husk would strand
+            # them forever).  The caller's ``home`` wins — the old code
+            # silently dropped it and pinned the joiner to the burst
+            # list — falling back to the gang's scheduling area
+            q = at if at is not None else (
+                g.home_list if g.home_list is not None
+                else self.sched.queues.global_queue())
             q.push(t)
         elif not self._gang_scheduled(g):
             # fresh gang, or one that completed/was dropped and has new
@@ -570,9 +625,10 @@ class ServingEngine:
             # or they occupy slots) — the bubble itself sits on no list and
             # nothing will ever burst it, so a thread left only inside it
             # is stranded: schedule the late joiner directly, like its
-            # expanded siblings
-            q = g.home_list if g.home_list is not None \
-                else self.sched.queues.global_queue()
+            # expanded siblings — again honoring the caller's ``home``
+            q = at if at is not None else (
+                g.home_list if g.home_list is not None
+                else self.sched.queues.global_queue())
             q.push(t)
         return rid
 
@@ -670,6 +726,160 @@ class ServingEngine:
         need = self._kv_need(task) + sum(self._kv_need(p) for p in pending)
         return self._headroom(self._page_of[cpu]) >= need - 1e-9
 
+    # -- SLA-class admission: weighted deficit round-robin --------------------
+    @staticmethod
+    def _live_thread(th) -> bool:
+        """A queued thread that still has decoding to do (the opposite of
+        a finished-gang husk awaiting collection)."""
+        req = getattr(th, "request", None)
+        return th.remaining > 0 and (req is None or not req.done)
+
+    @staticmethod
+    def _tier_of(th) -> Optional[str]:
+        req = getattr(th, "request", None)
+        return req.tier if req is not None else None
+
+    def _queued_by_class(self) -> dict[str, int]:
+        """Live queued decode threads per scheduling tier (slot-resident
+        and ``_pending`` work is already admitted and does not count)."""
+        counts = {n: 0 for n in self.sla_classes}
+        for q in self.sched.queues.queues.values():
+            for task in q.tasks:
+                ths = task.threads() if isinstance(task, Bubble) else (task,)
+                for th in ths:
+                    if self._live_thread(th):
+                        tier = self._tier_of(th)
+                        if tier in counts:
+                            counts[tier] += 1
+        return counts
+
+    def _wdrr_replenish(self, queued: set) -> None:
+        """Start a new deficit round: every backlogged class earns its
+        ``weight`` in credit (capped at 4x as a safety bound — credit is
+        only ever granted when the whole round is spent, so in practice a
+        class carries at most one quantum plus change)."""
+        for n in queued:
+            cls = self.sla_classes[n]
+            self._wdrr_credit[n] = min(
+                self._wdrr_credit.get(n, 0.0) + cls.weight,
+                4.0 * cls.weight)
+
+    def _wdrr_gate(self) -> Optional[set]:
+        """One admission wave's deficit-round-robin bookkeeping.
+
+        Classic DRR adapted to a priority walk: credit is replenished
+        only when **every** backlogged class has spent its quantum (a new
+        round) — NOT every wave, or a high-priority class spending at
+        most the slot count per wave would re-earn it each time and the
+        gate would degenerate to pure priority, starving ``batch``
+        exactly the way the WDRR exists to prevent.  Between rounds a
+        class out of credit is invisible to the covering-list walk, which
+        is how lower tiers get their turn.  An idle class keeps at most
+        one quantum (no banking a burst of credit to lock the batch
+        later).  Returns the eligible-class set (backlogged AND holding
+        >=1 credit; never empty while work is queued — the gate decides
+        *whose* work goes first, never idles a slot), or ``None`` when no
+        class has queued work."""
+        counts = self._queued_by_class()
+        queued = {n for n, c in counts.items() if c}
+        for n, cls in self.sla_classes.items():
+            if n not in queued:
+                self._wdrr_credit[n] = min(self._wdrr_credit.get(n, 0.0),
+                                           float(cls.weight))
+        if not queued:
+            return None
+        elig = {n for n in queued if self._wdrr_credit[n] >= 1.0}
+        if not elig:
+            self._wdrr_replenish(queued)
+            elig = {n for n in queued if self._wdrr_credit[n] >= 1.0}
+        return elig if elig else set(queued)
+
+    def _wdrr_filter(self, elig: set):
+        """The task filter the eligible-class set puts on the covering-list
+        walk.  Classless tasks always pass.  Stale husks (finished
+        threads, empty or all-done bubbles) must ALSO pass: they carry no
+        work to gate, and hiding them from the lookup would leave them
+        stuck on their queues forever — ``_drained()`` would never see an
+        empty machine.  The admit loop drops them on sight instead."""
+        def ok(task) -> bool:
+            if isinstance(task, Bubble):
+                live = [th for th in task.threads() if self._live_thread(th)]
+                if not live:
+                    return True             # husk: keep it collectable
+                return any(self._tier_of(th) is None
+                           or self._tier_of(th) in elig for th in live)
+            if not self._live_thread(task):
+                return True                 # husk: keep it collectable
+            tier = self._tier_of(task)
+            return tier is None or tier in elig
+        return ok
+
+    def _wdrr_spend(self, t: Thread, elig: set) -> None:
+        """Bill one admission against its class's deficit; a class out of
+        credit leaves the eligible set, and when the last one does a new
+        round replenishes every still-backlogged class (work conservation
+        — recomputed in place so the same wave's later slots see it)."""
+        tier = self._tier_of(t)
+        if tier is None or tier not in self._wdrr_credit:
+            return
+        self._wdrr_credit[tier] -= 1.0
+        if self._wdrr_credit[tier] < 1.0 and tier in elig:
+            elig.discard(tier)
+            if not elig:
+                counts = self._queued_by_class()
+                queued = {n for n, c in counts.items() if c}
+                self._wdrr_replenish(queued)
+                elig.update(n for n in queued
+                            if self._wdrr_credit[n] >= 1.0)
+                if not elig:
+                    elig.update(queued)
+
+    # -- latency ledger -------------------------------------------------------
+    def _note_first_token(self, req: Request, now: float) -> None:
+        """Stamp the request's TTFT at its prefill token.  Inherently
+        stall-aware: prefill runs at *actual* admission, after any WDRR
+        gating, queueing, and billed steal/rebalance stalls."""
+        if req.first_token_step is None:
+            req.first_token_step = int(now)
+            req.last_token_step = int(now)
+            self._ttft.setdefault(req.sla or "unclassed", []).append(
+                int(now) - req.submit_step)
+
+    def _note_token(self, req: Request, now: float) -> None:
+        """Record one decode token's inter-token gap (engine steps since
+        the previous token — >1 means the request sat out stalled or
+        parked steps)."""
+        if req.last_token_step is not None:
+            self._gaps.setdefault(req.sla or "unclassed", []).append(
+                int(now) - req.last_token_step)
+        req.last_token_step = int(now)
+
+    def latency_summary(self) -> dict:
+        """Per-class arrival-time latency percentiles + goodput-under-SLA.
+
+        TTFT and inter-token gaps are in engine steps, aggregated with the
+        deterministic nearest-rank percentile; ``goodput`` counts completed
+        requests whose TTFT met their contract class's SLO (see
+        :func:`repro.serving.workload.goodput_under_sla`)."""
+        out: dict = {"classes": {}}
+        for name in sorted(set(self._ttft) | set(self._gaps)):
+            t = self._ttft.get(name, [])
+            g = self._gaps.get(name, [])
+            out["classes"][name] = {
+                "n": len(t),
+                "ttft_p50": percentile(t, 50),
+                "ttft_p99": percentile(t, 99),
+                "tok_p50": percentile(g, 50),
+                "tok_p99": percentile(g, 99),
+            }
+        if self.sla_classes:
+            good, total = goodput_under_sla(self.completed, self.sla_classes)
+        else:
+            good, total = goodput_under_sla(self.completed)
+        out["goodput"] = {"good": good, "total": total,
+                          "frac": good / total if total else 1.0}
+        return out
+
     # -- slot management ------------------------------------------------------
     def _admit(self, now: float) -> None:
         """Fill free slots from the runtime; batch every KV write.
@@ -689,6 +899,11 @@ class ServingEngine:
         # (exec group, prompt len) -> [(slot, req)]: fresh prompts grouped
         # into one wave-batched prefill call per host per length
         fresh: dict[tuple[int, int], list] = {}
+        # SLA gate: one WDRR replenish per admission wave; the resulting
+        # eligible-class set rides the covering-list walk as a task filter
+        # and is spent/recomputed in place as the wave's slots admit
+        elig = self._wdrr_gate() if self.sla_classes else None
+        filt = self._wdrr_filter(elig) if elig is not None else None
         for slot in range(self.n_slots):
             if self.slot_req[slot] is not None or self._stall[slot] > 0:
                 continue
@@ -704,15 +919,24 @@ class ServingEngine:
                     if self.sched.queues.total_tasks():
                         self.stats.hbm_slot_waits += 1
                     continue
-                t, cost = self.runtime.acquire(slot, now)
-                if cost:
-                    self._stall[slot] += cost
-                    self.stats.stall_steps += cost
+                # keep acquiring past stale husks: a finished-gang thread
+                # (remaining 0 / request done) is dropped on sight and the
+                # SAME slot looks again in the SAME wave — the old code
+                # bailed after one husk and idled the slot a whole step
+                # with live work still queued
+                while True:
+                    t, cost = self.runtime.acquire(slot, now,
+                                                   task_filter=filt)
+                    if cost:
+                        self._stall[slot] += cost
+                        self.stats.stall_steps += cost
+                    if t is None or self._live_thread(t):
+                        break
+                    self.runtime.release(slot, t, True, now)   # husk: drop
                 if t is None:
                     continue
-                if t.remaining <= 0 or t.request.done:    # stale: drop
-                    self.runtime.release(slot, t, True, now)
-                    continue
+                if elig is not None:
+                    self._wdrr_spend(t, elig)
                 if full:
                     # capacity-blind baseline: fullness is discovered only
                     # at splice time, *after* the claim (and after any
@@ -745,6 +969,7 @@ class ServingEngine:
             else:
                 tok, st = self.backend.prefill(req.prompt)
                 req.out_tokens.append(tok)
+                self._note_first_token(req, now)
                 self.tokens[slot, 0] = tok
                 self.stats.prefills += 1
                 writes.append((slot, st))
@@ -756,6 +981,7 @@ class ServingEngine:
             self.stats.prefill_waves += 1
             for (slot, req), (tok, st) in zip(batch, results):
                 req.out_tokens.append(tok)
+                self._note_first_token(req, now)
                 self.tokens[slot, 0] = tok
                 self.stats.prefills += 1
                 writes.append((slot, st))
@@ -776,6 +1002,7 @@ class ServingEngine:
         req = self.slot_req[slot]
         if req is not None:
             req.done = True
+            req.finish_step = int(now)
             self.completed.append(req)
         self.slot_req[slot] = None
         t = self.slot_thread.pop(slot, None)
@@ -787,6 +1014,98 @@ class ServingEngine:
             self.runtime.release(slot, t, True, now)
         self._refund(slot)                    # its KV bytes leave the budget
         self.tokens[slot, 0] = 0              # freed slot: no stale decode
+
+    # -- multilevel-feedback demotion + SLA preemption ------------------------
+    def _maybe_demote(self, req: Request, t: Thread) -> None:
+        """Multilevel-feedback rule: a request that has decoded past its
+        scheduling tier's ``demote_after`` sinks to ``demote_to`` — it
+        stops competing (WDRR, priority, preemption shielding) as the
+        short job it no longer is.  The CONTRACT class (``req.sla``) never
+        changes: the ledger still judges it by what was promised."""
+        if not self.sla_classes:
+            return
+        cls = self.sla_classes.get(req.tier) if req.tier else None
+        if (cls is None or cls.demote_after is None
+                or len(req.out_tokens) < cls.demote_after
+                or cls.demote_to not in self.sla_classes):
+            return
+        req.tier = cls.demote_to
+        t.prio = self.sla_classes[req.tier].prio
+        self.stats.demotions += 1
+
+    def _park_request(self, slot: int, now: float) -> None:
+        """Single-request preemption: extract the slot's KV state and last
+        token into ``_kv_park`` (the later re-admission resumes the
+        continuation via the batched splice — no re-prefill), free the
+        slot, and re-queue the thread on its page group's list so the
+        resume finds its KV-affine slots first.  The gang-sized variant is
+        :meth:`regenerate_gang` (parks every member, re-queues the closed
+        bubble)."""
+        req = self.slot_req[slot]
+        t = self.slot_thread.pop(slot)
+        self.slot_req[slot] = None
+        g = self._group_of[slot]
+        self._kv_park[req.rid] = (
+            self.backend.extract(self._states[g],
+                                 slot - self._exec_groups[g][0]),
+            int(self.tokens[slot, 0]))
+        self.stats.kv_parks += 1
+        self.tokens[slot, 0] = 0
+        self._refund(slot)    # parked KV lives host-side, off the budget
+        self.runtime.release(slot, t, False, now)
+        self.sched.queues.covering(slot)[1].push(t)
+
+    def _maybe_preempt(self, now: float) -> None:
+        """Under pressure, park a preemptible tier's work to admit an
+        urgent class: fires when a ``preempts`` class has live queued work,
+        no slot is free to take it, and the cooldown has elapsed.  One
+        victim per firing — the preemptible gang (or lone request) with
+        the most remaining decode, so the freed capacity is reclaimed for
+        the longest.  Victims are parked via the KV park/splice path and
+        resume later exactly where they left off."""
+        if not self.preempt:
+            return
+        if self.steps - self._last_preempt <= self.preempt_cooldown:
+            return
+        urgent = {n for n, c in self.sla_classes.items() if c.preempts}
+        if not urgent:
+            return
+        counts = self._queued_by_class()
+        if not any(counts.get(n, 0) for n in urgent):
+            return
+        if any(self.slot_req[s] is None and self._stall[s] <= 0
+               and s not in self._pending for s in range(self.n_slots)):
+            return          # a slot opens this wave anyway: no parking
+        # victim survey: preemptible-tier residents, gangs counted whole
+        best = None                  # (remaining, "gang"/"solo", payload)
+        gang_slots: dict[str, list[int]] = {}
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is None or req.done:
+                continue
+            cls = self.sla_classes.get(req.tier) if req.tier else None
+            if cls is None or not cls.preemptible:
+                continue
+            if req.gang is not None:
+                gang_slots.setdefault(req.gang, []).append(s)
+            else:
+                rem = req.max_new_tokens - len(req.out_tokens)
+                if rem > 0 and (best is None or rem > best[0]):
+                    best = (rem, "solo", s)
+        for gname, slots in gang_slots.items():
+            rem = sum(self.slot_req[s].max_new_tokens
+                      - len(self.slot_req[s].out_tokens) for s in slots)
+            if rem > 0 and (best is None or rem > best[0]):
+                best = (rem, "gang", gname)
+        if best is None:
+            return
+        if best[1] == "gang":
+            self.stats.preempt_parks += self.regenerate_gang(best[2])
+        else:
+            self._park_request(best[2], now)
+            self.stats.preempt_parks += 1
+        self.stats.preemptions += 1
+        self._last_preempt = self.steps
 
     # -- queue-depth rebalance trigger ----------------------------------------
     def _page_depths(self) -> list[int]:
@@ -816,13 +1135,19 @@ class ServingEngine:
         has the machine-wide candidate."""
         cands = []
         if self.dcn_rebalance and self._host_idx is not None:
-            by_host: dict[int, list[int]] = {}   # host index -> page depths
+            # grouped by the host COMPONENT itself, not by round-tripping
+            # ``component.index`` through ``topo.components("host")`` — the
+            # old lookup silently assumed ``.index`` equals list position,
+            # which nothing in Topology guarantees to a consumer; keying by
+            # identity scopes the re-spread to the exact component whose
+            # pages are skewed on any pod/host layout, ragged or not
+            by_host: dict[int, tuple] = {}   # id(host) -> (host, depths)
             for p, d in enumerate(depths):
-                by_host.setdefault(self._page_host[p].index, []).append(d)
-            hosts = self.topo.components("host")
-            for h, ds in by_host.items():
+                h = self._page_host[p]
+                by_host.setdefault(id(h), (h, []))[1].append(d)
+            for h, ds in by_host.values():
                 if len(ds) >= 2 and max(ds) - min(ds) >= self.depth_skew:
-                    cands.append(hosts[h])
+                    cands.append(h)
         cands.append(None)
         return cands
 
@@ -933,6 +1258,7 @@ class ServingEngine:
         now = float(self.steps)
         self.steps += 1
         self._maybe_rebalance(now)
+        self._maybe_preempt(now)
         self._admit(now)
         active = [s for s in range(self.n_slots)
                   if self.slot_req[s] is not None]
@@ -953,10 +1279,13 @@ class ServingEngine:
                 self.tokens[s, 0] = next_tok[s - lo]
                 req = self.slot_req[s]
                 req.out_tokens.append(int(next_tok[s - lo]))
+                self._note_token(req, now)
                 t = self.slot_thread[s]
                 t.remaining -= 1.0
                 if len(req.out_tokens) >= req.max_new_tokens:
                     self._evict(s, now)
+                else:
+                    self._maybe_demote(req, t)
         return len(active)
 
     def _drained(self) -> bool:
@@ -1047,6 +1376,9 @@ class ServingEngine:
             "stall_steps": round(self.stats.stall_steps, 4),
             "hbm_slot_waits": self.stats.hbm_slot_waits,
             "hbm_refusals": self.stats.hbm_refusals,
+            "preemptions": self.stats.preemptions,
+            "preempt_parks": self.stats.preempt_parks,
+            "demotions": self.stats.demotions,
             "host_decode_steps": list(self.stats.host_decode_steps),
             "host_active_slots": list(self.stats.host_active_slots),
         }

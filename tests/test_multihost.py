@@ -337,3 +337,56 @@ class TestHBMAccounting:
         assert eng.sched.stats.steal_refusals > 0
         assert eng.stats.hbm_slot_waits > 0         # parked, never bounced
         assert eng.stats.hbm_refusals == 0          # aware mode: no bounces
+
+
+# ---------------------------------------------------------------------------
+# rebalance-candidate scoping: keyed by component identity, not .index
+# ---------------------------------------------------------------------------
+
+class TestRebalanceCandidateScoping:
+    @settings(max_examples=40)
+    @given(cfg=fleet(), skew_host=st.integers(min_value=0, max_value=15))
+    def test_skewed_host_is_candidate_by_identity(self, cfg, skew_host):
+        """`_rebalance_candidates` must scope a re-spread to the exact
+        host COMPONENT whose own page depths are skewed, on any 1-4 pod x
+        ragged-host fleet.  The old lookup round-tripped the component
+        through ``topo.components("host")[component.index]`` — an
+        identity the Topology API never promises a consumer — so this
+        pins the contract: the candidate *is* the skewed host object."""
+        pods, hosts, group, n_slots = cfg
+        eng = ServingEngine(None, None, n_slots=n_slots, group=group,
+                            pods=pods, hosts=hosts,
+                            backend=StubModelBackend())
+        if eng._host_idx is None:
+            return                      # single host: no host candidates
+        host_comps = eng.topo.components("host")
+        target = host_comps[skew_host % len(host_comps)]
+        own_pages = [p for p, h in enumerate(eng._page_host)
+                     if h is target]
+        if len(own_pages) < 2:
+            return                      # one-page host: skew undefined
+        depths = [0] * len(eng._page_host)
+        depths[own_pages[0]] = eng.depth_skew       # skew inside target only
+        cands = eng._rebalance_candidates(depths)
+        assert cands[-1] is None                     # machine-wide fallback
+        assert len(cands) == 2
+        assert cands[0] is target, \
+            (cands[0].name if cands[0] else None, target.name)
+
+    def test_all_skewed_hosts_enumerated(self):
+        """Every host with internal skew appears, each by identity, in
+        page order."""
+        eng = ServingEngine(None, None, n_slots=24, group=3, pods=2,
+                            hosts=3, backend=StubModelBackend())
+        depths = [0] * len(eng._page_host)
+        skewed = []
+        seen = set()
+        for p, h in enumerate(eng._page_host):
+            if id(h) not in seen:
+                seen.add(id(h))
+                depths[p] = eng.depth_skew + 1
+                skewed.append(h)
+        cands = eng._rebalance_candidates(depths)
+        assert cands[-1] is None
+        assert all(a is b for a, b in zip(cands[:-1], skewed))
+        assert len(cands) == len(skewed) + 1

@@ -142,6 +142,48 @@ class TestGangsAndPriorities:
         eng.run(max_steps=100)
         assert len(eng.completed) == 4
 
+    def test_admit_skips_husks_same_step(self):
+        """Regression: a stale thread at the head of the queue (a
+        finished gang's husk — ``remaining == 0`` / ``request.done``) made
+        ``_admit`` release it and bail, idling the slot a whole engine
+        step even with live work queued right behind.  The acquire loop
+        must drop any number of husks and still admit the live request in
+        the SAME wave.  One slot, so no other slot can mask the bug."""
+        eng = make_engine(n_slots=1, group=1)
+        rids = [eng.submit(np.arange(1, 9, dtype=np.int32), 4)
+                for _ in range(3)]
+        # forge husks: the two queue-head requests died before admission
+        for q in eng.sched.queues.queues.values():
+            for t in q.tasks:
+                if t.request.rid in rids[:2]:
+                    t.remaining = 0.0
+                    t.request.done = True
+        eng.step()
+        assert eng.slot_req[0] is not None, "slot idled on a husk"
+        assert eng.slot_req[0].rid == rids[2]
+        # and the husks are gone, not wedged on a queue forever
+        eng.run(max_steps=50)
+        assert eng._drained()
+
+    def test_late_joiner_honors_home(self):
+        """Regression: ``submit(home=...)`` for a late joiner to an
+        already-burst gang silently dropped ``home`` — the thread landed
+        on the gang's burst list even when the caller routed it to
+        another shard.  The caller's ``home`` must win."""
+        eng = make_engine(n_slots=16, hosts=2)
+        submit_all(eng, [("g", 4, 0)], new_tokens=12)
+        eng.step()                      # the gang bursts on host0's side
+        g = eng._gangs["gang:g"]
+        assert g.burst, "precondition: gang must have burst"
+        rid = eng.submit(np.arange(1, 9, dtype=np.int32), 12, gang="g",
+                         home="host1")
+        host1_q = eng._home_queue("host1")
+        assert any(getattr(t, "request", None) is not None
+                   and t.request.rid == rid for t in host1_q.tasks), \
+            "late joiner's home was dropped"
+        eng.run(max_steps=500)
+        assert sorted(r.rid for r in eng.completed) == list(range(5))
+
 
 # ---------------------------------------------------------------------------
 # steal-driven admission

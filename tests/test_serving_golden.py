@@ -20,7 +20,12 @@ ledger — per engine mode and topology, single-host and multi-host:
   within-host skew on every host; ``local`` quotes re-spreads through the
   boundary-priced estimate and buys host-local page shuffles, ``flat``
   keeps the flat-quoted machine-wide deal and pays its level-table tolls
-  as admission freezes on the receiving page groups.
+  as admission freezes on the receiving page groups;
+* ``open_loop`` — the PR 6 open-loop SLA workload (seeded Poisson
+  arrivals, heavy-tailed lengths, interactive/standard/batch classes) on
+  8 slots x 2 hosts: ``fifo`` holds slots in arrival order, ``sla`` runs
+  WDRR admission + multilevel-feedback demotion + batch-gang preemption
+  (the snapshot additionally pins the preemption/demotion counters).
 
 Each snapshot records the engine step count, a digest of every completed
 request's full decode stream (the stub backend hashes token history, so
@@ -68,16 +73,8 @@ def _submit(eng: ServingEngine, spec, seed: int = 0) -> int:
     return n
 
 
-def _drive(eng: ServingEngine, n: int, regen=()) -> dict:
-    """Run to drain (bounded), snapshot streams + ledger."""
-    regen = dict(regen)                     # step -> gang to regenerate
-    steps = 0
-    while not eng._drained() and steps < 8000:
-        eng.step()
-        steps += 1
-        gang = regen.get(steps)
-        if gang is not None:
-            eng.regenerate_gang(gang)
+def _snapshot(eng: ServingEngine, n: int) -> dict:
+    """Snapshot streams + ledger for a drained engine."""
     assert len(eng.completed) == n, (len(eng.completed), n)
     digest = hashlib.blake2b(
         repr(sorted((r.rid, tuple(r.out_tokens))
@@ -88,6 +85,19 @@ def _drive(eng: ServingEngine, n: int, regen=()) -> dict:
     snap.update({k: c[k] for k in COUNTER_KEYS})
     snap["stall_steps"] = round(c["stall_steps"], 4)
     return snap
+
+
+def _drive(eng: ServingEngine, n: int, regen=()) -> dict:
+    """Run to drain (bounded), snapshot streams + ledger."""
+    regen = dict(regen)                     # step -> gang to regenerate
+    steps = 0
+    while not eng._drained() and steps < 8000:
+        eng.step()
+        steps += 1
+        gang = regen.get(steps)
+        if gang is not None:
+            eng.regenerate_gang(gang)
+    return _snapshot(eng, n)
 
 
 SINGLE_SKEW = [("fat", 16, 0, None, 12), ("a", 2, 2, None, 12),
@@ -138,6 +148,26 @@ def build(case: str, variant: str) -> tuple[ServingEngine, list, tuple]:
 
 def simulate(case: str, variant: str) -> dict:
     reset_ids()
+    if case == "open_loop":
+        # open-loop: arrivals come from the seeded workload trace and are
+        # submitted at their arrival steps by drive(), not batched up front
+        from repro.serving import SLA_CLASSES, drive, make_trace
+        trace = make_trace(steps=48, rate=1.2, seed=3)
+        stub = StubModelBackend()
+        if variant == "sla":
+            eng = ServingEngine(None, None, n_slots=8, group=2, hosts=2,
+                                backend=stub, sla_classes=SLA_CLASSES,
+                                preempt=True, preempt_cooldown=4)
+        else:
+            assert variant == "fifo", variant
+            eng = ServingEngine(None, None, n_slots=8, group=2, hosts=2,
+                                backend=stub, mode="admission")
+        drive(eng, trace)
+        snap = _snapshot(eng, len(trace))
+        c = eng.counters()
+        snap.update({k: c[k] for k in ("preemptions", "preempt_parks",
+                                       "demotions")})
+        return snap
     eng, spec, regen = build(case, variant)
     n = _submit(eng, spec)
     return _drive(eng, n, regen)
@@ -147,7 +177,8 @@ CASES = [("single_skew", "admission"), ("single_skew", "runtime"),
          ("single_churn", "runtime"),
          ("multihost_skew", "naive"), ("multihost_skew", "dcn"),
          ("hbm_pressure", "blind"), ("hbm_pressure", "aware"),
-         ("dcn_rebalance", "flat"), ("dcn_rebalance", "local")]
+         ("dcn_rebalance", "flat"), ("dcn_rebalance", "local"),
+         ("open_loop", "fifo"), ("open_loop", "sla")]
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +195,8 @@ GOLDEN = {
     ('hbm_pressure', 'aware'): {'steps': 37, 'streams': 'ed6dbeec973b4ef5', 'steals': 4, 'steal_refusals': 18, 'rebalances': 1, 'kv_migrations': 4, 'kv_page_moves': 2, 'kv_host_moves': 1, 'kv_parks': 0, 'prefills': 30, 'hbm_slot_waits': 228, 'hbm_refusals': 0, 'stall_steps': 24.75},
     ('dcn_rebalance', 'flat'): {'steps': 64, 'streams': '90b7d19ba0bb5e62', 'steals': 17, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 32, 'kv_page_moves': 11, 'kv_host_moves': 9, 'kv_parks': 0, 'prefills': 76, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 483.125},
     ('dcn_rebalance', 'local'): {'steps': 39, 'streams': '90b7d19ba0bb5e62', 'steals': 19, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 36, 'kv_page_moves': 5, 'kv_host_moves': 4, 'kv_parks': 0, 'prefills': 76, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 298.5},
+    ('open_loop', 'fifo'): {'steps': 125, 'streams': '76c37afcead250e6', 'steals': 0, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 0, 'kv_page_moves': 0, 'kv_host_moves': 0, 'kv_parks': 0, 'prefills': 54, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 0.0, 'preemptions': 0, 'preempt_parks': 0, 'demotions': 0},
+    ('open_loop', 'sla'): {'steps': 112, 'streams': '76c37afcead250e6', 'steals': 3, 'steal_refusals': 0, 'rebalances': 2, 'kv_migrations': 6, 'kv_page_moves': 3, 'kv_host_moves': 2, 'kv_parks': 6, 'prefills': 54, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 29.375, 'preemptions': 4, 'preempt_parks': 6, 'demotions': 0},
 }
 
 
