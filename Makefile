@@ -13,6 +13,11 @@
 #   make serve-gate   stub-model serving benchmarks alone (gang + open-loop
 #                     SLA rows; seconds, no jax) gated against the serve/
 #                     baseline rows
+#   make jax-serve-gate  real-model serving lane: reduced zoo configs
+#                     behind the dense AND paged jax backends (streams
+#                     asserted identical, zero pool copies asserted);
+#                     tok/s rows gated with the wide throughput band
+#                     against benchmarks/baseline_jax.json
 #   make golden-check regenerate the golden traces (simulator + serving
 #                     engine) and fail on any drift
 #   make bench        the full paper tables (slow: includes wall-clock
@@ -21,7 +26,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke bench-gate serve-gate golden-check bench
+.PHONY: test lint bench-smoke bench-gate serve-gate jax-serve-gate \
+        golden-check bench
 
 # PYTEST_ARGS lets CI trim the run (e.g. deselect the 7-minute ep_a2a
 # compile test on slow shared runners) without changing the local gate
@@ -44,6 +50,10 @@ serve-gate:
 	$(PYTHON) benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/serve_open_loop.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_serve.json --prefix serve/
+
+jax-serve-gate:
+	$(PYTHON) benchmarks/serve_jax.py --smoke --json BENCH_jax.json
+	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_jax.json BENCH_jax.json --prefix serve/jax_
 
 # GOLDEN_OUT / SERVING_GOLDEN_OUT additionally write the regenerated
 # dicts there (CI uploads them as the paste-ready artifacts on drift)

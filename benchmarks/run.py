@@ -13,7 +13,8 @@ the full run).  Schema::
 
     {"schema": 1, "suite": "smoke"|"full",
      "rows": [{"name": "table2/thrash_adaptive", "value": 10.26,
-               "kind": "speedup"|"gain_pct"|"latency"|"us_per_call"|"step_ms",
+               "kind": "speedup"|"gain_pct"|"latency"|"throughput"
+                       |"us_per_call"|"step_ms",
                "derived": "...",
                "counters": {"steals": ..., "steals_by_level": {...},
                             "rebalances": ..., "steal_cost": ...}}]}
@@ -22,6 +23,11 @@ the full run).  Schema::
 feeds this file to ``benchmarks/check_regression.py`` against the committed
 ``benchmarks/baseline_smoke.json`` — speedup rows regressing more than the
 tolerance band fail the build.
+
+The real-model serving lane (``serve_jax.py``, kind ``throughput``) is
+deliberately NOT in this aggregator: it jits actual model steps, so it
+lives in its own CI job (``jax-serve-gate``) with its own baseline
+(``baseline_jax.json``) and a much wider band — see that module.
 """
 
 from __future__ import annotations

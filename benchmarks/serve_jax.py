@@ -1,0 +1,186 @@
+"""Real-model serving benchmark: the engine driving the jax model zoo.
+
+``serve_gangs.py`` measures the scheduler stack over a stub model; this
+benchmark closes the loop with the *real* decode path — reduced model-zoo
+configs (CPU-runnable: tiny dims, full architecture) behind the two jax
+backends:
+
+* ``JaxModelBackend`` — dense KV, batch axis in the cache tensors, a KV
+  migration is a per-layer tensor copy;
+* ``PagedJaxModelBackend`` — KV in per-layer page pools behind one block
+  table per host batch, a KV migration is a block-table edit.
+
+Two architectures cover both state families:
+
+* **transformer** (``yi-6b`` reduced): GQA attention, the paged layout's
+  reason to exist.  The trace regenerates gangs on a fixed cadence, so
+  parked requests re-splice mid-flight — on the paged backend those are
+  pure metadata writes, and the single-host trace asserts ZERO KV-pool
+  copies (``pool_copies == 0``) while every stream matches the dense
+  backend token for token.
+* **rwkv** (``rwkv6-3b`` reduced): attention-free, O(1) recurrent state.
+  The paged backend degenerates to the explicit batch-axis splice — the
+  bench pins that the unified interface serves both families from the
+  same engine, streams identical again.
+
+Reduced-config choices: ``reduced()`` keeps every architectural feature
+(GQA ratio, block pattern, norms) at toy width; ``vocab=97`` (prime)
+makes stream mismatches loud; ``cache_len=32`` with ``page_size=8`` gives
+4 pages per slot — prompts of 6 plus up to 18 new tokens never ring; a
+fixed prompt length keeps prefill at one compiled shape.
+
+Rows are schema-1 with kind ``throughput`` (gated higher-is-better, wide
+relative band — see ``check_regression.py``): tok/s next to engine steps,
+the first step's wall time (where jit compilation lands) excluded from
+the rate so the gate tracks steady-state decode, not compiler noise::
+
+    python benchmarks/serve_jax.py --smoke        # writes BENCH_jax.json
+    python benchmarks/check_regression.py benchmarks/baseline_jax.json \
+        BENCH_jax.json --prefix serve/jax_
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+import numpy as np
+
+CACHE_LEN = 32
+PAGE_SIZE = 8
+PROMPT_LEN = 6
+VOCAB = 97
+
+ARCHS = [("transformer", "yi-6b"), ("rwkv", "rwkv6-3b")]
+
+
+def _trace(smoke: bool) -> list[tuple]:
+    """(prompt, new_tokens, gang) triples — identical for every engine."""
+    rng = np.random.default_rng(0)
+    n_req, max_new = (10, 6) if smoke else (24, 12)
+    gangs = ["g0", "g1"]
+    out = []
+    for i in range(n_req):
+        out.append((rng.integers(1, VOCAB, PROMPT_LEN),
+                    int(rng.integers(2, max_new + 1)),
+                    gangs[i % 2] if i < n_req - 2 else None))
+    return out
+
+
+def _drive(cfg, params, backend, trace, regen_every: int = 3):
+    """Run the trace to completion, timing each engine step.  Returns
+    (streams, steps, wall_total, wall_first_step, counters)."""
+    from repro.serving import ServingEngine
+    eng = ServingEngine(cfg, params, n_slots=8, cache_len=CACHE_LEN,
+                        backend=backend)
+    for prompt, new, gang in trace:
+        eng.submit(prompt, new, gang=gang)
+    gangs = sorted({g for _, _, g in trace if g})
+    durations = []
+    steps = 0
+    while not eng._drained() and steps < 3000:
+        t0 = time.perf_counter()
+        eng.step()
+        durations.append(time.perf_counter() - t0)
+        steps += 1
+        if gangs and steps % regen_every == 0:
+            eng.regenerate_gang(gangs[(steps // regen_every) % len(gangs)])
+    assert len(eng.completed) == len(trace), (len(eng.completed), len(trace))
+    streams = {r.rid: tuple(r.out_tokens) for r in eng.completed}
+    return streams, steps, sum(durations), durations[0], eng.counters()
+
+
+def _row(name: str, streams, steps, total, first, counters) -> tuple:
+    toks = sum(len(s) for s in streams.values())
+    steady = max(total - first, 1e-9)
+    tok_s = toks / steady
+    derived = (f"steps={steps} tokens={toks} steady={steady:.2f}s"
+               f" first_step={first:.2f}s(compile) kv_parks="
+               f"{counters['kv_parks']}")
+    c = {k: counters[k] for k in ("kv_parks", "kv_splices", "prefills")}
+    c.update(steps=steps, tokens=toks)
+    return (name, tok_s, derived, c, "throughput")
+
+
+def run(smoke: bool = False, use_kernel: bool = False) -> list[tuple]:
+    import jax
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serving import JaxModelBackend, PagedJaxModelBackend
+
+    trace = _trace(smoke)
+    rows: list[tuple] = []
+    for label, arch in ARCHS:
+        cfg = get_config(arch).reduced(vocab=VOCAB)
+        params = api.init(cfg, jax.random.PRNGKey(0))
+
+        dense = _drive(cfg, params,
+                       JaxModelBackend(cfg, params, CACHE_LEN), trace)
+        pb = PagedJaxModelBackend(cfg, params, CACHE_LEN,
+                                  page_size=PAGE_SIZE,
+                                  use_kernel=use_kernel)
+        paged = _drive(cfg, params, pb, trace)
+
+        # the paged layout must be invisible in the output: same trace,
+        # token-identical streams
+        assert dense[0] == paged[0], \
+            f"{arch}: paged backend changed decode output"
+        # single host, so every park re-splices into the same shard: a
+        # migration is a metadata write, never a pool copy
+        assert pb.stats["pool_copies"] == 0, pb.stats
+        if label == "transformer":
+            assert pb.stats["table_splices"] > 0, \
+                "trace exercised no metadata splices"
+
+        rows.append(_row(f"serve/jax_{label}_tok_s", *paged))
+        rows[-1][3].update(pb.stats)
+        rows.append(_row(f"serve/jax_{label}_dense_tok_s", *dense))
+    return rows
+
+
+def merge_into_json(rows: list[tuple], path: str) -> None:
+    """Write serve/jax_* rows into a schema-1 BENCH json (replacing
+    previous jax-serve rows, preserving anything else)."""
+    doc = {"schema": 1, "suite": "jax-serve", "rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc.get("schema") == 1, doc.get("schema")
+        doc["rows"] = [r for r in doc["rows"]
+                       if not r["name"].startswith("serve/jax_")]
+    for name, v, d, counters, kind in rows:
+        doc["rows"].append({"name": name, "value": round(v, 6),
+                            "kind": kind, "derived": d,
+                            "counters": counters})
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# merged {len(rows)} jax-serve rows into {path}",
+          file=sys.stderr)
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        json_path = argv[i + 1] if i + 1 < len(argv) and \
+            not argv[i + 1].startswith("-") else "BENCH_jax.json"
+    elif smoke:
+        json_path = "BENCH_jax.json"
+    rows = run(smoke=smoke, use_kernel="--kernel" in argv)
+    for name, v, d, _, _ in rows:
+        print(f"{name},{v:.4f},{d}")
+    if json_path:
+        merge_into_json(rows, json_path)
+
+
+if __name__ == "__main__":
+    main()

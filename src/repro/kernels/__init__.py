@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the compute hot-spots of the assigned archs.
 
 * ``flash_attention`` — causal/SWA GQA attention (prefill)
+* ``paged_attention`` — block-table paged decode attention (serving)
 * ``rglru``           — RG-LRU linear recurrence (RecurrentGemma)
 * ``rwkv6``           — WKV with data-dependent decay (Finch)
 
@@ -8,6 +9,7 @@ Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
 ``ops.py``; tests sweep shapes/dtypes in interpret mode.
 """
 
-from . import flash_attention, ops, ref, rglru, rwkv6
+from . import flash_attention, ops, paged_attention, ref, rglru, rwkv6
 
-__all__ = ["flash_attention", "rglru", "rwkv6", "ops", "ref"]
+__all__ = ["flash_attention", "paged_attention", "rglru", "rwkv6", "ops",
+           "ref"]

@@ -46,3 +46,38 @@ def wkv_ref(r, k, v, w, u):
     Sf, y = jax.lax.scan(step, S0, (rf.swapaxes(0, 1), kf.swapaxes(0, 1),
                                     vf.swapaxes(0, 1), wf.swapaxes(0, 1)))
     return y.swapaxes(0, 1), Sf
+
+
+def paged_sdpa_ref(q, k_pool, v_pool, tables, lengths, *,
+                   window: Optional[int] = None, scale=1.0):
+    """Paged decode-attention oracle: gather pages dense, then run the
+    exact masked-softmax math of ``models.attention.decode_attention``.
+
+    q ``(B, K, g, hd)``, pools ``(P, page_size, K, hd)``, tables
+    ``(B, pages_per_slot)`` int32, lengths ``(B,)`` — valid tokens
+    including the one at the query's position ``lengths - 1``.  Because
+    the gathered layout puts position ``t`` at column ``t`` and masks the
+    rest with the same ``-1e30`` the dense path uses, a pool whose
+    ``pages_per_slot * page_size`` equals the dense cache length yields
+    *bit-identical* logits to ``decode_attention`` (masked columns
+    underflow to exactly zero) — which is what lets the paged serving
+    backend assert stream equality against the dense one.
+    """
+    B, K, g, hd = q.shape
+    page_size = k_pool.shape[1]
+    npages = tables.shape[1]
+    T = npages * page_size
+    k = k_pool[tables].reshape(B, T, K, hd)
+    v = v_pool[tables].reshape(B, T, K, hd)
+    tpos = jnp.arange(T)[None, :]
+    valid = tpos < lengths[:, None]
+    if window is not None:
+        valid &= tpos > (lengths[:, None] - 1 - window)
+    qg = q[:, None]                                     # (B, 1, K, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst",
+                        qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return out[:, 0]                                    # (B, K, g, hd)

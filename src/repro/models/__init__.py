@@ -1,13 +1,15 @@
 """Model zoo: pattern-stacked transformers, MoE, hybrid, SSM, enc-dec, VLM."""
 
 from .config import ModelConfig
-from .api import (SHAPES, bubble_tree, decode_specs, dims, init, input_specs,
-                  make_decode_fn, make_loss_fn, make_prefill_fn,
-                  params_specs, prefill_specs, shape_applicable, train_specs)
-from . import lm
+from .api import (SHAPES, batch_axis_spec, bubble_tree, decode_specs, dims,
+                  init, input_specs, make_decode_fn, make_loss_fn,
+                  make_paged_decode_fn, make_prefill_fn, params_specs,
+                  prefill_specs, shape_applicable, train_specs)
+from . import lm, paged
 
 __all__ = [
-    "ModelConfig", "SHAPES", "bubble_tree", "decode_specs", "dims", "init",
-    "input_specs", "make_decode_fn", "make_loss_fn", "make_prefill_fn",
-    "params_specs", "prefill_specs", "shape_applicable", "train_specs", "lm",
+    "ModelConfig", "SHAPES", "batch_axis_spec", "bubble_tree", "decode_specs",
+    "dims", "init", "input_specs", "make_decode_fn", "make_loss_fn",
+    "make_paged_decode_fn", "make_prefill_fn", "params_specs",
+    "prefill_specs", "shape_applicable", "train_specs", "lm", "paged",
 ]

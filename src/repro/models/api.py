@@ -134,6 +134,52 @@ def make_decode_fn(cfg: ModelConfig):
     return step
 
 
+def make_paged_decode_fn(cfg: ModelConfig, use_kernel: bool = False):
+    """Decode step over paged KV: ``(params, token, states, tables,
+    lengths) -> (logits, states)``.  See ``models.paged``."""
+    from . import paged
+
+    def step(params, token, states, tables, lengths):
+        return paged.decode_step(params, token, states, tables, lengths,
+                                 cfg, use_kernel=use_kernel)
+    return step
+
+
+def batch_axis_spec(init_fn):
+    """Infer, per state leaf, which axis carries the batch.
+
+    ``init_fn(batch)`` builds (or ``eval_shape``s) a state pytree for a
+    given batch size.  Comparing the leaf shapes at two batch sizes pins
+    the batch axis exactly: the one axis whose extent differs.  Returns a
+    matching pytree of ints — the batch axis, or ``-1`` for batch-free
+    leaves (shared pools, scalars), which splice/extract must pass
+    through untouched.
+
+    This replaces the ``ndim >= 2`` heuristic the serving backends used
+    to guess batch leaves with: that guess silently skipped genuine 1-D
+    per-slot leaves (a ``(B,)`` position or flag vector) and corrupted
+    nothing only as long as no model had one.  An explicit spec fails
+    loudly instead: a leaf whose shape varies on more than one axis is a
+    structural error, not a leaf to skip.
+    """
+    a = jax.eval_shape(lambda: init_fn(2))
+    b = jax.eval_shape(lambda: init_fn(3))
+
+    def one(x, y):
+        assert len(x.shape) == len(y.shape), (x.shape, y.shape)
+        diff = [i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                if p != q]
+        if not diff:
+            return -1
+        if len(diff) > 1:
+            raise ValueError(
+                f"state leaf varies on {len(diff)} axes with batch "
+                f"({x.shape} vs {y.shape}): not a batch-sliceable leaf")
+        return diff[0]
+
+    return jax.tree.map(one, a, b)
+
+
 def init(cfg: ModelConfig, key: jax.Array):
     return init_params(lm.lm_schema(cfg), key)
 

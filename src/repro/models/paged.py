@@ -1,0 +1,182 @@
+"""Paged decode states: KV in a shared page pool, addressed by block table.
+
+The dense decode path (``lm.decode_step``) carries one ``KVCache`` per
+attention layer with the batch baked into the tensor — moving a sequence
+between batch slots is a per-layer tensor copy.  This module carries the
+same model through a *paged* layout instead:
+
+* each attention layer owns a KV **pool** ``(num_pages, page_size, K, hd)``
+  (reps-stacked like every other scanned state, so shape is
+  ``(reps, num_pages, page_size, K, hd)``),
+* all layers share ONE **block table** ``(B, pages_per_slot)`` int32 and one
+  **lengths** vector ``(B,)`` — every layer writes the same positions, so
+  per-layer tables would be copies of each other,
+* page 0 is the **trash page**: free slots (``lengths == 0`` after an
+  extract) keep decoding into it through their zeroed table rows, exactly
+  as the dense path keeps advancing freed slots — their output is garbage
+  and discarded either way.  Real pages start at index 1.
+
+Moving a sequence is then a block-table edit (host-side metadata); the
+pools never move.  Recurrent blocks (rglru/rwkv6) have O(1) fixed-size
+states with a plain batch axis and route through ``lm.block_step``
+unchanged — the paged layout only reinterprets attention KV.
+
+``decode_step`` here is jit-compatible with a stable signature
+``(params, token, states, tables, lengths)``; with ``use_kernel`` the
+attention read goes through the Pallas ``kernels.paged_attention`` kernel,
+otherwise through the gather oracle ``kernels.ref.paged_sdpa_ref`` — whose
+math is column-for-column the dense ``decode_attention`` masked softmax,
+which is what makes the paged serving backend stream-identical to the
+dense one (see the oracle's docstring).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import lm
+from .config import ModelConfig
+from .layers import embed, rmsnorm, rope, unembed
+from .recurrent import init_lru_state, init_rwkv_state
+
+
+class PagedKV(NamedTuple):
+    k: jax.Array          # (num_pages, page_size, K, hd)
+    v: jax.Array          # (num_pages, page_size, K, hd)
+
+
+def init_paged_state(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int):
+    """Decode states with paged attention KV.
+
+    Shaped like ``lm.init_state`` (list per stage, tuple per pattern
+    position, leaves reps-stacked at axis 0) except attention positions
+    hold a :class:`PagedKV` pool — batch-free: slots only exist in the
+    block table.  ``batch`` still sizes the recurrent states.
+    """
+    assert not cfg.enc_layers, "paged decode: decoder-only models"
+
+    def stk(make, reps):
+        one = make()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one)
+
+    def mk_pool():
+        K = cfg.n_kv_heads
+        return PagedKV(
+            k=jnp.zeros((num_pages, page_size, K, cfg.hd), cfg.cdtype),
+            v=jnp.zeros((num_pages, page_size, K, cfg.hd), cfg.cdtype))
+
+    states = []
+    for pat, reps in lm._stages(cfg):
+        st = []
+        for kind in pat:
+            if kind == "attn":
+                st.append(stk(mk_pool, reps))
+            elif kind == "rec":
+                st.append(stk(lambda: init_lru_state(cfg, batch), reps))
+            elif kind == "rwkv":
+                st.append(stk(lambda: init_rwkv_state(cfg, batch), reps))
+            else:
+                raise ValueError(f"paged decode: unsupported block {kind!r}")
+        states.append(tuple(st))
+    return states
+
+
+def paged_decode_attention(params, x, st: PagedKV, tables, lengths,
+                           cfg: ModelConfig, *, use_kernel: bool = False):
+    """One-token attention against a paged pool.
+
+    Mirrors ``attention.decode_attention``: project q/k/v, rope at
+    position ``lengths`` (tokens seen so far), scatter the new K/V into
+    the slot's current page at ``(tables[b, lengths // ps], lengths % ps)``,
+    then attend over ``lengths + 1`` valid positions.  Free slots
+    (zeroed table rows) scatter into the trash page.
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    knew = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    vnew = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    pos = lengths                                       # (B,) int32
+    q = rope(q, pos[:, None], cfg.rope_theta, cfg.rope_fraction)
+    knew = rope(knew, pos[:, None], cfg.rope_theta, cfg.rope_fraction)
+
+    page_size = st.k.shape[1]
+    npages = tables.shape[1]
+    page = tables[jnp.arange(B),
+                  jnp.clip(pos // page_size, 0, npages - 1)]
+    off = pos % page_size
+    k_pool = st.k.at[page, off].set(knew[:, 0].astype(st.k.dtype))
+    v_pool = st.v.at[page, off].set(vnew[:, 0].astype(st.v.dtype))
+
+    scale = cfg.hd ** -0.5
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    g = H // K
+    qk = q[:, 0].reshape(B, K, g, cfg.hd)
+    if use_kernel:
+        from repro.kernels import paged_attention
+        out = paged_attention.paged_attn(qk, k_pool, v_pool, tables,
+                                         pos + 1, window=cfg.window,
+                                         scale=scale)
+    else:
+        from repro.kernels import ref
+        out = ref.paged_sdpa_ref(qk, k_pool, v_pool, tables, pos + 1,
+                                 window=cfg.window, scale=scale)
+    out = out.reshape(B, 1, H, cfg.hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, PagedKV(k=k_pool, v=v_pool)
+
+
+def _paged_attn_block_step(params, x, st, tables, lengths, cfg, *,
+                           use_kernel: bool):
+    """The ``lm.block_step`` attn branch with paged attention swapped in."""
+    h, new = paged_decode_attention(params["attn"],
+                                    rmsnorm(params["ln1"], x), st, tables,
+                                    lengths, cfg, use_kernel=use_kernel)
+    x = x + h
+    h, _ = lm._ffn_apply(params["ffn"], rmsnorm(params["ln2"], x), cfg)
+    return x + h, new
+
+
+def _scan_stage_step(params_stage, x, states, tables, lengths, cfg, pat, *,
+                     use_kernel: bool):
+    def body(x, inp):
+        layer_params, layer_states = inp
+        new_states = []
+        for pi, kind in enumerate(pat):
+            p = layer_params[f"b{pi}_{kind}"]
+            if kind == "attn":
+                x, ns = _paged_attn_block_step(p, x, layer_states[pi],
+                                               tables, lengths, cfg,
+                                               use_kernel=use_kernel)
+            else:
+                x, ns = lm.block_step(p, x, layer_states[pi], cfg, kind)
+            new_states.append(ns)
+        return x, tuple(new_states)
+
+    return jax.lax.scan(body, x, (params_stage, states))
+
+
+def decode_step(params, token: jax.Array, states, tables, lengths,
+                cfg: ModelConfig, *, use_kernel: bool = False):
+    """token (B,1) int32 → (logits (B,V), new states).
+
+    ``tables``/``lengths`` are inputs, not state: the host (the serving
+    backend) owns page allocation and advances lengths — the model only
+    reads through them.  Every batch row's position advances each call,
+    occupied or not, exactly like the dense path's ``pos + 1``.
+    """
+    h = embed(params["embed"], token).astype(cfg.cdtype)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    new_states = []
+    for si, (pat, _) in enumerate(lm._stages(cfg)):
+        h, ns = _scan_stage_step(params[f"stage{si}"], h, states[si],
+                                 tables, lengths, cfg, pat,
+                                 use_kernel=use_kernel)
+        new_states.append(ns)
+    h = rmsnorm(params["final_norm"], h)
+    logits = unembed(params["lm_head"], h[:, 0], cfg.logits_softcap)
+    return logits, new_states

@@ -238,8 +238,13 @@ def slots_topology(n_slots: int, group: int = 4, *, hosts: int = 1,
 class JaxModelBackend:
     """The real model zoo: jitted whole-batch decode + per-request prefill.
 
-    State leaves carry the batch at axis 1 (layer-major), matching
-    ``api.lm.init_state``; splice/extract address that axis."""
+    Which axis of each state leaf carries the batch is *inferred*, not
+    guessed: ``api.batch_axis_spec`` pins it per leaf by comparing state
+    shapes at two batch sizes (``-1`` marks batch-free leaves, passed
+    through untouched).  The old ``ndim >= 2`` heuristic assumed "axis 1
+    if the leaf has one" — true for every reps-stacked cache today, but it
+    silently skipped genuine 1-D per-slot leaves, and a skipped leaf means
+    a spliced request resumes with another request's state."""
 
     def __init__(self, cfg, params, cache_len: int):
         import jax  # deferred: stub-mode users never pay the import
@@ -251,10 +256,21 @@ class JaxModelBackend:
         self.cache_len = cache_len
         self._decode = jax.jit(api.make_decode_fn(cfg))
         self._prefill = api.make_prefill_fn(cfg, cache_len)
+        self._axes = api.batch_axis_spec(
+            lambda n: api.lm.init_state(cfg, n, cache_len))
 
     def init(self, n_slots: int) -> tuple:
         states = self._api.lm.init_state(self.cfg, n_slots, self.cache_len)
         return states, np.zeros((n_slots, 1), np.int32)
+
+    def _slice(self, states, i: int):
+        """One sequence's state: index the batch axis of every batch leaf
+        (keepdims, so slices concatenate back in a splice)."""
+        lax = self._jax.lax
+        return self._jax.tree.map(
+            lambda ax, b: b if ax < 0
+            else lax.index_in_dim(b, i, ax, keepdims=True),
+            self._axes, states)
 
     def prefill(self, prompt: np.ndarray) -> tuple[int, object]:
         jnp = self._jax.numpy
@@ -267,8 +283,8 @@ class JaxModelBackend:
         """Prefill a wave of same-length prompts in ONE model call.
 
         ``lm.prefill`` is natively batched ((B, S) tokens → (B, V) last
-        logits + batch-axis-1 states), so the wave costs one forward pass;
-        the batched state is split back into per-sequence slices so the
+        logits + batched states), so the wave costs one forward pass; the
+        batched state is split back into per-sequence slices so the
         admission splice can route each to its slot.  Returns
         ``[(first_token, state), ...]`` in prompt order — identical values
         to ``prefill`` run per request."""
@@ -276,9 +292,7 @@ class JaxModelBackend:
         logits, st = self._prefill(self.params,
                                    {"tokens": jnp.asarray(np.stack(prompts))})
         toks = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-        return [(int(toks[i]),
-                 self._jax.tree.map(
-                     lambda b: b[:, i:i + 1] if b.ndim >= 2 else b, st))
+        return [(int(toks[i]), self._slice(st, i))
                 for i in range(len(prompts))]
 
     def decode(self, tokens: np.ndarray, states) -> tuple[np.ndarray, object]:
@@ -294,16 +308,313 @@ class JaxModelBackend:
         jnp = self._jax.numpy
         slots = jnp.asarray([s for s, _ in pairs])
 
-        def write(b, *ones):
-            if b.ndim < 2:
+        def write(ax, b, *ones):
+            if ax < 0:
                 return b
-            return b.at[:, slots].set(jnp.concatenate(ones, axis=1))
+            idx = (slice(None),) * ax + (slots,)
+            return b.at[idx].set(jnp.concatenate(ones, axis=ax))
 
-        return self._jax.tree.map(write, states, *[st for _, st in pairs])
+        return self._jax.tree.map(write, self._axes, states,
+                                  *[st for _, st in pairs])
 
     def extract(self, states, slot: int):
-        return self._jax.tree.map(
-            lambda b: b[:, slot:slot + 1] if b.ndim >= 2 else b, states)
+        return self._slice(states, slot)
+
+
+class _PagedShard:
+    """One execution group's paged KV: device-side pools (inside
+    ``states``) plus the host-side page metadata the backend edits —
+    the block table, per-slot lengths, the free list, and per-slot page
+    ownership.  The engine holds this object opaquely as the group's
+    "states"."""
+
+    __slots__ = ("states", "table", "lengths", "free", "slot_pages")
+
+    def __init__(self, states, table, lengths, free, slot_pages):
+        self.states = states          # list[stage] of tuple[pos] pytrees
+        self.table = table            # (n_slots, pages_per_slot) np.int32
+        self.lengths = lengths        # (n_slots,) np.int32
+        self.free = free              # allocatable pool page ids (0 = trash)
+        self.slot_pages = slot_pages  # slot -> [page ids], allocation order
+
+
+class PagedJaxModelBackend:
+    """The model zoo on paged KV: a steal/park/splice is a block-table
+    edit, not a tensor copy.
+
+    The KV layout mirrors the engine's page groups: every attention layer
+    reads K/V from a shared page pool through one per-shard block table
+    (``models.paged``), so the state that used to *move* with a request —
+    per-layer ``(B, C, K, hd)`` cache rows — is pinned, and only metadata
+    moves:
+
+    * ``extract`` (park, steal-time KV drag) hands back the slot's page
+      ids + recurrent-state slices and zeroes its table row — no pool
+      read;
+    * ``splice`` of a parked handle into the same shard re-points the new
+      slot's table row at those pages — no pool write (counted in
+      ``stats["table_splices"]``); only a *cross-shard* splice (a DCN
+      move between host batches) copies pages between pools
+      (``stats["pool_copies"]``, in pages);
+    * fresh prefills are the one real pool write: the prompt's K/V pages
+      are scattered in, batched per layer per admission wave
+      (``stats["pool_page_writes"]``).
+
+    Decode stays one jit per host batch with a stable signature
+    ``(params, tokens, states, table, lengths)``.  Pages are allocated
+    lazily as a slot's length crosses page boundaries; page 0 is the
+    trash page free slots decode into.  Recurrent leaves (rwkv6/rglru —
+    fixed-size O(1) states) ride the same explicit batch-axis spec as the
+    dense backend: they are spliced by value, which for an O(1) state *is*
+    the cheap move.
+
+    Streams are identical to :class:`JaxModelBackend` by construction
+    when ``cache_len`` has no sliding-window ring (see
+    ``kernels.ref.paged_sdpa_ref``); the serving benchmark and the engine
+    property tests assert it token-for-token.
+    """
+
+    def __init__(self, cfg, params, cache_len: int, *, page_size: int = 16,
+                 use_kernel: bool = False, slack_slots: Optional[int] = None):
+        import jax
+        from repro.models import api, lm, paged
+        assert not cfg.enc_layers, "paged serving: decoder-only models"
+        assert cache_len % page_size == 0, (cache_len, page_size)
+        self._jax = jax
+        self._api = api
+        self._lm = lm
+        self._paged = paged
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+        self.page_size = page_size
+        self.pages_per_slot = cache_len // page_size
+        # parked requests keep their pages resident while their old slot
+        # re-admits someone else, so the pool carries slack beyond
+        # n_slots * pages_per_slot; ``slack_slots`` sizes it (default: one
+        # extra fleet's worth — parked work is bounded by live requests)
+        self.slack_slots = slack_slots
+        self.use_kernel = use_kernel
+        self._decode = jax.jit(api.make_paged_decode_fn(cfg, use_kernel))
+        self._prefill = api.make_prefill_fn(cfg, cache_len)
+        self._dense_axes = api.batch_axis_spec(
+            lambda n: lm.init_state(cfg, n, cache_len))
+        self._paged_axes = api.batch_axis_spec(
+            lambda n: paged.init_paged_state(cfg, n, 4, page_size))
+        self.stats = {"pool_page_writes": 0, "pool_copies": 0,
+                      "table_splices": 0}
+
+    # -- pool bookkeeping (host-side metadata) --------------------------------
+    def init(self, n_slots: int) -> tuple:
+        slack = n_slots if self.slack_slots is None else self.slack_slots
+        num_pages = 1 + (n_slots + slack) * self.pages_per_slot
+        shard = _PagedShard(
+            states=self._paged.init_paged_state(
+                self.cfg, n_slots, num_pages, self.page_size),
+            table=np.zeros((n_slots, self.pages_per_slot), np.int32),
+            lengths=np.zeros((n_slots,), np.int32),
+            free=list(range(1, num_pages)),
+            slot_pages=[[] for _ in range(n_slots)])
+        return shard, np.zeros((n_slots, 1), np.int32)
+
+    def _alloc(self, shard: _PagedShard, n: int) -> list[int]:
+        if len(shard.free) < n:
+            raise RuntimeError(
+                f"KV page pool exhausted ({n} pages requested, "
+                f"{len(shard.free)} free): raise slack_slots or cache_len")
+        pages, shard.free = shard.free[:n], shard.free[n:]
+        return pages
+
+    def _ensure_pages(self, shard: _PagedShard) -> None:
+        """Lazy page allocation: before a decode call, any occupied slot
+        whose next write position crosses into an unmapped page gets one
+        from the free list — the vLLM-style on-demand grow that keeps a
+        short request from reserving its worst-case KV upfront."""
+        for b, pages in enumerate(shard.slot_pages):
+            if not pages:
+                continue                      # free slot: decodes into trash
+            pi = int(shard.lengths[b]) // self.page_size
+            if pi >= self.pages_per_slot:
+                raise RuntimeError(
+                    f"slot {b} reached cache_len={self.cache_len}: the "
+                    f"engine admitted prompt+decode longer than the cache")
+            if shard.table[b, pi] == 0:
+                (pg,) = self._alloc(shard, 1)
+                shard.table[b, pi] = pg
+                pages.append(pg)
+
+    # -- handles --------------------------------------------------------------
+    def _fresh_handle(self, dense_states, i: int, length: int) -> dict:
+        """One prefilled sequence, sliced out of a (possibly batched)
+        dense prefill: attention K/V kept dense per layer (paged in at
+        splice), every other state leaf sliced on its batch axis."""
+        lax = self._jax.lax
+        kv, leaves = {}, {}
+        for si, (pat, _) in enumerate(self._lm._stages(self.cfg)):
+            for pi, kind in enumerate(pat):
+                st = dense_states[si][pi]
+                if kind == "attn":
+                    # KVCache k/v are (reps, B, C, K, hd); the prompt's
+                    # tokens sit at positions [0, length) — ring-free as
+                    # long as length <= C, asserted at prefill
+                    kv[(si, pi)] = (st.k[:, i, :length], st.v[:, i, :length])
+                else:
+                    leaves[(si, pi)] = self._jax.tree.map(
+                        lambda ax, b: b if ax < 0
+                        else lax.index_in_dim(b, i, ax, keepdims=True),
+                        self._dense_axes[si][pi], st)
+        return {"kind": "fresh", "length": length, "kv": kv,
+                "leaves": leaves}
+
+    def prefill(self, prompt: np.ndarray) -> tuple[int, object]:
+        return self.prefill_wave([prompt])[0]
+
+    def prefill_wave(self, prompts: list) -> list:
+        jnp = self._jax.numpy
+        S = len(prompts[0])
+        C = self._lm._cache_len(self.cfg, self.cache_len)
+        assert S <= C, \
+            f"paged prefill keeps the whole prompt resident ({S} > {C})"
+        logits, st = self._prefill(self.params,
+                                   {"tokens": jnp.asarray(np.stack(prompts))})
+        toks = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        return [(int(toks[i]), self._fresh_handle(st, i, S))
+                for i in range(len(prompts))]
+
+    # -- decode ---------------------------------------------------------------
+    def decode(self, tokens: np.ndarray, shard: _PagedShard
+               ) -> tuple[np.ndarray, object]:
+        jnp = self._jax.numpy
+        self._ensure_pages(shard)
+        logits, shard.states = self._decode(
+            self.params, jnp.asarray(tokens), shard.states,
+            jnp.asarray(shard.table), jnp.asarray(shard.lengths))
+        # every slot's position advances, occupied or not — the host-side
+        # mirror of the dense path's ``pos + 1`` for the whole batch
+        shard.lengths = shard.lengths + 1
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        return next_tok, shard
+
+    # -- splice / extract: migration as metadata ------------------------------
+    def splice(self, shard: _PagedShard, pairs: list[tuple[int, object]]):
+        jnp = self._jax.numpy
+        pool_pages: dict[tuple, list] = {}    # (si,pi) -> [(pages, k, v)]
+        leaf_writes: dict[tuple, list] = {}   # (si,pi) -> [(slot, tree)]
+        ps = self.page_size
+        for slot, h in pairs:
+            assert not shard.slot_pages[slot], \
+                f"splice into slot {slot} which still owns pages"
+            if h["kind"] == "fresh":
+                pages: list[int] = []
+                if h["kv"]:  # attention-free models own no pages
+                    npg = -(-h["length"] // ps)
+                    pages = self._alloc(shard, npg)
+                    for (si, pi), (k, v) in h["kv"].items():
+                        pad = [(0, 0), (0, npg * ps - h["length"]),
+                               (0, 0), (0, 0)]
+                        kp = jnp.pad(k, pad).reshape(
+                            k.shape[0], npg, ps, *k.shape[2:])
+                        vp = jnp.pad(v, pad).reshape(
+                            v.shape[0], npg, ps, *v.shape[2:])
+                        pool_pages.setdefault((si, pi), []).append(
+                            (pages, kp, vp))
+                    self.stats["pool_page_writes"] += npg
+            else:                              # parked paged handle
+                src: _PagedShard = h.pop("shard")
+                pages = h.pop("pages")
+                if src is shard or not pages:
+                    # same pool: the migration IS the metadata write
+                    self.stats["table_splices"] += 1
+                else:
+                    # cross-shard (a DCN move between host batches): the
+                    # one place pages physically move — copy them between
+                    # pools, then free the source's
+                    dst = self._alloc(shard, len(pages))
+                    src_idx = jnp.asarray(pages)
+                    dst_idx = jnp.asarray(dst)
+                    for si, (pat, _) in enumerate(
+                            self._lm._stages(self.cfg)):
+                        new_stage = list(shard.states[si])
+                        for pi, kind in enumerate(pat):
+                            if kind != "attn":
+                                continue
+                            pool = shard.states[si][pi]
+                            spool = src.states[si][pi]
+                            new_stage[pi] = self._paged.PagedKV(
+                                k=pool.k.at[:, dst_idx].set(
+                                    spool.k[:, src_idx]),
+                                v=pool.v.at[:, dst_idx].set(
+                                    spool.v[:, src_idx]))
+                        shard.states[si] = tuple(new_stage)
+                    src.free.extend(pages)
+                    self.stats["pool_copies"] += len(pages)
+                    pages = dst
+            shard.slot_pages[slot] = list(pages)
+            shard.table[slot, :] = 0
+            shard.table[slot, :len(pages)] = pages
+            shard.lengths[slot] = h["length"]
+            for key, tree in h["leaves"].items():
+                leaf_writes.setdefault(key, []).append((slot, tree))
+        # apply the queued fresh-prefill page-ins: ONE scatter per layer
+        for (si, pi), entries in pool_pages.items():
+            pool = shard.states[si][pi]
+            idx = jnp.asarray([p for pages, _, _ in entries for p in pages])
+            kcat = jnp.concatenate([k for _, k, _ in entries], axis=1)
+            vcat = jnp.concatenate([v for _, _, v in entries], axis=1)
+            new_stage = list(shard.states[si])
+            new_stage[pi] = self._paged.PagedKV(
+                k=pool.k.at[:, idx].set(kcat.astype(pool.k.dtype)),
+                v=pool.v.at[:, idx].set(vcat.astype(pool.v.dtype)))
+            shard.states[si] = tuple(new_stage)
+        # batch-axis leaves (recurrent states): one traversal per layer
+        for (si, pi), entries in leaf_writes.items():
+            slots = jnp.asarray([s for s, _ in entries])
+
+            def write(ax, b, *ones):
+                if ax < 0:
+                    return b
+                idx = (slice(None),) * ax + (slots,)
+                return b.at[idx].set(jnp.concatenate(ones, axis=ax))
+
+            new_stage = list(shard.states[si])
+            new_stage[pi] = self._jax.tree.map(
+                write, self._paged_axes[si][pi], shard.states[si][pi],
+                *[t for _, t in entries])
+            shard.states[si] = tuple(new_stage)
+        return shard
+
+    def extract(self, shard: _PagedShard, slot: int):
+        """Park one slot: hand its pages to the caller (ownership moves
+        with the handle — ``release`` is NOT called on parked pages) and
+        zero its table row, so the freed slot's ongoing trash decode
+        cannot touch the parked KV."""
+        lax = self._jax.lax
+        leaves = {}
+        for si, (pat, _) in enumerate(self._lm._stages(self.cfg)):
+            for pi, kind in enumerate(pat):
+                if kind == "attn":
+                    continue
+                leaves[(si, pi)] = self._jax.tree.map(
+                    lambda ax, b: b if ax < 0
+                    else lax.index_in_dim(b, slot, ax, keepdims=True),
+                    self._paged_axes[si][pi], shard.states[si][pi])
+        handle = {"kind": "paged", "shard": shard,
+                  "pages": shard.slot_pages[slot],
+                  "length": int(shard.lengths[slot]), "leaves": leaves}
+        shard.slot_pages[slot] = []
+        shard.table[slot, :] = 0
+        shard.lengths[slot] = 0
+        return handle
+
+    def release(self, shard: _PagedShard, slot: int):
+        """Free a finished slot's pages back to the pool (the engine's
+        ``_evict`` hook).  Parked slots were already emptied by
+        ``extract`` — this is then a no-op."""
+        shard.free.extend(shard.slot_pages[slot])
+        shard.slot_pages[slot] = []
+        shard.table[slot, :] = 0
+        shard.lengths[slot] = 0
+        return shard
 
 
 class StubModelBackend:
@@ -1013,6 +1324,13 @@ class ServingEngine:
             t.remaining = 0.0
             self.runtime.release(slot, t, True, now)
         self._refund(slot)                    # its KV bytes leave the budget
+        rel = getattr(self.backend, "release", None)
+        if rel is not None:
+            # paged backends reclaim the slot's KV pages on eviction (a
+            # metadata edit); dense backends have nothing to free
+            g = self._group_of[slot]
+            self._states[g] = rel(self._states[g],
+                                  slot - self._exec_groups[g][0])
         self.tokens[slot, 0] = 0              # freed slot: no stale decode
 
     # -- multilevel-feedback demotion + SLA preemption ------------------------
