@@ -48,6 +48,14 @@ disappears from the current run also fails (a silently dropped benchmark
 is a regression in coverage).  New rows are allowed — commit a refreshed
 baseline to start gating them.
 
+Every gated row's report line carries its delta vs baseline (absolute and
+percent), so the perf trajectory is readable straight from the CI job log
+without diffing artifacts, and the same per-row deltas are written back
+into the *current* ``BENCH_*.json`` under a top-level ``"deltas"`` key —
+the artifact a CI run uploads then records not just what it measured but
+how far it moved.  The write is best-effort: a read-only artifact degrades
+to log-only, never to a gate failure.
+
 Exit codes: 0 ok, 1 regression(s), 2 usage/IO error.  To refresh the
 baseline after an intentional change::
 
@@ -155,6 +163,7 @@ def main(argv: list[str]) -> int:
         return 2
 
     failures = []
+    deltas = {}
     for name in gated:
         brow = base[name]
         crow = cur.get(name)
@@ -172,8 +181,14 @@ def main(argv: list[str]) -> int:
             bad = crow["value"] < bound
             word, cmp = "floor", "<"
         status = "FAIL" if bad else "ok"
+        delta = crow["value"] - brow["value"]
+        pct = 100.0 * delta / brow["value"] if brow["value"] else 0.0
+        deltas[name] = {"kind": brow.get("kind"), "base": brow["value"],
+                        "cur": crow["value"], "delta": round(delta, 6),
+                        "delta_pct": round(pct, 2), "status": status}
         print(f"{status:4s} {name:40s} base={brow['value']:8.4f} "
-              f"cur={crow['value']:8.4f} {word}={bound:8.4f}")
+              f"cur={crow['value']:8.4f} d={delta:+8.4f} ({pct:+6.1f}%) "
+              f"{word}={bound:8.4f}")
         if bad:
             band = "rel" if brow.get("kind") in ("speedup", "throughput") \
                 else "abs"
@@ -184,6 +199,21 @@ def main(argv: list[str]) -> int:
         if cur[name].get("kind") in GATED_KINDS and name.startswith(prefix):
             print(f"new  {name:40s} cur={cur[name]['value']:8.4f} "
                   "(ungated; refresh baseline to gate)")
+
+    if deltas:
+        # stamp the per-row deltas into the current artifact so a CI run's
+        # uploaded BENCH_*.json records its movement vs baseline, not just
+        # its raw values.  Best-effort: a read-only artifact is a logging
+        # loss, not a gate failure.
+        try:
+            with open(args[1]) as f:
+                doc = json.load(f)
+            doc["deltas"] = {"baseline": args[0], "rows": deltas}
+            with open(args[1], "w") as f:
+                json.dump(doc, f, indent=1)
+                f.write("\n")
+        except OSError as e:
+            print(f"note: could not write deltas into {args[1]}: {e}")
 
     print(f"\n{len(gated)} gated rows checked (speedup band {tolerance:.0%}, "
           f"gain band {gain_tolerance:g} points, "

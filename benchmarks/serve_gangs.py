@@ -46,6 +46,33 @@ a hash chain whose output detects any KV mishandling):
   every page group that receives cross-host loot.
   ``serve/dcn_rebalance_speedup`` is the gated row (acceptance: >= 1.2x,
   identical decode streams asserted).
+* **bandwidth pricing** — the physical cost model's per-byte term: steal
+  and rebalance bills scale with the KV bytes a move drags
+  (``BW_SERVE_COST``'s level-table triples; cheap within the pod,
+  DCN-priced across it).  The byte-naive engine believes flat boundary
+  tolls (``SERVE_COST``) but pays ``BW_SERVE_COST``, so its thief host
+  keeps dragging heavy remote KV across the pod — freezing its slots in
+  transfer stalls while its same-pod neighbour's backlog waits; the
+  byte-priced engine rescues the cheap same-pod work and leaves heavy KV
+  where its own pod drains it.  ``serve/bandwidth_priced_speedup`` is the
+  gated row (acceptance: >= 1.2x, identical decode streams asserted).
+* **straggler drain** — one host runs at 0.2x (its decode_step spans five
+  engine steps).  Both engines run the same slow machine; only the
+  speed-aware one lets the scheduler SEE the skew: the steal survey
+  weighs victim backlog by host speed (rescuing the straggler's queue
+  first) and refuses to drag work from a faster host onto a slower one
+  (no tar-pitting), and the LPT rebalance deal divides loads by speed.
+  The lockstep-assuming baseline shuffles heavy fast-host loot while the
+  straggler's backlog rots.  ``serve/straggler_drain_speedup`` is the
+  gated row (acceptance: >= 1.2x, identical decode streams asserted).
+* **gang split** — a gang wider than its home page group's HBM budget is
+  stuck: the full group's slots skip admission and every other group's
+  survey refuses the whole gang.  The splitting engine quotes spreading
+  the members across the host's sibling page groups against parking
+  until the residents drain, and buys the cheaper; the park-only
+  baseline waits out the residents.  ``serve/gang_split_admission_speedup``
+  is the gated row (acceptance: >= 1.2x, identical decode streams
+  asserted).
 
 Rows are schema-1 (see ``benchmarks/run.py``) with a ``counters`` dict; the
 standalone entry point merges them into ``BENCH_smoke.json`` so the
@@ -68,8 +95,8 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 import numpy as np
 
-from repro.serving import (FLAT_SERVE_COST, SERVE_COST, ServingEngine,
-                           StubModelBackend)
+from repro.serving import (BW_SERVE_COST, FLAT_SERVE_COST, SERVE_COST,
+                           ServingEngine, StubModelBackend)
 
 N_SLOTS = 8          # 2 KV page groups x 4 slots
 NEW_TOKENS = 12
@@ -206,6 +233,104 @@ def _run_dcn_rebalance(local: bool) -> ServingEngine:
     return eng
 
 
+# -- bandwidth pricing: per-byte transfer tolls on the steal survey ---------
+
+def _run_bandwidth(bw_aware: bool) -> ServingEngine:
+    """2 pods x 2 hosts x 8 slots, fat KV (8 bytes/request): host0 holds a
+    deep backlog of short requests, host1 (same pod) is the idle thief,
+    pod 1's hosts churn their own heavy backlog.  The byte-naive survey
+    believes flat boundary tolls, so pod 1's heavier loot wins its
+    work-per-cost ranking — every drag then bills the true per-byte DCN
+    toll (``bill_model=BW_SERVE_COST``), freezing the thief while host0's
+    backlog waits.  The byte-priced survey sees the same drag cost what
+    it costs and rescues the cheap same-pod work instead."""
+    cost = BW_SERVE_COST if bw_aware else SERVE_COST
+    bill = None if bw_aware else BW_SERVE_COST
+    eng = ServingEngine(None, None, n_slots=32, pods=2, hosts=2,
+                        backend=StubModelBackend(), mode="runtime",
+                        cost_model=cost, bill_model=bill, kv_bytes=8.0,
+                        **ENGINE_KW)
+    rng = np.random.default_rng(0)
+    n = 0
+    for i in range(72):          # host0: deep backlog of short requests
+        eng.submit(rng.integers(1, 250, 8), 12, home=f"page{i % 2}")
+        n += 1
+    # host1 (pod 0): no local work — the thief whose survey is under test
+    for h in (2, 3):             # pod 1: heavy, self-draining backlog
+        for i in range(16):
+            eng.submit(rng.integers(1, 250, 8), 36,
+                       home=f"page{2 * h + i % 2}")
+            n += 1
+    eng.run(max_steps=8000)
+    assert len(eng.completed) == n, (bw_aware, len(eng.completed), n)
+    return eng
+
+
+# -- straggler drain: one slow host, speed-aware vs lockstep-assuming -------
+
+def _run_straggler(speed_aware: bool) -> ServingEngine:
+    """4 hosts x 4 slots, host0 at 0.2x speed with a deep backlog of short
+    requests, hosts 1-2 with their own heavy backlog, host3 idle.  Both
+    engines run the same slow machine; the speed-aware survey rescues the
+    straggler's queue (work / victim speed) and never drags heavy
+    fast-host loot onto the straggler, the lockstep-assuming baseline
+    ranks by raw work — shuffling fast-host loot while host0's backlog
+    drains at 0.2x."""
+    eng = ServingEngine(None, None, n_slots=16, hosts=4,
+                        backend=StubModelBackend(), mode="runtime",
+                        cost_model=SERVE_COST,
+                        host_speed=(0.2, 1.0, 1.0, 1.0),
+                        speed_aware=speed_aware, **ENGINE_KW)
+    rng = np.random.default_rng(0)
+    n = 0
+    for _ in range(44):          # straggler: many short requests
+        eng.submit(rng.integers(1, 250, 8), 8, home="page0")
+        n += 1
+    for h in (1, 2):             # fast hosts: their own heavy backlog
+        for _ in range(12):
+            eng.submit(rng.integers(1, 250, 8), 32, home=f"page{h}")
+            n += 1
+    # host3: the idle thief making the rescue-vs-shuffle choice
+    eng.run(max_steps=8000)
+    assert len(eng.completed) == n, (speed_aware, len(eng.completed), n)
+    return eng
+
+
+# -- gang split: an oversized gang on a full page group ---------------------
+
+def _run_gang_split(split: bool) -> ServingEngine:
+    """4 page groups x 4 slots, HBM budget 4 KV per group: long residents
+    fill page0, then a 6-member gang homed there is stuck — the group can
+    never hold it whole and every other group's survey refuses the whole
+    bubble.  The splitting engine quotes member re-homes across the
+    sibling groups against waiting out the residents and buys the split;
+    the park-only baseline waits.  ``depth_skew`` is pinned high for BOTH
+    variants: the queue-depth rebalance can also expand a stuck gang (a
+    different, flat-priced mechanism), and this row isolates the quoted
+    split."""
+    eng = ServingEngine(None, None, n_slots=16,
+                        backend=StubModelBackend(), mode="runtime",
+                        cost_model=SERVE_COST, hbm_budget=4.0, kv_bytes=1.0,
+                        gang_split=split, depth_skew=99, **ENGINE_KW)
+    rng = np.random.default_rng(0)
+    n = 0
+    for _ in range(4):           # residents occupy page0 for 30 steps
+        eng.submit(rng.integers(1, 250, 8), 30, home="page0")
+        n += 1
+    for _ in range(6):           # the oversized gang, homed to the full group
+        eng.submit(rng.integers(1, 250, 8), 24, gang="big", home="page0")
+        n += 1
+    for p in (1, 2, 3):          # background work on the sibling groups
+        for _ in range(2):
+            eng.submit(rng.integers(1, 250, 8), 12, home=f"page{p}")
+            n += 1
+    eng.run(max_steps=8000)
+    assert len(eng.completed) == n, (split, len(eng.completed), n)
+    assert all(0.0 <= u <= eng.hbm_budget + 1e-9 for u in eng.hbm_used), \
+        eng.hbm_used
+    return eng
+
+
 # -- HBM pressure: budgets tighter than the slot count ----------------------
 
 def _run_hbm(capacity_aware: bool) -> ServingEngine:
@@ -319,6 +444,53 @@ def run(smoke: bool = False) -> list[tuple]:
         f" stall {c['flat_stall_steps']}->{c['stall_steps']}"
         f" local_rebalances={c['local_rebalances']}"
         f" host_decode_steps={c['host_decode_steps']}",
+        c))
+
+    # -- bandwidth pricing: byte-priced vs byte-naive steal survey -----------
+    naive = _run_bandwidth(bw_aware=False)
+    aware = _run_bandwidth(bw_aware=True)
+    # mispricing the bytes must never change what was decoded
+    assert _streams(naive) == _streams(aware), "byte pricing changed output"
+    c = aware.counters()
+    c["steps_naive"] = naive.steps
+    c["naive_steal_cost"] = naive.counters()["steal_cost"]
+    c["naive_stall_steps"] = naive.counters()["stall_steps"]
+    rows.append((
+        "serve/bandwidth_priced_speedup", naive.steps / aware.steps,
+        f"steps {naive.steps}->{aware.steps}"
+        f" steal_cost {c['naive_steal_cost']}->{c['steal_cost']}"
+        f" stall {c['naive_stall_steps']}->{c['stall_steps']}",
+        c))
+
+    # -- straggler drain: speed-aware vs lockstep-assuming -------------------
+    naive = _run_straggler(speed_aware=False)
+    aware = _run_straggler(speed_aware=True)
+    # seeing the speed skew must never change what was decoded
+    assert _streams(naive) == _streams(aware), "speed model changed output"
+    c = aware.counters()
+    c["steps_naive"] = naive.steps
+    c["naive_steals"] = naive.counters()["steals"]
+    c["naive_host_throughput"] = naive.counters()["host_throughput"]
+    rows.append((
+        "serve/straggler_drain_speedup", naive.steps / aware.steps,
+        f"steps {naive.steps}->{aware.steps}"
+        f" steals {c['naive_steals']}->{c['steals']}"
+        f" host_tp {c['naive_host_throughput']}->{c['host_throughput']}",
+        c))
+
+    # -- gang split: quoted member re-homes vs park-and-wait -----------------
+    park = _run_gang_split(split=False)
+    split = _run_gang_split(split=True)
+    assert _streams(park) == _streams(split), "gang split changed output"
+    c = split.counters()
+    c["steps_park"] = park.steps
+    assert c["gang_splits"] >= 1, c          # the mechanism actually fired
+    assert park.counters()["gang_splits"] == 0
+    rows.append((
+        "serve/gang_split_admission_speedup", park.steps / split.steps,
+        f"steps {park.steps}->{split.steps}"
+        f" gang_splits={c['gang_splits']}"
+        f" split_members={c['gang_split_members']}",
         c))
     return rows
 

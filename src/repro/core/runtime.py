@@ -114,7 +114,9 @@ class SchedulerRuntime:
                  data_policy: Optional[str] = None,
                  on_data_migrate: Optional[
                      Callable[[str, int, int], None]] = None,
-                 can_accept: Optional[Callable[..., bool]] = None):
+                 can_accept: Optional[Callable[..., bool]] = None,
+                 bytes_of: Optional[Callable[..., float]] = None,
+                 speed_of: Optional[Callable[..., float]] = None):
         self.topo = topo
         self.policy = policy
         # memory policy: explicit arg > policy preference > first touch
@@ -131,6 +133,16 @@ class SchedulerRuntime:
         # deal; refusals surface in :meth:`counters` as ``steal_refusals``.
         if can_accept is not None and self.sched is not None:
             self.sched.capacity_cb = can_accept
+        # physical-cost rulers (both optional, both scheduler hooks):
+        # ``bytes_of(task) -> float`` prices a migration by the bytes of
+        # state it drags (bandwidth-priced level-table triples read it);
+        # ``speed_of(component) -> float`` is the relative execution speed
+        # of the host owning a component, read by the costed steal survey
+        # and the LPT rebalance deal so work drains away from slow hosts.
+        if bytes_of is not None and self.sched is not None:
+            self.sched.bytes_cb = bytes_of
+        if speed_of is not None and self.sched is not None:
+            self.sched.speed_cb = speed_of
         self.homes: dict[str, int] = {}          # data id -> home cpu
         self.data_migrations = 0                 # next-touch re-homes done
         self.migration_log: list[tuple[str, int, int]] = []  # (data, from, to)

@@ -56,13 +56,23 @@ class StealCostModel:
     in simulator quanta (:meth:`Topology.levels_crossed` is the distance).
     ``per_level`` defaults to the uniform ``level_penalty``; a non-uniform
     machine prices each boundary separately through ``level_table``, a
-    tuple of ``(level_name, penalty)`` pairs looked up by the *boundary*
-    the steal crosses (:meth:`Topology.crossing_level`) — on a pod-sharded
-    serving fleet a ``host`` crossing pays DCN round-trips and a ``pod``
-    crossing pays the data-center network, an order of magnitude over the
-    on-chip ``page`` shuffle, exactly the paper's NUMA-factor argument
-    applied to the cost side.  Levels absent from the table fall back to
-    ``level_penalty``.
+    tuple of ``(level_name, penalty)`` pairs — or ``(level_name, base,
+    per_byte)`` triples — looked up by the *boundary* the steal crosses
+    (:meth:`Topology.crossing_level`) — on a pod-sharded serving fleet a
+    ``host`` crossing pays DCN round-trips and a ``pod`` crossing pays the
+    data-center network, an order of magnitude over the on-chip ``page``
+    shuffle, exactly the paper's NUMA-factor argument applied to the cost
+    side.  Levels absent from the table fall back to ``level_penalty``.
+
+    The triple form is **bandwidth pricing**: a crossing's bill is no
+    longer a flat latency toll but ``base + per_byte * bytes_moved`` — the
+    bytes are whatever state the migration drags behind it (on the serving
+    fleet: a gang's live KV, ``kv_bytes`` x live threads, supplied by the
+    consumer through ``BubbleScheduler.bytes_cb``).  A fat gang dragged
+    across a DCN boundary then costs proportionally more than a singleton
+    at the same distance.  Pair entries are exactly triples with
+    ``per_byte = 0``, so every pre-bandwidth table — and every golden
+    trace — prices bit-identically.
 
     A proactive rebalance (:meth:`BubbleScheduler.rebalance`) charges
     ``rebalance_base`` once plus, per task re-placed,
@@ -90,23 +100,40 @@ class StealCostModel:
     thread_penalty: float = 0.0      # per live thread moved
     rebalance_base: float = 0.0      # flat cost per proactive rebalance
     rebalance_per_move: float = 0.0  # per task re-placed by a rebalance
-    # ((level_name, per-level penalty), ...): boundary-specific pricing —
-    # a tuple of pairs, not a dict, so the dataclass stays frozen/hashable
+    # ((level_name, base), ...) or ((level_name, base, per_byte), ...):
+    # boundary-specific pricing — a tuple of pairs/triples, not a dict, so
+    # the dataclass stays frozen/hashable.  Pairs mean per_byte = 0.
     level_table: tuple = ()
 
-    def level_cost(self, boundary: Optional[str]) -> float:
-        """Per-level penalty for a steal crossing ``boundary`` (the
-        outermost level the migration crosses); uniform fallback."""
+    def _table_entry(self, boundary: Optional[str]
+                     ) -> Optional[tuple[float, float]]:
+        """``(base, per_byte)`` for a tabled boundary, ``None`` otherwise.
+        Normalises pair entries to ``per_byte = 0`` so both table forms
+        price identically everywhere downstream."""
         if boundary is not None:
-            for name, penalty in self.level_table:
-                if name == boundary:
-                    return penalty
-        return self.level_penalty
+            for entry in self.level_table:
+                if entry[0] == boundary:
+                    return (entry[1], entry[2] if len(entry) > 2 else 0.0)
+        return None
+
+    def level_cost(self, boundary: Optional[str]) -> float:
+        """Per-level *base* penalty for a steal crossing ``boundary`` (the
+        outermost level the migration crosses); uniform fallback."""
+        entry = self._table_entry(boundary)
+        return entry[0] if entry is not None else self.level_penalty
+
+    def byte_cost(self, boundary: Optional[str]) -> float:
+        """Per-byte price of dragging state across ``boundary`` — zero for
+        un-tabled boundaries and pair entries (flat pricing)."""
+        entry = self._table_entry(boundary)
+        return entry[1] if entry is not None else 0.0
 
     def steal_cost(self, distance: int, n_threads: int,
-                   boundary: Optional[str] = None) -> float:
+                   boundary: Optional[str] = None,
+                   bytes_moved: float = 0.0) -> float:
         return (self.lock_penalty + self.level_cost(boundary) * distance +
-                self.thread_penalty * n_threads)
+                self.thread_penalty * n_threads +
+                self.byte_cost(boundary) * bytes_moved)
 
     def rebalance_cost(self, moves: int) -> float:
         """Flat (boundary-blind) price of a ``moves``-unit re-spread — the
@@ -116,9 +143,11 @@ class StealCostModel:
         lives in :meth:`BubbleScheduler.estimate_rebalance`."""
         return self.rebalance_base + self.rebalance_per_move * moves
 
-    def rebalance_move_cost(self, boundary: Optional[str] = None) -> float:
+    def rebalance_move_cost(self, boundary: Optional[str] = None,
+                            bytes_moved: float = 0.0) -> float:
         """Price of ONE rebalance move crossing ``boundary``: the flat
-        per-move descriptor cost plus the boundary's ``level_table`` entry.
+        per-move descriptor cost plus the boundary's ``level_table`` base
+        plus its per-byte price times the bytes the move drags.
 
         Table-only, deliberately: a rebalance move inside an un-tabled
         region (page→page on one host, or anywhere on a single-host fleet)
@@ -126,13 +155,10 @@ class StealCostModel:
         schedule's bill — and golden trace — byte-identical.  Only the
         boundaries the machine actually prices (``host``/``pod`` DCN
         crossings) add their toll."""
-        extra = 0.0
-        if boundary is not None:
-            for name, penalty in self.level_table:
-                if name == boundary:
-                    extra = penalty
-                    break
-        return self.rebalance_per_move + extra
+        entry = self._table_entry(boundary)
+        if entry is None:
+            return self.rebalance_per_move
+        return self.rebalance_per_move + entry[0] + entry[1] * bytes_moved
 
     @property
     def steals_are_free(self) -> bool:
@@ -142,7 +168,8 @@ class StealCostModel:
         selection to work-per-cost ranking."""
         return not (self.lock_penalty or self.level_penalty
                     or self.thread_penalty
-                    or any(p for _, p in self.level_table))
+                    or any(p for entry in self.level_table
+                           for p in entry[1:]))
 
 
 ZERO_COST = StealCostModel()
@@ -223,6 +250,21 @@ class BubbleScheduler:
         # deals the unit elsewhere, instead of dragging state somewhere it
         # cannot be admitted.
         self.capacity_cb = None
+        # consumer ruler for bandwidth pricing: ``bytes_cb(task) -> float``
+        # answers how many bytes of state a migration of ``task`` drags
+        # behind it (the serving engine: the gang's live KV).  Without it
+        # every migration is weightless and triple level-table entries
+        # price exactly like their pair form.
+        self.bytes_cb = None
+        # consumer ruler for execution-side skew: ``speed_cb(component) ->
+        # float`` is the relative decode speed of the host owning that
+        # component (1.0 = nominal).  The costed steal survey weighs loot
+        # by how slowly its current owner would drain it, and the LPT deal
+        # divides a destination's load by its speed — so work drains
+        # *away* from slow hosts, not merely away from full ones.  Without
+        # the callback every component runs at 1.0 and both paths are the
+        # historical ones, bit for bit.
+        self.speed_cb = None
         # how a rebalance's level-table tolls are billed.  False (the
         # default): the triggering cpu pays the WHOLE bill through
         # consume_cost() — billed == accrued holds for every consumer,
@@ -246,6 +288,15 @@ class BubbleScheduler:
         migrations instead of merely counting them."""
         c, self._unbilled = self._unbilled, 0.0
         return c
+
+    def _bytes_of(self, task: Task) -> float:
+        """Bytes a migration of ``task`` drags (0 without a consumer ruler)."""
+        return self.bytes_cb(task) if self.bytes_cb is not None else 0.0
+
+    def _speed_of(self, comp: Component) -> float:
+        """Relative execution speed of the host owning ``comp`` (1.0 when
+        no consumer ruler is installed, or for components above hosts)."""
+        return self.speed_cb(comp) if self.speed_cb is not None else 1.0
 
     # -- application API (paper Figure 4) ------------------------------------
     def wake_up_bubble(self, b: Bubble, at: Optional[RunQueue] = None) -> None:
@@ -427,6 +478,7 @@ class BubbleScheduler:
         first, siblings by closeness, BFS within a subtree), so exact-score
         ties still resolve toward the most local victim."""
         best_bubble = best_thread = None      # (score, queue, task, work)
+        tspeed = self._speed_of(self.topo.cpus[cpu])
         for depth in range(len(path) - 2, -1, -1):        # local → global
             anc, mine = path[depth], path[depth + 1]
             siblings = sorted((c for c in anc.children if c is not mine),
@@ -438,6 +490,18 @@ class BubbleScheduler:
                         continue
                     dist = self.topo.levels_crossed(cpu, comp)
                     boundary = self.topo.crossing_level(cpu, comp)
+                    # loot sitting under a slow host drains slowly where it
+                    # is — its *effective* backlog (work / victim speed) is
+                    # larger, so the survey prefers rescuing it.  Uniform
+                    # speed (no speed_cb) divides everything by 1.0.
+                    vspeed = self._speed_of(comp)
+                    if vspeed > tspeed + 1e-9:
+                        # work only drains toward equal-or-faster hosts: a
+                        # straggler pulling loot off a faster victim would
+                        # turn that work into its own longest-running tail
+                        # (the victim's slots finish it sooner than the
+                        # thief ever could).  Uniform speed skips nothing.
+                        continue
                     for t in q.tasks:
                         if task_filter is not None and not task_filter(t):
                             continue
@@ -450,16 +514,17 @@ class BubbleScheduler:
                             n = sum(1 for th in t.threads()
                                     if th.remaining > 0)
                             score = self._steal_score(
-                                w, self.cost_model.steal_cost(
-                                    dist, n, boundary))
+                                w / vspeed, self.cost_model.steal_cost(
+                                    dist, n, boundary, self._bytes_of(t)))
                             if best_bubble is None or score > best_bubble[0]:
                                 best_bubble = (score, q, t, w)
                         elif t.remaining > 0:
                             if not self._accepts(cpu, t):
                                 continue
                             score = self._steal_score(
-                                t.remaining, self.cost_model.steal_cost(
-                                    dist, 1, boundary))
+                                t.remaining / vspeed,
+                                self.cost_model.steal_cost(
+                                    dist, 1, boundary, self._bytes_of(t)))
                             if best_thread is None or score > best_thread[0]:
                                 best_thread = (score, q, t, t.remaining)
         best = best_bubble or best_thread
@@ -499,7 +564,8 @@ class BubbleScheduler:
             n_moved = 1
         dist = self.topo.levels_crossed(cpu, victim.comp)
         cost = self.bill_model.steal_cost(
-            dist, n_moved, self.topo.crossing_level(cpu, victim.comp))
+            dist, n_moved, self.topo.crossing_level(cpu, victim.comp),
+            self._bytes_of(task))
         self.stats.stolen_threads += n_moved
         self.stats.steal_distance += dist
         self.stats.steal_distance_hist[dist] = \
@@ -665,6 +731,12 @@ class BubbleScheduler:
         units = sorted(units, key=lambda su: self._unit_weight(su[1]),
                        reverse=True)
         loads = [0.0] * len(comps)
+        # heterogeneous-speed LPT: a destination's effective completion
+        # time is its dealt load divided by its host's speed, so slow
+        # hosts fill up "sooner" and receive proportionally less work.
+        # Uniform speeds (no speed_cb) divide by 1.0 and reproduce the
+        # historical deal — same argmin, same stable ties.
+        speeds = [self._speed_of(c) for c in comps]
         placed: list[list[Task]] = [[] for _ in comps]
         assignments: list[tuple[Task, Component]] = []
         ingest: dict[str, float] = {}
@@ -684,16 +756,17 @@ class BubbleScheduler:
 
         for src, u in units:
             fits = [i for i in range(len(comps)) if comp_accepts(i, u)]
+            w = self._unit_weight(u)
             if not fits:
                 refused += 1
                 comp = self.topo.root
             else:
-                i = min(fits, key=loads.__getitem__)
+                i = min(fits, key=lambda j: (loads[j] + w) / speeds[j])
                 comp = comps[i]
-                loads[i] += self._unit_weight(u)
+                loads[i] += w
                 placed[i].append(u)
             move = model.rebalance_move_cost(
-                self.topo.crossing_between(src, comp))
+                self.topo.crossing_between(src, comp), self._bytes_of(u))
             cost += move
             extra = move - model.rebalance_per_move
             if extra > 0:

@@ -195,6 +195,20 @@ class Topology:
                 return x.level.name
         return None
 
+    def ancestor_at(self, comp: Component, level: str) -> Optional[Component]:
+        """``comp``'s ancestor (or itself) at ``level``, or ``None`` when the
+        component sits *above* that level — the machine-wide lists a
+        per-host property (speed, budget) cannot be pinned to.
+
+        This is how a consumer maps any queue component to its owning
+        machine region: the serving engine resolves a page group, a slot,
+        or a host list to the host whose execution speed prices it.
+        """
+        for node in comp.path():
+            if node.level.name == level:
+                return node
+        return None
+
     def levels_crossed(self, cpu: int, comp: Component) -> int:
         """Hierarchy levels a migration from ``comp``'s list crosses to
         reach ``cpu``.

@@ -48,6 +48,27 @@ class PagedKV(NamedTuple):
     v: jax.Array          # (num_pages, page_size, K, hd)
 
 
+def kv_page_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """Real HBM bytes ONE pool page index costs across the whole model.
+
+    Every attention layer owns its own K and V pool (reps-stacked per
+    stage), and all of them are sized by the same ``num_pages`` — so one
+    more page index buys ``page_size`` KV positions in *every* layer:
+
+        2 (k+v) x n_attn_layers x page_size x n_kv_heads x hd x itemsize
+
+    This is the ruler that converts an HBM byte budget into a pool size
+    (``PagedJaxModelBackend(hbm_bytes=...)``): pool capacity ==
+    budget // page bytes, instead of the ``slack_slots`` guess.
+    Attention-free models (pure recurrent stacks) price to 0 — they own
+    no pools and any budget sizes an empty layout.
+    """
+    n_attn = sum(reps * sum(1 for kind in pat if kind == "attn")
+                 for pat, reps in lm._stages(cfg))
+    itemsize = jnp.dtype(cfg.cdtype).itemsize
+    return 2 * n_attn * page_size * cfg.n_kv_heads * cfg.hd * itemsize
+
+
 def init_paged_state(cfg: ModelConfig, batch: int, num_pages: int,
                      page_size: int):
     """Decode states with paged attention KV.

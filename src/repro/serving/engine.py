@@ -104,6 +104,32 @@ SERVE_COST = StealCostModel(lock_penalty=0.5, level_penalty=0.25,
 # baseline for ``serve/multihost_steal_speedup``.
 FLAT_SERVE_COST = dataclasses.replace(SERVE_COST, level_table=())
 
+# The *bandwidth-priced* machine: the same boundary bases, plus a per-byte
+# term — a transfer's bill scales with the KV bytes it drags (``kv_bytes``
+# x live threads, the engine's own HBM-ledger ruler wired into the
+# scheduler as ``bytes_cb``).  Dragging a fat gang across a ``host``
+# boundary now costs proportionally more than a singleton at the same
+# distance, which is what the DCN actually charges.  The rates are
+# asymmetric on purpose: within-pod (``host``) moves ride the fast
+# interconnect (cheap per byte), cross-``pod`` moves ride the DCN — so a
+# byte-aware survey keeps heavy KV inside the pod while a byte-naive one
+# sees only the flat bases, whose cross/same ratio the per-byte term
+# roughly doubles.  A bandwidth-naive scheduler believes ``SERVE_COST``
+# (flat boundary tolls) while paying ``BW_SERVE_COST`` (``bill_model``):
+# the measurable baseline for ``serve/bandwidth_priced_speedup``.  With
+# every ``per_byte`` zero the triple form prices bit-identically to the
+# pair form, so SERVE_COST itself — and every golden trace — is untouched.
+BW_SERVE_COST = dataclasses.replace(
+    SERVE_COST, level_table=(("host", 3.0, 0.25), ("pod", 6.0, 2.0)))
+
+# Levels a ``slots_topology`` fleet deliberately does NOT price in the
+# level table: crossings below ``host`` (and the degenerate ``batch`` /
+# ``pod`` roots) fall back to the flat ``level_penalty`` per level
+# crossed — on-chip shuffles are latency, not DCN bandwidth.  The cost-
+# model coverage test pins every topology level to either this set or a
+# ``level_table`` entry, so a new level cannot silently price at zero.
+SERVE_FREE_LEVELS = frozenset({"batch", "page", "slot"})
+
 
 @dataclasses.dataclass
 class Request:
@@ -154,6 +180,19 @@ class EngineStats:
       count over those calls.  Host skew that placement hides shows up
       here: a flooded host runs every step near-full while its neighbours
       idle.  Single-host engines have one entry (the whole batch).
+    * ``host_skipped_steps[h]`` — straggler stalls: engine steps host
+      ``h`` had occupied slots but its speed credit had not reached a
+      whole decode yet (``host_speed[h] < 1``), so its batch sat still.
+      Always zero at nominal speed.  Effective per-host throughput is
+      ``host_active_slots[h] / engine steps`` (the ``host_throughput``
+      counter): a 0.5x host with full slots decodes half the tokens per
+      engine step a nominal host would.
+    * ``gang_splits`` / ``gang_split_members`` — HBM-aware gang
+      splitting: whole-gang admissions the HBM ledger refused that were
+      cheaper to split across sibling page groups (the bubble expanded
+      one level, overflow members re-homed) than to park until the home
+      group drained; ``gang_split_members`` counts the members actually
+      moved to siblings.
     """
 
     prefills: int = 0            # fresh REQUESTS prefilled (not calls)
@@ -172,9 +211,12 @@ class EngineStats:
     demotions: int = 0           # multilevel-feedback tier demotions
     hbm_slot_waits: int = 0      # aware: full-group slots skipping waves
     hbm_refusals: int = 0        # blind: claims bounced at splice time
+    gang_splits: int = 0         # gangs split across sibling page groups
+    gang_split_members: int = 0  # members re-homed by those splits
     # per-host execution ledger (sized by the engine at construction)
     host_decode_steps: list = dataclasses.field(default_factory=list)
     host_active_slots: list = dataclasses.field(default_factory=list)
+    host_skipped_steps: list = dataclasses.field(default_factory=list)
 
 
 def _fanout(sizes: list[int]):
@@ -375,7 +417,8 @@ class PagedJaxModelBackend:
     """
 
     def __init__(self, cfg, params, cache_len: int, *, page_size: int = 16,
-                 use_kernel: bool = False, slack_slots: Optional[int] = None):
+                 use_kernel: bool = False, slack_slots: Optional[int] = None,
+                 hbm_bytes: Optional[int] = None):
         import jax
         from repro.models import api, lm, paged
         assert not cfg.enc_layers, "paged serving: decoder-only models"
@@ -394,6 +437,16 @@ class PagedJaxModelBackend:
         # n_slots * pages_per_slot; ``slack_slots`` sizes it (default: one
         # extra fleet's worth — parked work is bounded by live requests)
         self.slack_slots = slack_slots
+        # ``hbm_bytes`` replaces the slack heuristic with the ledger: the
+        # pool holds exactly what the per-shard HBM byte budget buys
+        # (capacity == hbm_bytes // page bytes; the trash page rides on
+        # top — it is pool bookkeeping, not budgeted KV).  Parked pages
+        # stay resident in the pool, so on a budget-sized pool parked KV
+        # competes for the same real bytes the admission ledger governs —
+        # physical, unlike slack sizing, which quietly granted parked
+        # requests a second fleet's worth of HBM.
+        self.hbm_bytes = hbm_bytes
+        self.page_bytes = paged.kv_page_bytes(cfg, page_size)
         self.use_kernel = use_kernel
         self._decode = jax.jit(api.make_paged_decode_fn(cfg, use_kernel))
         self._prefill = api.make_prefill_fn(cfg, cache_len)
@@ -406,8 +459,15 @@ class PagedJaxModelBackend:
 
     # -- pool bookkeeping (host-side metadata) --------------------------------
     def init(self, n_slots: int) -> tuple:
-        slack = n_slots if self.slack_slots is None else self.slack_slots
-        num_pages = 1 + (n_slots + slack) * self.pages_per_slot
+        if self.hbm_bytes is not None and self.page_bytes > 0:
+            # ledger-sized pool: capacity is what the byte budget buys
+            num_pages = 1 + int(self.hbm_bytes) // self.page_bytes
+            assert num_pages > 1, \
+                f"hbm_bytes={self.hbm_bytes} buys no page " \
+                f"(page_bytes={self.page_bytes})"
+        else:
+            slack = n_slots if self.slack_slots is None else self.slack_slots
+            num_pages = 1 + (n_slots + slack) * self.pages_per_slot
         shard = _PagedShard(
             states=self._paged.init_paged_state(
                 self.cfg, n_slots, num_pages, self.page_size),
@@ -755,6 +815,8 @@ class ServingEngine:
                  capacity_aware: bool = True,
                  per_host_decode: bool = True, wave_prefill: bool = True,
                  dcn_rebalance: bool = True,
+                 host_speed=None, speed_aware: bool = True,
+                 gang_split: bool = False,
                  depth_skew: int = 2, window: int = 16,
                  min_backlog: int = 2, cooldown: Optional[int] = None,
                  sla_classes: Optional[dict] = None, preempt: bool = False,
@@ -791,11 +853,39 @@ class ServingEngine:
         self.hbm_used = [0.0] * len(self.topo.components("page"))
         self._slot_charged = [False] * n_slots   # slot holds a reservation
         self.capacity_aware = capacity_aware and hbm_budget is not None
+        # -- straggler model: per-host relative decode speed in (0, 1] --
+        # ``host_speed[h]`` < 1 makes host h's decode_step span more than
+        # one engine step (a speed-credit accumulator in :meth:`step`);
+        # ``speed_aware`` additionally lets the scheduler SEE the skew
+        # (the costed steal survey and the LPT rebalance deal weigh
+        # backlog by host speed through ``speed_of``).  ``speed_aware=
+        # False`` with a nonzero skew is the lockstep-assuming baseline:
+        # the machine still runs slow, the scheduler still deals to it.
+        n_hosts_total = (len(self.topo.components("host"))
+                         if self._host_idx is not None else 1)
+        if host_speed is not None:
+            host_speed = [float(s) for s in host_speed]
+            assert len(host_speed) == n_hosts_total, \
+                f"host_speed needs one entry per host " \
+                f"({len(host_speed)} != {n_hosts_total})"
+            assert all(0.0 < s <= 1.0 for s in host_speed), host_speed
+            assert per_host_decode or self._host_idx is None, \
+                "host_speed on a multi-host fleet needs per_host_decode"
+        self.host_speed = host_speed
+        self.speed_aware = speed_aware and host_speed is not None
+        self._speed_by_host = (
+            {id(h): s for h, s in zip(self.topo.components("host"),
+                                      host_speed)}
+            if host_speed is not None and self._host_idx is not None else {})
+        self.gang_split = gang_split
         self.runtime = SchedulerRuntime(
             self.topo, self.policy, on_data_migrate=self._on_kv_migrate,
             can_accept=(self._can_accept
                         if self.capacity_aware and mode == "runtime"
-                        else None))
+                        else None),
+            bytes_of=(self._kv_need if mode == "runtime" else None),
+            speed_of=(self._host_speed_of
+                      if self.speed_aware and mode == "runtime" else None))
         # this engine bills a rebalance's level-table tolls where the KV
         # lands (admission freezes on the receiving page groups, see
         # _maybe_rebalance), so opt into the scheduler's split billing —
@@ -822,6 +912,17 @@ class ServingEngine:
             self._exec_groups = [(0, n_slots)]
         self._group_of = [g for g, (lo, hi) in enumerate(self._exec_groups)
                           for _ in range(lo, hi)]   # slot -> exec group
+        # per-exec-group decode speed + the speed-credit accumulator: a
+        # group decodes when its credit reaches one whole step.  Exec
+        # groups are the hosts' slot ranges in host-component order
+        # (asserted above when host_speed is given), so index g maps 1:1.
+        if host_speed is None:
+            self._group_speed = [1.0] * len(self._exec_groups)
+        elif len(self._exec_groups) == len(host_speed):
+            self._group_speed = list(host_speed)
+        else:                        # single exec group (single host)
+            self._group_speed = [host_speed[0]]
+        self._host_credit = [0.0] * len(self._exec_groups)
         self._states = []
         tok_shards = []
         for lo, hi in self._exec_groups:
@@ -868,7 +969,8 @@ class ServingEngine:
         self._gaps: dict[str, list] = {}
         self.stats = EngineStats(
             host_decode_steps=[0] * len(self._exec_groups),
-            host_active_slots=[0] * len(self._exec_groups))
+            host_active_slots=[0] * len(self._exec_groups),
+            host_skipped_steps=[0] * len(self._exec_groups))
         self.steps = 0
         self.completed: list[Request] = []
 
@@ -1028,6 +1130,16 @@ class ServingEngine:
             live = sum(1 for th in task.threads() if th.remaining > 0)
             return self.kv_bytes * max(live, 1)
         return self.kv_bytes
+
+    def _host_speed_of(self, comp) -> float:
+        """The scheduler's speed ruler: relative decode speed of the host
+        owning ``comp`` (a page group, a slot, or the host list itself).
+        Components above the host level — the machine-wide lists — have no
+        one owner and run at nominal speed."""
+        if not self._speed_by_host:
+            return 1.0
+        h = self.topo.ancestor_at(comp, "host")
+        return self._speed_by_host[id(h)] if h is not None else 1.0
 
     def _can_accept(self, cpu: int, task, pending=()) -> bool:
         """The scheduler's capacity veto: can ``cpu``'s page group hold the
@@ -1560,6 +1672,120 @@ class ServingEngine:
         self._cost_mark = self.sched.stats.steal_cost
         self._steps_since_rebalance = 0
 
+    # -- HBM-aware gang splitting ----------------------------------------------
+    def _split_wait_quote(self, page: int, deficit: float) -> float:
+        """Engine steps until page group ``page`` frees ``deficit`` KV
+        bytes by residents finishing on their own — the park-and-wait
+        alternative a gang split is quoted against.  The k-th soonest
+        resident completion covers a k-reservation deficit; a group
+        without enough residents to ever free it quotes infinite."""
+        k = int(np.ceil(deficit / self.kv_bytes - 1e-9))
+        if k <= 0:
+            return 0.0
+        rems = sorted(
+            req.max_new_tokens - len(req.out_tokens)
+            for leaf in self.topo.components("page")[page].leaves()
+            if (req := self.slot_req[leaf.cpu]) is not None and not req.done)
+        if len(rems) < k:
+            return float("inf")
+        return float(rems[k - 1])
+
+    def _maybe_split_gang(self, now: float) -> None:
+        """When the HBM ledger refuses a whole-gang admission, quote
+        splitting the gang across sibling page groups of its host against
+        parking until the home group drains, and buy the cheaper.
+
+        The stuck state this resolves: a closed gang bubble homed on a
+        page-level list whose group cannot hold every live member.  The
+        group's own slots skip their scheduler calls (capacity-aware
+        admission), and every other group's steal survey refuses the
+        bubble whole (``_can_accept`` needs the full gang's KV), so
+        without this pass the gang waits for its home group to drain —
+        correct, but not always cheapest.  The split is the paper's
+        bubble-burst semantics applied one level early: the bubble is
+        expanded onto its host's list (scheduling area widened one
+        level), members that fit stay on the home group, and the overflow
+        is re-homed to the siblings with headroom.  The quote prices each
+        re-homed member's ``page`` crossing at ``cost_model`` (belief)
+        prices — byte-priced under a bandwidth table, since what moves is
+        KV — and the bill lands at ``bill_model`` (machine) prices as
+        admission stalls, transfer tolls on the receiving groups."""
+        if not self.gang_split or self.mode != "runtime" \
+                or self.hbm_budget is None:
+            return
+        for page_comp in self.topo.components("page"):
+            q = self.sched.queues.queue_of(page_comp)
+            for b in list(q.tasks):
+                if not isinstance(b, Bubble) or b.burst or b.done():
+                    continue
+                live = [th for th in b.threads() if self._live_thread(th)]
+                if not live:
+                    continue
+                need = self.kv_bytes * len(live)
+                if need <= self._headroom(page_comp.index) + 1e-9:
+                    continue          # fits whole: normal burst admission
+                self._split_gang(b, q, page_comp, live, now)
+
+    def _split_gang(self, b: Bubble, q, page_comp, live: list, now: float
+                    ) -> None:
+        """Quote and (when cheaper than waiting) commit one gang split."""
+        kv = self.kv_bytes
+        host = self.topo.ancestor_at(page_comp, "host") or self.topo.root
+        sibs = [c for c in self.topo.components("page")
+                if c is not page_comp and host in c.path()]
+        room = {id(c): self._headroom(c.index) for c in sibs}
+        fit_home = int((self._headroom(page_comp.index) + 1e-9) // kv)
+        plan: list[tuple] = []        # (member, destination page group)
+        for th in live[fit_home:]:
+            dest = max(sibs, key=lambda c: room[id(c)], default=None)
+            if dest is None or room[id(dest)] < kv - 1e-9:
+                return       # siblings cannot absorb the overflow: park
+            room[id(dest)] -= kv
+            plan.append((th, dest))
+        cm = self.sched.cost_model
+        split_quote = sum(
+            cm.rebalance_move_cost(
+                self.topo.crossing_between(page_comp, dest), kv)
+            for _, dest in plan)
+        deficit = kv * len(live) - self._headroom(page_comp.index)
+        if split_quote >= self._split_wait_quote(page_comp.index, deficit):
+            return                    # waiting is quoted cheaper: park
+        # buy the split: expand the bubble one level up (its regeneration
+        # home is now the host's list) with explicit member placement
+        q.remove(b)
+        b.burst = True
+        b.released_at = now
+        b.home_list = self.sched.queues.queue_of(host)
+        for th in live[:fit_home]:
+            q.push(th)
+        for th, dest in plan:
+            self.sched.queues.queue_of(dest).push(th)
+        # the bill, at machine (bill_model) prices: the flat descriptor
+        # part stalls the home group's first slot (whose refused admission
+        # triggered the quote); each receiving group's slots wait out the
+        # byte-priced transfer toll of the KV dealt into it — the same
+        # split billing discipline as `_maybe_rebalance`'s ingest side
+        bm = self.sched.bill_model
+        flat = bm.rebalance_per_move * len(plan)
+        if flat > 0:
+            home_slot = next(iter(page_comp.leaves())).cpu
+            self._stall[home_slot] += flat
+            self.stats.stall_steps += flat
+        tolls: dict[int, tuple] = {}      # id(dest) -> (dest, toll)
+        for th, dest in plan:
+            move = bm.rebalance_move_cost(
+                self.topo.crossing_between(page_comp, dest), kv)
+            extra = move - bm.rebalance_per_move
+            if extra > 0:
+                prev = tolls.get(id(dest), (dest, 0.0))[1]
+                tolls[id(dest)] = (dest, prev + extra)
+        for dest, toll in tolls.values():
+            for leaf in dest.leaves():
+                self._stall[leaf.cpu] += toll
+                self.stats.stall_steps += toll
+        self.stats.gang_splits += 1
+        self.stats.gang_split_members += len(plan)
+
     # -- the decode loop -------------------------------------------------------
     def step(self) -> int:
         """One engine iteration: consider a rebalance, admit, decode one
@@ -1578,6 +1804,10 @@ class ServingEngine:
         self._maybe_rebalance(now)
         self._maybe_preempt(now)
         self._admit(now)
+        # after admission, so the ledger reflects what actually occupies
+        # each group — a pre-admission check would quote deficits against
+        # reservations the same wave's claims are about to take
+        self._maybe_split_gang(now)
         active = [s for s in range(self.n_slots)
                   if self.slot_req[s] is not None]
         for s in range(self.n_slots):
@@ -1589,6 +1819,15 @@ class ServingEngine:
             active_g = [s for s in active if lo <= s < hi]
             if not active_g:
                 continue                     # idle host: no decode launched
+            # straggler model: a host earns ``speed`` credit per engine
+            # step its batch is occupied and decodes only on a whole
+            # credit — a 0.5x host's decode_step spans two engine steps.
+            # Nominal speed earns exactly 1.0 per step: bit-identical.
+            self._host_credit[g] += self._group_speed[g]
+            if self._host_credit[g] < 1.0 - 1e-9:
+                self.stats.host_skipped_steps[g] += 1
+                continue                     # slow host: decode not done yet
+            self._host_credit[g] -= 1.0
             next_tok, self._states[g] = self.backend.decode(
                 self.tokens[lo:hi], self._states[g])
             self.stats.host_decode_steps[g] += 1
@@ -1694,9 +1933,17 @@ class ServingEngine:
             "stall_steps": round(self.stats.stall_steps, 4),
             "hbm_slot_waits": self.stats.hbm_slot_waits,
             "hbm_refusals": self.stats.hbm_refusals,
+            "gang_splits": self.stats.gang_splits,
+            "gang_split_members": self.stats.gang_split_members,
             "preemptions": self.stats.preemptions,
             "preempt_parks": self.stats.preempt_parks,
             "demotions": self.stats.demotions,
             "host_decode_steps": list(self.stats.host_decode_steps),
             "host_active_slots": list(self.stats.host_active_slots),
+            "host_skipped_steps": list(self.stats.host_skipped_steps),
+            # effective per-host throughput: decoded slot-tokens per
+            # engine step — what a straggler actually delivers
+            "host_throughput": [
+                round(a / max(self.steps, 1), 4)
+                for a in self.stats.host_active_slots],
         }

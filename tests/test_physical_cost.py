@@ -1,0 +1,399 @@
+"""The physical cost model: bandwidth-priced transfers, straggler-aware
+host speed, and HBM-aware gang splitting.
+
+Three rulers turn the abstract steal/rebalance prices into machine
+physics, each with a strict backward-compatibility invariant this module
+pins:
+
+* **per-byte pricing** — ``StealCostModel.level_table`` entries may carry
+  a third element, the per-byte rate of that boundary; every bill then
+  scales with the KV bytes a move drags (``bytes_cb``).  With every
+  ``per_byte`` zero (or the historical pair form) the prices are
+  bit-identical — property-tested over a ``(base, per_byte)`` grid.
+* **host speed** — ``speed_cb`` weighs the costed steal survey's victim
+  backlog (work / victim speed), refuses drags from faster hosts onto
+  slower ones, and divides the LPT rebalance deal's loads by speed.
+  Uniform speed selects identically to no callback at all.
+* **gang splitting** — an HBM-refused whole gang is quoted a split across
+  its host's sibling page groups against park-and-wait, and the engine
+  buys the cheaper.  Splitting never changes a decode stream.
+
+Satellites pinned here too: the serving cost tables cover every
+``slots_topology`` level (S2) and ``PagedJaxModelBackend(hbm_bytes=...)``
+sizes its pool from the byte ledger (S1).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ZERO_COST, BubbleScheduler, StealCostModel,
+                        novascale_16, thread)
+from repro.serving import (BW_SERVE_COST, SERVE_COST, SERVE_FREE_LEVELS,
+                           ServingEngine, StubModelBackend, slots_topology)
+
+# ---------------------------------------------------------------------------
+# S3: (base, per_byte) property grid on the cost model itself
+# ---------------------------------------------------------------------------
+
+BASES = (0.0, 2.5, 10.0)
+RATES = (0.0, 0.125, 1.5)
+BYTES = (0.0, 1.0, 7.5, 64.0)
+
+
+class TestPerBytePricing:
+    @pytest.mark.parametrize("base", BASES)
+    def test_pair_and_zero_rate_triple_price_identically(self, base):
+        """The historical pair form IS the triple form at per_byte=0: every
+        price — steal, rebalance move, the free-steals switch — matches
+        bit for bit, at any bytes_moved."""
+        pair = StealCostModel(lock_penalty=0.5, thread_penalty=0.125,
+                              level_table=(("node", base),))
+        triple = StealCostModel(lock_penalty=0.5, thread_penalty=0.125,
+                                level_table=(("node", base, 0.0),))
+        for b in BYTES:
+            for dist in (0, 1, 2):
+                assert pair.steal_cost(dist, 2, "node", b) == \
+                    triple.steal_cost(dist, 2, "node", b)
+            assert pair.rebalance_move_cost("node", b) == \
+                triple.rebalance_move_cost("node", b)
+        assert pair.steals_are_free == triple.steals_are_free
+        assert pair.byte_cost("node") == triple.byte_cost("node") == 0.0
+
+    @pytest.mark.parametrize("base", BASES)
+    @pytest.mark.parametrize("rate", RATES)
+    def test_prices_linear_and_monotone_in_bytes(self, base, rate):
+        """cost(bytes) is exactly base-part + rate * bytes: nondecreasing,
+        and the increment between any two byte counts is the rate times
+        the byte delta (no hidden rounding or coupling)."""
+        cm = StealCostModel(lock_penalty=1.0,
+                            level_table=(("node", base, rate),))
+        prev = None
+        for b in BYTES:
+            steal = cm.steal_cost(2, 1, "node", b)
+            move = cm.rebalance_move_cost("node", b)
+            assert steal == pytest.approx(
+                cm.steal_cost(2, 1, "node", 0.0) + rate * b)
+            assert move == pytest.approx(
+                cm.rebalance_move_cost("node", 0.0) + rate * b)
+            if prev is not None:
+                assert steal >= prev - 1e-12
+            prev = steal
+        # un-tabled boundaries never pick up a byte term
+        assert cm.steal_cost(2, 1, "cpu", 64.0) == \
+            cm.steal_cost(2, 1, "cpu", 0.0)
+        assert cm.byte_cost("cpu") == 0.0
+
+    def test_per_byte_alone_makes_steals_costed(self):
+        """A nonzero per-byte rate is a price: it must flip the scheduler
+        into the costed-survey regime even when every base is zero."""
+        assert not StealCostModel(
+            level_table=(("node", 0.0, 0.5),)).steals_are_free
+        assert StealCostModel(
+            level_table=(("node", 0.0, 0.0),)).steals_are_free
+        assert ZERO_COST.steals_are_free
+
+    def test_byte_naive_belief_byte_priced_bill(self):
+        """The bandwidth harness in unit form: the survey ranks with the
+        flat cost_model while the ledger charges the byte-priced
+        bill_model — same victim choice, heavier bill."""
+        flat = StealCostModel(lock_penalty=1.0, level_penalty=0.5,
+                              level_table=(("node", 2.0),))
+        bw = dataclasses.replace(flat, level_table=(("node", 2.0, 0.5),))
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=flat, bill_model=bw)
+        sched.bytes_cb = lambda task: 8.0
+        sched.queues.queue_of(topo.components("node")[3]).push(thread(9.0))
+        assert sched._steal_pass(0) is not None
+        # belief: flat node crossing;  charge: + 0.5/byte * 8 bytes
+        assert sched.stats.last_steal_cost == \
+            pytest.approx(1.0 + 2.0 * 2 + 0.5 * 8.0)
+
+    def test_survey_prefers_lighter_bytes_at_equal_distance(self):
+        """Byte-priced belief: loot that drags less KV wins work-per-cost
+        even against slightly heavier work; the flat belief (per_byte=0)
+        keeps the heavier loot."""
+        bw = StealCostModel(lock_penalty=1.0,
+                            level_table=(("node", 2.0, 1.0),))
+        flat = dataclasses.replace(bw, level_table=(("node", 2.0),))
+        by_name = {"fat": 20.0, "slim": 1.0}
+        for model, want in ((bw, "slim"), (flat, "fat")):
+            topo = novascale_16()
+            sched = BubbleScheduler(topo, cost_model=model)
+            sched.bytes_cb = lambda t: by_name[t.name]
+            sched.queues.queue_of(topo.components("node")[2]).push(
+                thread(10.0, name="fat"))
+            sched.queues.queue_of(topo.components("node")[3]).push(
+                thread(9.0, name="slim"))
+            got = sched._steal_pass(0)
+            assert got is not None and got[1].name == want, model
+
+
+# ---------------------------------------------------------------------------
+# host speed: the survey's rescue preference, the thief-side refusal, the
+# speed-weighted LPT deal
+# ---------------------------------------------------------------------------
+
+def _speed_by_node(topo, speeds):
+    nodes = topo.components("node")
+    table = {id(n): s for n, s in zip(nodes, speeds)}
+
+    def speed_of(comp):
+        for node in comp.path():
+            if id(node) in table:
+                return table[id(node)]
+        return 1.0
+    return speed_of
+
+
+class TestHostSpeed:
+    CM = StealCostModel(lock_penalty=1.0, level_penalty=0.5)
+
+    def test_survey_rescues_slow_victim_backlog(self):
+        """Equal work at equal distance: the victim whose host drains it
+        slowest has the larger effective backlog and wins the survey."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.CM)
+        sched.speed_cb = _speed_by_node(topo, (1.0, 1.0, 0.25, 1.0))
+        sched.queues.queue_of(topo.components("node")[2]).push(
+            thread(9.0, name="slow"))
+        sched.queues.queue_of(topo.components("node")[3]).push(
+            thread(9.0, name="fast"))
+        got = sched._steal_pass(0)
+        assert got is not None and got[1].name == "slow"
+
+    def test_slow_thief_refuses_faster_victims(self):
+        """Work never drains toward a slower host: a straggler's idle cpu
+        leaves a faster victim's backlog alone (the victim finishes it
+        sooner than the thief ever could)."""
+        topo = novascale_16()
+        sched = BubbleScheduler(topo, cost_model=self.CM)
+        sched.speed_cb = _speed_by_node(topo, (0.25, 1.0, 1.0, 1.0))
+        sched.queues.queue_of(topo.components("node")[3]).push(thread(9.0))
+        assert sched._steal_pass(0) is None          # cpu 0 is on node 0
+        # an equally slow victim is fair game (and still rescued)
+        sched.speed_cb = _speed_by_node(topo, (0.25, 1.0, 1.0, 0.25))
+        assert sched._steal_pass(0) is not None
+
+    def test_uniform_speed_cb_is_no_callback(self):
+        """speed_cb returning 1.0 everywhere must pick the same loot (and
+        price it the same) as no callback at all."""
+        for cb in (None, lambda comp: 1.0):
+            topo = novascale_16()
+            sched = BubbleScheduler(topo, cost_model=self.CM)
+            sched.speed_cb = cb
+            sched.queues.queue_of(topo.components("node")[2]).push(
+                thread(4.0, name="light"))
+            sched.queues.queue_of(topo.components("node")[3]).push(
+                thread(9.0, name="heavy"))
+            got = sched._steal_pass(0)
+            assert got is not None and got[1].name == "heavy"
+            assert sched.stats.last_steal_cost == \
+                pytest.approx(1.0 + 0.5 * 2)
+
+    def test_lpt_deal_weighs_loads_by_speed(self):
+        """The machine-wide re-spread divides destination loads by host
+        speed: a 4x-slower node receives roughly a quarter of the work a
+        nominal node does (and exactly the uniform deal at speed 1.0)."""
+        def deal(speeds):
+            topo = novascale_16()
+            sched = BubbleScheduler(topo, cost_model=self.CM)
+            if speeds is not None:
+                sched.speed_cb = _speed_by_node(topo, speeds)
+            for _ in range(16):
+                sched.queues.global_queue().push(thread(3.0))
+            assert sched.rebalance(0, level="node") == 16
+            return [len(sched.queues.queue_of(n))
+                    for n in topo.components("node")]
+        uniform, flat = deal((1.0,) * 4, ), deal(None)
+        assert uniform == flat                      # speed 1.0: identical
+        skewed = deal((0.25, 1.0, 1.0, 1.0))
+        assert skewed[0] < min(skewed[1:])          # straggler dealt least
+        assert sum(skewed) == 16                    # nothing lost
+        assert skewed[0] <= uniform[0] // 2
+
+
+# ---------------------------------------------------------------------------
+# engine integration: the straggler execution model and gang splitting
+# ---------------------------------------------------------------------------
+
+def _submit_mixed(eng):
+    rng = np.random.default_rng(0)
+    n = 0
+    for _ in range(10):
+        eng.submit(rng.integers(1, 250, 8), 6, home="page0")
+        n += 1
+    for _ in range(6):
+        eng.submit(rng.integers(1, 250, 8), 10, home="page1")
+        n += 1
+    return n
+
+
+def _streams(eng):
+    return {r.rid: tuple(r.out_tokens) for r in eng.completed}
+
+
+class TestStragglerEngine:
+    def _run(self, **kw):
+        eng = ServingEngine(None, None, n_slots=8, hosts=2,
+                            backend=StubModelBackend(), mode="runtime",
+                            cost_model=SERVE_COST, **kw)
+        n = _submit_mixed(eng)
+        eng.run(max_steps=4000)
+        assert len(eng.completed) == n
+        return eng
+
+    def test_uniform_speed_is_bit_identical(self):
+        """host_speed=(1, 1) must reproduce the no-host_speed engine
+        exactly: steps, streams, and every counter."""
+        base = self._run()
+        unif = self._run(host_speed=(1.0, 1.0))
+        assert unif.steps == base.steps
+        assert _streams(unif) == _streams(base)
+        assert unif.counters() == base.counters()
+
+    def test_slow_host_spans_steps_streams_unchanged(self):
+        """A 0.5x host decodes every other step (skips accounted), takes
+        measurably longer, and no token of any stream changes — speed is
+        execution latency, never content."""
+        base = self._run()
+        slow = self._run(host_speed=(0.5, 1.0))
+        naive = self._run(host_speed=(0.5, 1.0), speed_aware=False)
+        assert _streams(slow) == _streams(base) == _streams(naive)
+        assert slow.steps > base.steps
+        assert slow.counters()["host_skipped_steps"][0] > 0
+        assert slow.counters()["host_skipped_steps"][1] == 0
+        # per-host effective throughput surfaces the straggler
+        tp = slow.counters()["host_throughput"]
+        assert tp[0] < tp[1]
+
+
+class TestGangSplit:
+    def _engine(self, hbm_budget=4.0, **kw):
+        return ServingEngine(None, None, n_slots=16,
+                             backend=StubModelBackend(), mode="runtime",
+                             hbm_budget=hbm_budget, kv_bytes=1.0,
+                             depth_skew=99, **kw)
+
+    def _submit(self, eng):
+        rng = np.random.default_rng(0)
+        n = 0
+        for _ in range(4):                   # residents fill page0
+            eng.submit(rng.integers(1, 250, 8), 24, home="page0")
+            n += 1
+        for _ in range(6):                   # oversized gang, same home
+            eng.submit(rng.integers(1, 250, 8), 10, gang="big",
+                       home="page0")
+            n += 1
+        return n
+
+    def test_split_rehomes_overflow_and_preserves_streams(self):
+        split = self._engine(cost_model=SERVE_COST, gang_split=True)
+        park = self._engine(cost_model=SERVE_COST, gang_split=False)
+        ns, np_ = self._submit(split), self._submit(park)
+        split.run(max_steps=4000), park.run(max_steps=4000)
+        assert len(split.completed) == ns and len(park.completed) == np_
+        assert _streams(split) == _streams(park)
+        c = split.counters()
+        assert c["gang_splits"] == 1
+        assert c["gang_split_members"] == 6       # none fit the full home
+        assert park.counters()["gang_splits"] == 0
+        assert split.steps < park.steps           # the split paid off
+        for eng in (split, park):                 # ledger never overdrawn
+            assert all(0.0 <= u <= eng.hbm_budget + 1e-9
+                       for u in eng.hbm_used), eng.hbm_used
+
+    def test_quote_parks_when_waiting_is_cheaper(self):
+        """Pricey page crossings + residents about to finish: the wait
+        quote undercuts the split quote and the gang parks (no split
+        booked), yet still completes."""
+        pricey = dataclasses.replace(SERVE_COST,
+                                     level_table=(("page", 50.0),))
+        eng = self._engine(hbm_budget=8.0, cost_model=pricey,
+                           gang_split=True)
+        rng = np.random.default_rng(0)
+        n = 0
+        for _ in range(4):                   # residents done in 3 steps
+            eng.submit(rng.integers(1, 250, 8), 3, home="page0")
+            n += 1
+        for _ in range(5):                   # deficit 1: one member over
+            eng.submit(rng.integers(1, 250, 8), 8, gang="big",
+                       home="page0")
+            n += 1
+        eng.run(max_steps=4000)
+        assert len(eng.completed) == n
+        assert eng.counters()["gang_splits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# S2: the serving cost tables cover every slots_topology level
+# ---------------------------------------------------------------------------
+
+class TestLevelCoverage:
+    @pytest.mark.parametrize("pods", [1, 2, 3, 4])
+    @pytest.mark.parametrize("hosts", [1, 2, 3, 4])
+    def test_every_level_tabled_or_deliberately_free(self, pods, hosts):
+        """No topology a ``slots_topology`` fleet can build may contain a
+        level the serving cost models neither price in their table nor
+        list as deliberately free — a new level must be priced on
+        purpose, not silently at zero."""
+        topo = slots_topology(4 * pods * hosts, hosts=hosts, pods=pods)
+        for model in (SERVE_COST, BW_SERVE_COST):
+            tabled = {entry[0] for entry in model.level_table}
+            for name in topo.level_names():
+                assert name in tabled or name in SERVE_FREE_LEVELS, \
+                    (name, pods, hosts, model.level_table)
+
+    def test_tables_price_host_and_pod(self):
+        for model in (SERVE_COST, BW_SERVE_COST):
+            tabled = {entry[0] for entry in model.level_table}
+            assert {"host", "pod"} <= tabled
+        # the bandwidth table is the flat table plus per-byte rates only
+        assert [(e[0], e[1]) for e in BW_SERVE_COST.level_table] == \
+            [(e[0], e[1]) for e in SERVE_COST.level_table]
+        assert all(len(e) > 2 and e[2] > 0
+                   for e in BW_SERVE_COST.level_table)
+
+
+# ---------------------------------------------------------------------------
+# S1: the paged backend's pool is sized by the HBM byte ledger
+# ---------------------------------------------------------------------------
+
+class TestHbmSizedPool:
+    def test_page_bytes_formula(self):
+        from repro.configs import get_config
+        from repro.models import lm, paged
+        import jax.numpy as jnp
+        cfg = get_config("yi-6b").reduced(vocab=97)
+        got = paged.kv_page_bytes(cfg, 16)
+        n_attn = sum(reps * sum(1 for k in pat if k == "attn")
+                     for pat, reps in lm._stages(cfg))
+        assert n_attn > 0
+        assert got == 2 * n_attn * 16 * cfg.n_kv_heads * cfg.hd * \
+            jnp.dtype(cfg.cdtype).itemsize
+
+    def test_pool_capacity_is_budget_over_page_bytes(self):
+        """capacity == hbm_bytes // page_bytes exactly: a budget of
+        k * page_bytes + remainder buys k usable pages (the trash page
+        rides on top, unbudgeted)."""
+        import jax
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.serving import PagedJaxModelBackend
+        cfg = get_config("yi-6b").reduced(vocab=97)
+        params = api.init(cfg, jax.random.PRNGKey(0))
+        pb = PagedJaxModelBackend(cfg, params, 32, page_size=8)
+        budget = 7 * pb.page_bytes + pb.page_bytes // 2
+        ledger = PagedJaxModelBackend(cfg, params, 32, page_size=8,
+                                      hbm_bytes=budget)
+        shard, _ = ledger.init(2)
+        assert len(shard.free) == budget // ledger.page_bytes == 7
+        assert shard.table.shape == (2, 32 // 8)
+        # no budget: the historical slack heuristic, untouched
+        shard2, _ = pb.init(2)
+        assert len(shard2.free) == (2 + 2) * (32 // 8)
+        # a budget too small for one page is a hard error, not a 0-pool
+        with pytest.raises(AssertionError):
+            PagedJaxModelBackend(cfg, params, 32, page_size=8,
+                                 hbm_bytes=3).init(2)
