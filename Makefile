@@ -29,8 +29,9 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 .PHONY: test lint bench-smoke bench-gate serve-gate jax-serve-gate \
         golden-check bench
 
-# PYTEST_ARGS lets CI trim the run (e.g. deselect the 7-minute ep_a2a
-# compile test on slow shared runners) without changing the local gate
+# tier-1 skips tests marked slow (the 7-minute ep_a2a compile test runs
+# in its own non-required CI lane); override PYTEST_ARGS to change the cut
+PYTEST_ARGS ?= -m "not slow"
 test:
 	$(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
 
@@ -45,10 +46,12 @@ bench-gate: bench-smoke
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_smoke.json
 
 # order matters: serve_gangs' merge replaces every serve/ row, so the
-# open-loop merge (which replaces only its own rows) must run after it
+# open-loop and elastic merges (which replace only their own rows) must
+# run after it
 serve-gate:
 	$(PYTHON) benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/serve_open_loop.py --smoke --json BENCH_serve.json
+	$(PYTHON) benchmarks/serve_elastic.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_serve.json --prefix serve/
 
 jax-serve-gate:

@@ -1,0 +1,185 @@
+"""Elastic-fleet benchmark: live host loss and scale-out under load.
+
+Two gated rows, both replaying the same open-loop trace (Poisson arrivals,
+heavy-tailed lengths) against a 2-host fleet:
+
+* ``serve/host_loss_goodput`` — a host dies mid-trace.  The **elastic**
+  engine (``kill_host`` + checkpointed ``KVStore``) re-homes the dead
+  host's queued work one level up, restores each orphaned resident from
+  the newest KV snapshot or re-prefills it (whichever the bill model
+  quotes cheaper) and re-deals the survivors; the **baseline** is the
+  drain-and-restart operator (``restart=True``): every in-flight request
+  fleet-wide is torn down and re-prefilled from scratch, snapshots
+  unused.  The row is the goodput ratio — baseline steps over elastic
+  steps to drain the identical trace (higher is better, kind
+  ``speedup``).  Both runs must lose **zero** requests and produce
+  streams token-identical to an undisturbed fleet — elasticity may never
+  change what is decoded, only when.
+
+* ``serve/scaleout_speedup`` — a host joins mid-trace under the same
+  open-loop load (``join_host``: fresh slots, fresh backend shard, a
+  proactive re-spread bought only when the quote beats stealing).  The
+  row is steps-to-drain ignoring the new host over steps-to-drain using
+  it; the joiner must actually decode (its per-host ledger row is
+  asserted non-zero) and streams must match the no-join run exactly.
+
+Standalone entry point merges rows into the serve-gate JSON — run AFTER
+``serve_gangs.py`` (whose merge replaces every ``serve/`` row); like
+``serve_open_loop.py`` it only replaces its own rows::
+
+    python benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
+    python benchmarks/serve_open_loop.py --smoke --json BENCH_serve.json
+    python benchmarks/serve_elastic.py --smoke --json BENCH_serve.json
+    python benchmarks/check_regression.py benchmarks/baseline_smoke.json \
+        BENCH_serve.json --prefix serve/
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.checkpoint import KVStore
+from repro.core.bubble import reset_ids
+from repro.serving import (SERVE_COST, ServingEngine, StubModelBackend,
+                           make_trace)
+
+N_SLOTS = 16          # 2 hosts x 2 KV page groups x 4 slots
+TRACE = dict(steps=96, rate=1.5, seed=2)
+KILL_AT = 40          # mid-trace, deep in decode: HBM full of restorable KV
+JOIN_AT = 24          # early join: most of the trace still benefits
+CADENCE = 4
+
+
+def _engine(**kw) -> ServingEngine:
+    reset_ids()
+    return ServingEngine(None, None, n_slots=N_SLOTS, group=4, hosts=2,
+                         backend=StubModelBackend(), cost_model=SERVE_COST,
+                         **kw)
+
+
+def _streams(eng: ServingEngine) -> dict:
+    return {r.rid: tuple(r.out_tokens) for r in eng.completed}
+
+
+def _drive(eng: ServingEngine, trace, *, event_at=None, event=None,
+           max_steps: int = 60000):
+    """Open-loop drive with one mid-trace fleet event: submit each arrival
+    at its step, fire ``event(eng)`` once the clock reaches ``event_at``,
+    run to drain."""
+    pending = sorted(trace, key=lambda r: r.step)
+    i, fired = 0, False
+    while i < len(pending) or not eng._drained():
+        now = eng.steps
+        if event is not None and not fired and now >= event_at:
+            event(eng)
+            fired = True
+        while i < len(pending) and pending[i].step <= now:
+            r = pending[i]
+            i += 1
+            eng.submit(r.prompt, r.new_tokens, sla=r.sla, gang=r.gang)
+        eng.step()
+        assert eng.steps <= max_steps, "drive did not drain"
+    return eng
+
+
+def host_loss_row(trace, ref_streams: dict) -> tuple:
+    with tempfile.TemporaryDirectory() as tmp:
+        elastic = _drive(_engine(kv_store=KVStore(tmp, CADENCE)), trace,
+                         event_at=KILL_AT,
+                         event=lambda e: e.kill_host("host1"))
+    base = _drive(_engine(), trace, event_at=KILL_AT,
+                  event=lambda e: e.kill_host("host1", restart=True))
+    for eng, label in ((elastic, "elastic"), (base, "restart")):
+        got = _streams(eng)
+        assert len(got) == len(trace), \
+            f"{label}: lost requests ({len(got)}/{len(trace)})"
+        assert got == ref_streams, f"{label}: streams diverged from " \
+            "the undisturbed fleet"
+    c = elastic.counters()
+    assert c["kv_restores"] >= 1, "snapshot restore path never exercised"
+    assert base.counters()["kv_restores"] == 0     # baseline ignores store
+    c["restart_steps"] = base.steps
+    c["restart_reprefills"] = base.counters()["reprefills"]
+    ratio = base.steps / elastic.steps
+    return ("serve/host_loss_goodput", ratio,
+            f"kill@{KILL_AT}: drain {base.steps}->{elastic.steps} steps, "
+            f"{c['orphaned']} orphans ({c['kv_restores']} restored, "
+            f"{c['reprefills']} re-prefilled) vs restart "
+            f"{c['restart_reprefills']} re-prefills, 0 lost",
+            c, "speedup")
+
+
+def scaleout_row(trace, ref_streams: dict) -> tuple:
+    ignore = _drive(_engine(), trace)
+    join = _drive(_engine(), trace, event_at=JOIN_AT,
+                  event=lambda e: e.join_host())
+    for eng, label in ((ignore, "ignore"), (join, "join")):
+        got = _streams(eng)
+        assert len(got) == len(trace), f"{label}: lost requests"
+        assert got == ref_streams, f"{label}: streams diverged"
+    c = join.counters()
+    assert c["host_joins"] == 1
+    assert c["host_decode_steps"][-1] > 0, "the joined host never decoded"
+    c["ignore_steps"] = ignore.steps
+    ratio = ignore.steps / join.steps
+    return ("serve/scaleout_speedup", ratio,
+            f"join@{JOIN_AT}: drain {ignore.steps}->{join.steps} steps, "
+            f"joiner decoded {c['host_decode_steps'][-1]} steps",
+            c, "speedup")
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    trace = make_trace(**TRACE)
+    ref = _drive(_engine(), trace)     # the undisturbed fleet: stream oracle
+    assert len(ref.completed) == len(trace)
+    ref_streams = _streams(ref)
+    return [host_loss_row(trace, ref_streams),
+            scaleout_row(trace, ref_streams)]
+
+
+def merge_into_json(rows: list[tuple], path: str) -> None:
+    """Replace only this module's rows (``serve_gangs`` owns the wholesale
+    ``serve/`` replace; this must run after it)."""
+    doc = {"schema": 1, "suite": "smoke", "rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc.get("schema") == 1, doc.get("schema")
+        mine = {name for name, *_ in rows}
+        doc["rows"] = [r for r in doc["rows"] if r["name"] not in mine]
+    for name, v, d, counters, kind in rows:
+        doc["rows"].append({"name": name, "value": round(v, 6),
+                            "kind": kind, "derived": d,
+                            "counters": counters})
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# merged {len(rows)} elastic rows into {path}", file=sys.stderr)
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        json_path = argv[i + 1] if i + 1 < len(argv) and \
+            not argv[i + 1].startswith("-") else "BENCH_smoke.json"
+    elif smoke:
+        json_path = "BENCH_smoke.json"
+    rows = run(smoke=smoke)
+    for name, v, d, _, kind in rows:
+        print(f"{name},{v:.4f},{d}")
+    if json_path:
+        merge_into_json(rows, json_path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,5 @@
 from .store import latest_step, manifest_extra, restore, save
+from .kv_store import KVSnapshot, KVStore
 
-__all__ = ["save", "restore", "latest_step", "manifest_extra"]
+__all__ = ["save", "restore", "latest_step", "manifest_extra",
+           "KVStore", "KVSnapshot"]

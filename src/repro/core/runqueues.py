@@ -113,6 +113,35 @@ class QueueHierarchy:
         self.lookups = 0
         self.retries = 0
 
+    # -- elasticity ----------------------------------------------------------
+    def sync(self) -> None:
+        """Re-sync queues and covering chains after a Topology mutation
+        (:meth:`Topology.remove_component` / ``add_component``).
+
+        Queues of detached components must already be empty — the caller
+        re-homes their tasks *before* the surgery (the serving engine folds
+        them one level up, the paper's §3.3.3 regeneration move) — and are
+        dropped; new components get fresh empty queues; the per-cpu covering
+        chains are rebuilt from the live leaves only, so dead cpus simply
+        stop being lookup entry points."""
+        live: dict[int, RunQueue] = {}
+
+        def attach(comp: Component) -> None:
+            q = self.queues.get(id(comp))
+            live[id(comp)] = q if q is not None else RunQueue(comp)
+            for c in comp.children:
+                attach(c)
+
+        attach(self.topo.root)
+        for key, q in self.queues.items():
+            if key not in live:
+                assert not q.tasks, \
+                    f"detached queue {q.comp.name} still holds " \
+                    f"{len(q.tasks)} task(s); re-home them before sync()"
+        self.queues = live
+        self._cover = {leaf.cpu: [self.queues[id(c)] for c in leaf.path()[::-1]]
+                       for leaf in self.topo.root.leaves()}
+
     # -- placement ---------------------------------------------------------
     def queue_of(self, comp: Component) -> RunQueue:
         return self.queues[id(comp)]

@@ -18,7 +18,7 @@ and the placement planner all consume them.  TPU meshes map naturally:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Iterator, Optional, Sequence
 
 
@@ -104,11 +104,132 @@ class Topology:
         # consumer hot paths (scoped rebalances, ingest billing)
         self._by_name: dict[str, Component] = {
             c.name: c for comps in self._by_level.values() for c in comps}
+        # -- dynamic-membership bookkeeping (inert for static topologies) --
+        # version bumps on every add/remove so consumers holding derived
+        # caches (covering chains, positional page maps) know to rebuild.
+        self.version = 0
+        # leaf cpu ids are append-only: a removed leaf's id is never reused
+        # or renumbered, so consumer arrays indexed by cpu id stay valid.
+        self.dead_cpus: set[int] = set()
+        # per-level monotone name counters: a new component never reuses a
+        # dead one's name (``host1`` killed stays dead; the next join is
+        # ``host2``), so stale handles fail loudly instead of aliasing.
+        self._next_index: dict[str, int] = {
+            name: len(comps) for name, comps in self._by_level.items()}
+
+    # -- dynamic membership --------------------------------------------------
+    def remove_component(self, name: str) -> list[Component]:
+        """Detach component ``name`` (and its whole subtree) from the tree.
+
+        The component leaves ``components()``/``component()`` resolution —
+        a stale handle raises ``KeyError`` — and its leaves join
+        ``dead_cpus`` (their ids remain valid indices into ``cpus`` so
+        id-addressed consumer state survives, but they no longer appear in
+        ``root.leaves()``).  Detached components keep their ``parent``
+        pointers, so ``path()`` *from* a dead leaf still climbs into the
+        live tree — ``common_level``/``distance_factor`` price a migration
+        away from a dead region as an outermost-boundary crossing instead
+        of crashing.  Returns the detached components, subtree-root first.
+        """
+        comp = self.component(name)
+        assert comp.parent is not None, "cannot remove the root"
+        assert len(self._by_level[comp.level.name]) > 1, \
+            f"cannot remove the last {comp.level.name} component"
+        comp.parent.children.remove(comp)
+        removed: list[Component] = []
+
+        def drop(c: Component) -> None:
+            removed.append(c)
+            self._by_level[c.level.name].remove(c)
+            del self._by_name[c.name]
+            if c.cpu is not None:
+                self.dead_cpus.add(c.cpu)
+            for ch in c.children:
+                drop(ch)
+
+        drop(comp)
+        self._refresh_levels()
+        self.version += 1
+        return removed
+
+    def add_component(self, level: str, fanout,
+                      parent: Optional[Component] = None) -> Component:
+        """Grow a new component at ``level`` under ``parent`` (default: the
+        first live component of the level above).
+
+        ``fanout`` gives the child count for each level *below* ``level``,
+        outermost first — an int when only one level lies below, else a
+        sequence with one entry per sub-level.  Each entry is an int
+        (uniform) or a sequence consumed left-to-right per parent built at
+        that depth (ragged subtrees, matching :class:`Level`'s ragged
+        fanout).  New leaves get fresh cpu ids appended after every id
+        ever issued — existing ids never renumber.  Returns the new
+        component; its auto-assigned ``name`` is the consumer's handle.
+        """
+        li = self.level_index(level)
+        assert li > 0, "cannot add a second root"
+        below = self.levels[li + 1:]
+        fans = [fanout] if isinstance(fanout, int) else list(fanout)
+        assert len(fans) == len(below), \
+            f"fanout needs {len(below)} entries for levels " \
+            f"{[l.name for l in below]}, got {len(fans)}"
+        ragged = [None if isinstance(f, int) else list(f) for f in fans]
+        if parent is None:
+            above = self._by_level[self.levels[li - 1].name]
+            assert above, f"no live parent at level {self.levels[li - 1].name}"
+            parent = above[0]
+        assert parent.level.name == self.levels[li - 1].name, \
+            f"parent {parent.name} is not at level {self.levels[li - 1].name}"
+
+        def grow(depth: int, par: Optional[Component]) -> Component:
+            lvl = self.levels[depth]
+            idx = self._next_index[lvl.name]
+            self._next_index[lvl.name] += 1
+            comp = Component(level=lvl, index=idx, parent=par)
+            self._by_level[lvl.name].append(comp)
+            self._by_name[comp.name] = comp
+            k = depth - li
+            if k < len(fans):
+                n = fans[k] if ragged[k] is None else ragged[k].pop(0)
+                comp.children = [grow(depth + 1, comp) for _ in range(n)]
+            else:
+                comp.cpu = len(self.cpus)
+                self.cpus.append(comp)
+            return comp
+
+        new = grow(li, parent)
+        parent.children.append(new)
+        self._refresh_levels()
+        self.version += 1
+        return new
+
+    def _refresh_levels(self) -> None:
+        """Re-derive each level's fanout from the live tree so
+        ``describe()`` stays truthful after add/remove.  Level objects are
+        frozen, so changed ones are replaced; components keep their
+        original references — ``name`` and ``factor``, the only fields
+        queries read off a component's level, never change."""
+        new_levels = [self.levels[0]]
+        for up, lvl in zip(self.levels, self.levels[1:]):
+            sizes = [len(p.children) for p in self._by_level[up.name]]
+            if not sizes:
+                new_levels.append(lvl)
+                continue
+            fan = sizes[0] if len(set(sizes)) == 1 else sizes
+            new_levels.append(lvl if fan == lvl.fanout else
+                              replace(lvl, fanout=fan))
+        self.levels = new_levels
 
     # -- queries -----------------------------------------------------------
     @property
     def n_cpus(self) -> int:
+        """Total leaf ids ever issued — dead leaves included, so this stays
+        the right length for cpu-id-indexed consumer arrays."""
         return len(self.cpus)
+
+    def live_cpus(self) -> list[int]:
+        """Cpu ids of the leaves still attached to the tree, in tree order."""
+        return [leaf.cpu for leaf in self.root.leaves()]
 
     def components(self, level: str) -> list[Component]:
         return self._by_level[level]
@@ -239,7 +360,8 @@ class Topology:
             parts.append(f"{l.name}(x{fan}" +
                          (f", factor={l.factor}" if l.factor != 1.0 else "") +
                          ")")
-        return " > ".join(parts) + f" = {self.n_cpus} cpus"
+        dead = f" ({len(self.dead_cpus)} dead)" if self.dead_cpus else ""
+        return " > ".join(parts) + f" = {self.n_cpus} cpus" + dead
 
 
 # ---------------------------------------------------------------------------

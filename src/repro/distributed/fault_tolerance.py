@@ -37,17 +37,61 @@ class FleetSpec:
     dead_pods: frozenset = frozenset()
     dead_hosts: frozenset = frozenset()     # (pod, data-slice) pairs
 
-    def alive_shape(self) -> tuple[int, ...]:
-        pods = self.pods - len(self.dead_pods)
-        data = self.data - len({d for _, d in self.dead_hosts})
-        if pods <= 0 or data <= 0:
+    def _survivor_grid(self) -> tuple[int, int]:
+        """``(kept_pods, kept_data)`` of the largest fully-alive rectangle.
+
+        A rectangular mesh keeps a pod only with *every* kept data column
+        alive in it, so a kept pod's dead columns are excluded fleet-wide —
+        but a pod with dead hosts can instead be dropped entirely, keeping
+        its healthy twins' columns for everyone else.  We search exactly:
+        only pods that contain dead hosts face that keep-or-drop choice, and
+        real kill sets touch few pods, so enumerating their subsets is tiny.
+        (Beyond 16 dirty pods we fall back to sorted prefixes — keep the
+        pods with the fewest dead columns first — which covers the monotone
+        shapes real failures take.)
+        """
+        pods_alive = [p for p in range(self.pods) if p not in self.dead_pods]
+        dead_by_pod: dict[int, set] = {}
+        for p, d in self.dead_hosts:
+            if p in self.dead_pods:
+                continue                    # its whole pod is already gone
+            dead_by_pod.setdefault(p, set()).add(d)
+        clean = sum(1 for p in pods_alive if p not in dead_by_pod)
+        dirty = sorted((p for p in pods_alive if p in dead_by_pod),
+                       key=lambda p: (len(dead_by_pod[p]), p))
+        if len(dirty) <= 16:
+            choices = range(1 << len(dirty))
+            subset = lambda m: [dirty[i] for i in range(len(dirty))
+                                if m >> i & 1]
+        else:
+            choices = range(len(dirty) + 1)
+            subset = lambda m: dirty[:m]
+        best = None
+        for m in choices:
+            keep = subset(m)
+            cols_dead = set().union(*(dead_by_pod[p] for p in keep)) \
+                if keep else set()
+            rows = clean + len(keep)
+            cols = self.data - len(cols_dead)
+            if rows <= 0 or cols <= 0:
+                continue
+            # deterministic tie-break: prefer more pods (preserves the
+            # pod axis, the shape the planner laid the job out for)
+            key = (rows * cols, rows)
+            if best is None or key > best[0]:
+                best = (key, rows, cols)
+        if best is None:
             raise RuntimeError("fleet exhausted")
+        return best[1], best[2]
+
+    def alive_shape(self) -> tuple[int, ...]:
+        pods, data = self._survivor_grid()
         if pods > 1:
             return (pods, data, self.model)
         return (data, self.model)
 
     def alive_axes(self) -> tuple[str, ...]:
-        return (("pod", "data", "model") if self.pods - len(self.dead_pods) > 1
+        return (("pod", "data", "model") if self._survivor_grid()[0] > 1
                 else ("data", "model"))
 
 
@@ -115,13 +159,28 @@ class StragglerDetector:
 def regenerate_straggler_bubbles(sched, straggler_cpus: Sequence[int]):
     """Pull every bubble homed on a straggler's queues back to the parent
     level so healthy cpus pick it up (paper §3.3.3 regeneration).  Returns
-    the number of bubbles moved."""
-    moved = 0
+    the number of bubbles moved.
+
+    Each task moves exactly **one** level up and is counted once: the move
+    plan is snapshotted for every queue before anything moves, so a task
+    pushed onto its parent is never re-moved by the next (queue, parent)
+    pair — cascading everything to the global list would destroy exactly
+    the affinity §3.3.3 regeneration is meant to keep.  Queues shared by
+    several stragglers' covering chains are drained once.
+    """
+    plan = []                           # (queue, parent, tasks-at-snapshot)
+    seen: set[int] = set()
     for cpu in straggler_cpus:
         chain = sched.queues.covering(cpu)      # local → global
         for q, parent in zip(chain[:-1], chain[1:]):
-            for t in list(q.tasks):
-                q.remove(t)
+            if id(q) in seen:
+                continue
+            seen.add(id(q))
+            plan.append((q, parent, list(q.tasks)))
+    moved = 0
+    for q, parent, tasks in plan:
+        for t in tasks:
+            if q.remove(t):
                 parent.push(t)
                 moved += 1
     return moved

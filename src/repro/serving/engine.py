@@ -193,6 +193,11 @@ class EngineStats:
       one level, overflow members re-homed) than to park until the home
       group drained; ``gang_split_members`` counts the members actually
       moved to siblings.
+    * ``host_kills`` / ``host_joins`` / ``orphaned`` / ``kv_restores`` /
+      ``reprefills`` — the elastic-fleet ledger: hosts removed/added
+      live, resident requests whose KV died with a host, and how each
+      orphan was brought back (snapshot restore + replay vs re-prefill
+      from scratch — whichever the cost model quoted cheaper).
     """
 
     prefills: int = 0            # fresh REQUESTS prefilled (not calls)
@@ -213,6 +218,12 @@ class EngineStats:
     hbm_refusals: int = 0        # blind: claims bounced at splice time
     gang_splits: int = 0         # gangs split across sibling page groups
     gang_split_members: int = 0  # members re-homed by those splits
+    # elastic-fleet ledger (kill_host / join_host)
+    host_kills: int = 0          # hosts removed live
+    host_joins: int = 0          # hosts added live
+    orphaned: int = 0            # residents whose KV died with a host
+    kv_restores: int = 0         # orphans resumed from the KV snapshot store
+    reprefills: int = 0          # orphans recomputed from scratch
     # per-host execution ledger (sized by the engine at construction)
     host_decode_steps: list = dataclasses.field(default_factory=list)
     host_active_slots: list = dataclasses.field(default_factory=list)
@@ -360,6 +371,14 @@ class JaxModelBackend:
                                   *[st for _, st in pairs])
 
     def extract(self, states, slot: int):
+        return self._slice(states, slot)
+
+    def peek(self, states, slot: int):
+        """Non-mutating read of one slot's state — what the KV snapshot
+        store writes on its cadence.  Identical to :meth:`extract` here
+        (slicing copies); a distinct name because the *paged* backend's
+        extract is a destructive table edit and must never be used for
+        snapshots — the engine requires ``peek`` to enable a ``kv_store``."""
         return self._slice(states, slot)
 
 
@@ -734,6 +753,21 @@ class StubModelBackend:
     def extract(self, states: np.ndarray, slot: int) -> np.ndarray:
         return states[slot].copy()
 
+    def peek(self, states: np.ndarray, slot: int) -> np.ndarray:
+        """Non-mutating snapshot read (same as extract for this backend)."""
+        return states[slot].copy()
+
+    def replay(self, state: np.ndarray, tokens) -> np.ndarray:
+        """Teacher-forced advance of one saved state through known output
+        tokens — the checkpoint-restore fast path: a snapshot taken after
+        m' emitted tokens plus a replay of tokens m'..m-1 reproduces the
+        live state after m tokens exactly (decode is the same fold)."""
+        pos, acc = int(state[0]), int(state[1])
+        for tok in np.asarray(tokens, np.int64).ravel():
+            acc = self._fold(acc, tok)
+            pos += 1
+        return np.array([pos, acc], np.int64)
+
 
 # ---------------------------------------------------------------------------
 # the engine
@@ -820,7 +854,9 @@ class ServingEngine:
                  depth_skew: int = 2, window: int = 16,
                  min_backlog: int = 2, cooldown: Optional[int] = None,
                  sla_classes: Optional[dict] = None, preempt: bool = False,
-                 preempt_cooldown: int = 8):
+                 preempt_cooldown: int = 8,
+                 kv_store=None, kv_restore_level: str = "host",
+                 reprefill_unit: float = 0.25):
         assert mode in ("runtime", "admission"), mode
         self.cfg = cfg
         self.params = params
@@ -967,6 +1003,29 @@ class ServingEngine:
         # ``None``-classed requests land under "unclassed")
         self._ttft: dict[str, list] = {}
         self._gaps: dict[str, list] = {}
+        # -- elastic fleet: KV continuation snapshots + live kill/join --
+        # ``kv_store`` is a :class:`~repro.checkpoint.kv_store.KVStore`
+        # (duck-typed: due/maybe_snapshot/restore); on its cadence the
+        # engine snapshots every resident continuation.  When a host dies
+        # (:meth:`kill_host`) each orphan is restored from the snapshot —
+        # a ``kv_restore_level`` boundary toll on its KV bytes plus a
+        # replay of the tokens emitted since, at ``reprefill_unit`` steps
+        # per token — or re-prefilled from scratch (full history at the
+        # same per-token rate), whichever the cost model quotes cheaper.
+        self.kv_store = kv_store
+        self.kv_restore_level = kv_restore_level
+        self.reprefill_unit = reprefill_unit
+        if kv_store is not None:
+            assert mode == "runtime", "kv snapshots need the runtime engine"
+            assert callable(getattr(self.backend, "peek", None)), \
+                "kv_store needs a backend with a non-mutating peek() " \
+                "(the paged backend's extract is a destructive table edit)"
+        self._dead_slots: set[int] = set()    # cpu ids of killed hosts
+        self._restore_debt: dict[int, float] = {}   # rid -> admission bill
+        self._group = group                   # page-group size, for joins
+        self._host_group = ({id(h): g for g, h in
+                             enumerate(self.topo.components("host"))}
+                            if self._host_idx is not None else {})
         self.stats = EngineStats(
             host_decode_steps=[0] * len(self._exec_groups),
             host_active_slots=[0] * len(self._exec_groups),
@@ -1328,7 +1387,8 @@ class ServingEngine:
         elig = self._wdrr_gate() if self.sla_classes else None
         filt = self._wdrr_filter(elig) if elig is not None else None
         for slot in range(self.n_slots):
-            if self.slot_req[slot] is not None or self._stall[slot] > 0:
+            if self.slot_req[slot] is not None or self._stall[slot] > 0 \
+                    or slot in self._dead_slots:
                 continue
             t = self._pending.pop(slot, None)
             if t is None:
@@ -1371,6 +1431,17 @@ class ServingEngine:
                     self.sched.queues.covering(slot)[1].push(t)
                     continue
                 self._charge(slot)            # reserve the KV bytes now
+                if self._restore_debt:
+                    # an orphan of a killed host pays its quoted restore /
+                    # re-prefill bill here, at re-admission — the recovery
+                    # compute lands as admission latency, like every other
+                    # cost in the engine
+                    req0 = getattr(t, "request", None)
+                    debt = self._restore_debt.pop(req0.rid, 0.0) \
+                        if req0 is not None else 0.0
+                    if debt:
+                        self._stall[slot] += debt
+                        self.stats.stall_steps += debt
                 if self._stall[slot] > 0:     # pay the migration first
                     self._pending[slot] = t
                     continue
@@ -1504,7 +1575,8 @@ class ServingEngine:
         if not any(counts.get(n, 0) for n in urgent):
             return
         if any(self.slot_req[s] is None and self._stall[s] <= 0
-               and s not in self._pending for s in range(self.n_slots)):
+               and s not in self._pending and s not in self._dead_slots
+               for s in range(self.n_slots)):
             return          # a slot opens this wave anyway: no parking
         # victim survey: preemptible-tier residents, gangs counted whole
         best = None                  # (remaining, "gang"/"solo", payload)
@@ -1673,18 +1745,21 @@ class ServingEngine:
         self._steps_since_rebalance = 0
 
     # -- HBM-aware gang splitting ----------------------------------------------
-    def _split_wait_quote(self, page: int, deficit: float) -> float:
-        """Engine steps until page group ``page`` frees ``deficit`` KV
-        bytes by residents finishing on their own — the park-and-wait
+    def _split_wait_quote(self, page_comp, deficit: float) -> float:
+        """Engine steps until page group ``page_comp`` frees ``deficit``
+        KV bytes by residents finishing on their own — the park-and-wait
         alternative a gang split is quoted against.  The k-th soonest
         resident completion covers a k-reservation deficit; a group
-        without enough residents to ever free it quotes infinite."""
+        without enough residents to ever free it quotes infinite.  (Takes
+        the component itself: after an elastic ``kill_host`` a component's
+        ``.index`` no longer equals its ``components("page")`` position,
+        so positional round-trips would quote the wrong group.)"""
         k = int(np.ceil(deficit / self.kv_bytes - 1e-9))
         if k <= 0:
             return 0.0
         rems = sorted(
             req.max_new_tokens - len(req.out_tokens)
-            for leaf in self.topo.components("page")[page].leaves()
+            for leaf in page_comp.leaves()
             if (req := self.slot_req[leaf.cpu]) is not None and not req.done)
         if len(rems) < k:
             return float("inf")
@@ -1748,7 +1823,7 @@ class ServingEngine:
                 self.topo.crossing_between(page_comp, dest), kv)
             for _, dest in plan)
         deficit = kv * len(live) - self._headroom(page_comp.index)
-        if split_quote >= self._split_wait_quote(page_comp.index, deficit):
+        if split_quote >= self._split_wait_quote(page_comp, deficit):
             return                    # waiting is quoted cheaper: park
         # buy the split: expand the bubble one level up (its regeneration
         # home is now the host's list) with explicit member placement
@@ -1801,6 +1876,8 @@ class ServingEngine:
         latency without touching the streams."""
         now = float(self.steps)
         self.steps += 1
+        if self.kv_store is not None:
+            self._maybe_snapshot_kv(int(now))
         self._maybe_rebalance(now)
         self._maybe_preempt(now)
         self._admit(now)
@@ -1909,11 +1986,292 @@ class ServingEngine:
         self.sched.regenerate(b, running={})
         return n
 
+    # -- elastic fleet: live host loss / join ---------------------------------
+    def _maybe_snapshot_kv(self, step: int) -> None:
+        """On the store's cadence, snapshot every resident continuation:
+        (backend state via the non-mutating ``peek``, last emitted token,
+        tokens emitted so far) per live request.  Parked continuations are
+        already host-side and need no snapshot."""
+        if not self.kv_store.due(step):
+            return
+        entries: dict[int, tuple] = {}
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is None or req.done or not req.out_tokens:
+                continue
+            g = self._group_of[s]
+            st = self.backend.peek(self._states[g],
+                                   s - self._exec_groups[g][0])
+            entries[req.rid] = (st, int(self.tokens[s, 0]),
+                                len(req.out_tokens))
+        self.kv_store.maybe_snapshot(step, entries)
+
+    def _buy_redeal(self, slot: int, now: float) -> None:
+        """Commit one machine-wide re-spread and land its bill exactly the
+        way :meth:`_maybe_rebalance` does: the flat trigger-side cost
+        stalls the triggering slot, the level-table ingest tolls stall the
+        receiving groups' slots, and the steal-spend window resets."""
+        self.runtime.rebalance(slot, now, level="page")
+        cost = self.policy.consume_cost()
+        if cost:
+            self._stall[slot] += cost
+            self.stats.stall_steps += cost
+        for comp_name, extra in self.sched.stats.last_rebalance_ingest.items():
+            for leaf in self.topo.component(comp_name).leaves():
+                self._stall[leaf.cpu] += extra
+                self.stats.stall_steps += extra
+        self.stats.rebalances += 1
+        self._paid.clear()
+        self._cost_mark = self.sched.stats.steal_cost
+        self._steps_since_rebalance = 0
+
+    def kill_host(self, name: str, *, restart: bool = False) -> dict:
+        """Remove host ``name`` mid-flight — the elastic failure path.
+
+        The dead host's slots leave the hierarchy (fresh ``KeyError`` for
+        stale handles, cpu ids never renumber), its residents' KV
+        reservations vanish from the HBM ledger (the pages died with the
+        host — no extract), queued work homed anywhere in its subtree
+        folds one level up onto the surviving parent list (the paper's
+        §3.3.3 regeneration move, affinity kept as wide as the loss
+        allows), and every orphaned request is re-parked as a
+        continuation: restored from the newest ``kv_store`` snapshot (a
+        ``kv_restore_level`` boundary toll on its KV bytes plus a
+        teacher-forced replay of the tokens emitted since, at
+        ``reprefill_unit`` steps/token) or re-prefilled from its whole
+        history — whichever the cost model quotes cheaper.  The quote is
+        billed as an admission stall when the orphan re-enters a
+        surviving slot, and the exact rebalance quote then re-deals the
+        survivor fleet.  Parked continuations (``_kv_park``) survive: they
+        live host-side, not in the dead host's HBM.
+
+        ``restart=True`` models the drain-and-restart operator instead —
+        the baseline ``serve/host_loss_goodput`` gates against: the whole
+        job restarts on the survivor mesh, so every in-flight request
+        *fleet-wide* is torn down and re-prefilled from scratch, snapshots
+        unused.
+
+        Returns a summary dict (orphan count, restore/re-prefill split,
+        re-deal quote).  Streams are unaffected: a restored or
+        re-prefilled orphan continues token-for-token where it left off
+        (teacher forcing — property-tested).
+        """
+        assert self.mode == "runtime", "kill_host needs the runtime engine"
+        assert self._host_idx is not None, \
+            "single-host topology has no host level to kill"
+        assert self.per_host_decode, "kill_host needs per-host execution"
+        host = self.topo.component(name)
+        assert host.level.name == "host", f"{name!r} is not a host"
+        assert any(h is not host for h in self.topo.components("host")), \
+            "cannot kill the last host"
+        now = float(self.steps)
+        dead = {leaf.cpu for leaf in host.leaves()}
+        fold = self.sched.queues.queue_of(host.parent)
+        gq = self.sched.queues.global_queue()
+        snaps = {} if (restart or self.kv_store is None) \
+            else self.kv_store.restore()
+
+        # 1. claims pending on doomed slots dissolve: the thread was never
+        #    spliced in, so it simply returns to a surviving list (its
+        #    parked KV, if any, is host-side and intact)
+        requeued = 0
+        for s in list(self._pending):
+            if restart or s in dead:
+                t = self._pending.pop(s)
+                self._refund(s)
+                self.runtime.release(s, t, False, now)
+                (gq if restart else fold).push(t)
+                requeued += 1
+
+        # 2. residents of doomed slots are orphans: pop the thread, free
+        #    the slot — their KV is gone, restoration is decided below
+        orphans: list[tuple] = []
+        doomed = range(self.n_slots) if restart else sorted(dead)
+        for s in doomed:
+            if s in self._dead_slots:
+                continue
+            self._stall[s] = 0.0
+            req = self.slot_req[s]
+            if req is None or req.done:
+                continue
+            t = self.slot_thread.pop(s)
+            self.slot_req[s] = None
+            self.tokens[s, 0] = 0
+            self._refund(s)
+            self.runtime.release(s, t, False, now)
+            orphans.append((req, t))
+
+        # 3. queued tasks homed in the dead subtree move one level up;
+        #    bubbles whose regeneration home died re-home the same way
+        moved_q = 0
+        dead_comps, stack = [], [host]
+        while stack:
+            c = stack.pop()
+            dead_comps.append(c)
+            stack.extend(c.children)
+        dead_ids = {id(c) for c in dead_comps}
+        for c in dead_comps:
+            q = self.sched.queues.queue_of(c)
+            for task in list(q.tasks):
+                q.remove(task)
+                fold.push(task)
+                moved_q += 1
+        for b in self._gangs.values():
+            if b.home_list is not None and id(b.home_list.comp) in dead_ids:
+                b.home_list = fold
+
+        # 4. topology surgery + derived-cache rebuild
+        self.topo.remove_component(name)
+        self.sched.queues.sync()
+        self._queues_by_name = None          # _home_queue rebuilds lazily
+        self._page_host = [p.path()[self._host_idx]
+                           for p in self.topo.components("page")]
+        self._dead_slots |= dead
+        self._speed_by_host.pop(id(host), None)
+        self._host_group.pop(id(host), None)
+
+        # 5. restore-vs-reprefill: both paths produce the exact
+        #    continuation (state, last token) into _kv_park; the quoted
+        #    cost is billed at the orphan's re-admission
+        bm = self.sched.bill_model
+        restored = reprefilled = 0
+        for req, t in orphans:
+            m = len(req.out_tokens)
+            assert m >= 1, "a resident request always holds >=1 token"
+            reprefill_q = (len(req.prompt) + m - 1) * self.reprefill_unit
+            snap = snaps.get(req.rid)
+            usable = (snap is not None and 1 <= snap.emitted <= m
+                      and (snap.emitted == m
+                           or hasattr(self.backend, "replay")))
+            restore_q = (bm.rebalance_move_cost(self.kv_restore_level,
+                                                self.kv_bytes)
+                         + (m - snap.emitted) * self.reprefill_unit) \
+                if usable else float("inf")
+            if restore_q < reprefill_q:
+                assert int(snap.tok) == int(req.out_tokens[snap.emitted - 1])
+                st = snap.state if snap.emitted == m else self.backend.replay(
+                    snap.state, req.out_tokens[snap.emitted - 1:m - 1])
+                debt = restore_q
+                restored += 1
+                self.stats.kv_restores += 1
+            else:
+                hist = req.prompt if m == 1 else np.concatenate(
+                    [req.prompt, np.asarray(req.out_tokens[:-1], np.int32)])
+                _, st = self.backend.prefill(hist)
+                debt = reprefill_q
+                reprefilled += 1
+                self.stats.reprefills += 1
+            self._kv_park[req.rid] = (st, int(req.out_tokens[-1]))
+            self.stats.kv_parks += 1
+            self._restore_debt[req.rid] = debt
+            (gq if restart else fold).push(t)
+
+        # 6. the exact rebalance quote re-deals the survivor fleet, billed
+        #    from the first surviving slot (the fleet just changed shape —
+        #    the skew trigger's window is stale by construction)
+        movable, est = self.sched.estimate_rebalance("page", None)
+        if movable >= 1:
+            self._buy_redeal(next(self.topo.root.leaves()).cpu, now)
+        self.stats.host_kills += 1
+        self.stats.orphaned += len(orphans)
+        return {"host": name, "orphaned": len(orphans),
+                "restored": restored, "reprefilled": reprefilled,
+                "requeued_pending": requeued, "queued_moved": moved_q,
+                "redeal": movable >= 1, "redeal_quote": round(est, 4)}
+
+    def join_host(self, name: Optional[str] = None, *,
+                  slots: Optional[int] = None, speed: float = 1.0,
+                  proactive: bool = True) -> str:
+        """Grow the fleet by one host live — scale-out under load.
+
+        The new host's slots join the hierarchy with fresh cpu ids, a
+        fresh backend shard, zeroed HBM ledger entries per new page group,
+        and its own decode-speed credit (``speed`` < 1 models a slow
+        joiner exactly like ``host_speed``).  With ``proactive`` the
+        engine quotes one machine-wide re-spread onto the new capacity
+        against the expected cost of the joiner pulling its fair share
+        one costed steal at a time (each dragging KV across the host
+        boundary), and buys the deal only when the quote beats staying
+        put — an unjustified joiner serves newly submitted work instead.
+        ``name``, when given, must equal the name the topology assigns
+        (names are monotone — a dead host's name is never reused).
+        Returns the new host's name."""
+        assert self.mode == "runtime", "join_host needs the runtime engine"
+        assert self._host_idx is not None, \
+            "single-host topology has no host level to grow"
+        assert self.per_host_decode, "join_host needs per-host execution"
+        assert 0.0 < speed <= 1.0, speed
+        now = float(self.steps)
+        n_new = int(slots) if slots is not None else \
+            max(len(list(h.leaves())) for h in self.topo.components("host"))
+        groups = max(-(-n_new // self._group), 1)
+        b, r = divmod(n_new, groups)
+        page_sizes = [b + 1] * r + [b] * (groups - r)
+        host = self.topo.add_component("host", (groups, _fanout(page_sizes)))
+        if name is not None:
+            assert name == host.name, \
+                f"topology assigned {host.name!r}, caller expected {name!r}"
+        self.sched.queues.sync()
+        self._queues_by_name = None
+        lo = self.n_slots
+        new_cpus = [leaf.cpu for leaf in host.leaves()]
+        assert new_cpus == list(range(lo, lo + n_new)), new_cpus
+        self.n_slots += n_new
+        self._page_of.extend(self.topo.cpus[s].path()[self._page_idx].index
+                             for s in new_cpus)
+        max_page = max(p.index for p in self.topo.components("page"))
+        self.hbm_used.extend(
+            0.0 for _ in range(max_page + 1 - len(self.hbm_used)))
+        self._page_host = [p.path()[self._host_idx]
+                           for p in self.topo.components("page")]
+        self._slot_charged.extend([False] * n_new)
+        self._stall.extend([0.0] * n_new)
+        self.slot_req.extend([None] * n_new)
+        g_new = len(self._exec_groups)
+        self._exec_groups.append((lo, lo + n_new))
+        self._group_of.extend([g_new] * n_new)
+        self._group_speed.append(float(speed))
+        self._host_credit.append(0.0)
+        self._host_group[id(host)] = g_new
+        if self._speed_by_host or speed < 1.0:
+            # keep the speed ruler total: hosts the engine never priced
+            # run nominal.  (The scheduler only *consults* the ruler when
+            # the engine was built speed_aware with host_speed; a slow
+            # joiner on a speed-blind engine still executes slow — the
+            # credit accumulator above — it is just not steered around.)
+            for h in self.topo.components("host"):
+                self._speed_by_host.setdefault(id(h), 1.0)
+            self._speed_by_host[id(host)] = float(speed)
+        st, tok = self.backend.init(n_new)
+        self._states.append(st)
+        self.tokens = np.concatenate([self.tokens, tok], axis=0)
+        self.stats.host_decode_steps.append(0)
+        self.stats.host_active_slots.append(0)
+        self.stats.host_skipped_steps.append(0)
+        self.stats.host_joins += 1
+        if proactive:
+            movable, est = self.sched.estimate_rebalance("page", None)
+            if movable >= 1:
+                # the steal path the deal replaces: the joiner pulls its
+                # fair share of the backlog one costed host-crossing
+                # steal at a time, each dragging one request's KV
+                cm = self.sched.cost_model
+                share = movable * n_new / max(len(self.topo.live_cpus()), 1)
+                src = next((p for p in self.topo.components("page")
+                            if self.topo.ancestor_at(p, "host") is not host),
+                           None)
+                per_steal = cm.steal_cost(
+                    self.topo.levels_crossed(lo, src), 1, "host",
+                    self.kv_bytes) if src is not None else 0.0
+                if est < share * per_steal:
+                    self._buy_redeal(lo, now)
+        return host.name
+
     # -- introspection ---------------------------------------------------------
     def counters(self) -> dict:
         """Engine + scheduler ledger in one dict (benchmark rows)."""
         s = self.sched.stats
-        return {
+        out = {
             "steps": self.steps,
             "steals": s.steals, "steal_attempts": s.steal_attempts,
             "steal_refusals": s.steal_refusals,
@@ -1947,3 +2305,14 @@ class ServingEngine:
                 round(a / max(self.steps, 1), 4)
                 for a in self.stats.host_active_slots],
         }
+        if self.stats.host_kills or self.stats.host_joins:
+            # elastic ledger: keyed only when the fleet actually changed
+            # shape, so every pre-elastic benchmark row stays bit-identical
+            out.update({
+                "host_kills": self.stats.host_kills,
+                "host_joins": self.stats.host_joins,
+                "orphaned": self.stats.orphaned,
+                "kv_restores": self.stats.kv_restores,
+                "reprefills": self.stats.reprefills,
+            })
+        return out

@@ -3,3 +3,11 @@ import jax
 # Smoke tests and benches see the real (single) CPU device; only
 # launch/dryrun.py sets XLA_FLAGS for 512 placeholder devices.
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    # tier-1 runs `-m "not slow"` (Makefile); slow tests get their own
+    # non-required CI lane so a 7-minute compile never gates a PR
+    config.addinivalue_line(
+        "markers", "slow: excluded from the tier-1 gate; run in the "
+        "dedicated slow CI lane")

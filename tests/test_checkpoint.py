@@ -1,0 +1,147 @@
+"""Checkpoint-store tests: the parameter store (``checkpoint.store``) and
+the decode-continuation store (``checkpoint.kv_store``).
+
+Both share one on-disk discipline — ``.tmp_step_*`` dir + ``os.replace``,
+``manifest.json`` marking completeness, bfloat16 leaves stored as a uint16
+view with the true dtype in the manifest — so both are pinned here: the
+round trip (exact bits back, bf16 included), ``latest_step`` ignoring
+in-flight tmp dirs and manifest-less wrecks, and mid-write-crash atomicity
+(a crash before the rename must leave the previous complete step
+restorable and the torn write invisible).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.checkpoint import kv_store
+
+
+def tree():
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "scale": np.float64(0.5),
+            "emb": {"table": np.arange(6, dtype=np.int32)}}
+
+
+class TestStoreRoundTrip:
+    def test_roundtrip_exact(self, tmp_path):
+        t = tree()
+        ckpt.save(tmp_path, 7, t)
+        got, manifest = ckpt.restore(tmp_path, 7, t)
+        assert manifest["step"] == 7
+        np.testing.assert_array_equal(np.asarray(got["w"]), t["w"])
+        np.testing.assert_array_equal(np.asarray(got["emb"]["table"]),
+                                      t["emb"]["table"])
+
+    def test_bfloat16_uint16_view_roundtrip(self, tmp_path):
+        """bf16 cannot be np.save'd natively; the store writes the uint16
+        bit view and the manifest keeps the true dtype.  The bits — not a
+        rounded float32 detour — must come back."""
+        t = {"p": jnp.arange(16, dtype=jnp.bfloat16) / 7}
+        ckpt.save(tmp_path, 1, t)
+        on_disk = np.load(tmp_path / "step_00000001" / "p.npy")
+        assert on_disk.dtype == np.uint16
+        manifest = json.loads(
+            (tmp_path / "step_00000001" / "manifest.json").read_text())
+        assert manifest["leaves"]["p"]["dtype"] == "bfloat16"
+        got, _ = ckpt.restore(tmp_path, 1, t)
+        assert got["p"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(got["p"]).view(np.uint16),
+            np.asarray(t["p"]).view(np.uint16))
+
+    def test_manifest_extra(self, tmp_path):
+        ckpt.save(tmp_path, 3, tree(), extra={"lr": 0.1})
+        assert ckpt.manifest_extra(tmp_path, 3) == {"lr": 0.1}
+
+
+class TestLatestStep:
+    def test_ignores_orphaned_tmp_dirs(self, tmp_path):
+        """A crash between mkdir and rename leaves a ``.tmp_step_*`` husk;
+        it must never be reported as the latest checkpoint, even when its
+        step number is newest and it contains a manifest."""
+        ckpt.save(tmp_path, 5, tree())
+        wreck = tmp_path / ".tmp_step_00000009"
+        wreck.mkdir()
+        (wreck / "manifest.json").write_text("{}")
+        assert ckpt.latest_step(tmp_path) == 5
+        assert kv_store.latest_step(tmp_path) == 5
+
+    def test_ignores_manifestless_dir(self, tmp_path):
+        ckpt.save(tmp_path, 5, tree())
+        (tmp_path / "step_00000009").mkdir()     # renamed but torn: no manifest
+        assert ckpt.latest_step(tmp_path) == 5
+
+    def test_empty_and_missing(self, tmp_path):
+        assert ckpt.latest_step(tmp_path / "nope") is None
+        assert ckpt.latest_step(tmp_path) is None
+
+
+class TestAtomicity:
+    def test_crash_before_rename_keeps_previous_step(self, tmp_path,
+                                                     monkeypatch):
+        """Kill the writer at the worst moment — everything written, rename
+        not yet executed — and the store must still restore step 1 bit-for-
+        bit, with the torn step 2 invisible to ``latest_step``."""
+        t = tree()
+        ckpt.save(tmp_path, 1, t)
+        real_replace = os.replace
+
+        def crash(src, dst):
+            raise OSError("simulated crash mid-rename")
+
+        monkeypatch.setattr(os, "replace", crash)
+        with pytest.raises(OSError):
+            ckpt.save(tmp_path, 2, {"w": t["w"] * 2, "scale": t["scale"],
+                                    "emb": t["emb"]})
+        monkeypatch.setattr(os, "replace", real_replace)
+        assert ckpt.latest_step(tmp_path) == 1
+        got, _ = ckpt.restore(tmp_path, 1, t)
+        np.testing.assert_array_equal(np.asarray(got["w"]), t["w"])
+        # the interrupted step retries cleanly over its own husk
+        ckpt.save(tmp_path, 2, t)
+        assert ckpt.latest_step(tmp_path) == 2
+
+
+class TestKVStore:
+    def entries(self, k=2):
+        return {rid: (([np.arange(4) + rid], {"pos": np.int64(3 + rid)}),
+                      7 + rid, 2 + rid) for rid in range(k)}
+
+    def test_roundtrip_nested_pytree(self, tmp_path):
+        store = kv_store.KVStore(tmp_path, cadence=1)
+        store.snapshot(10, self.entries())
+        got = store.restore()
+        assert set(got) == {0, 1}
+        snap = got[1]
+        assert (snap.tok, snap.emitted) == (8, 3)
+        state_list, state_dict = snap.state
+        np.testing.assert_array_equal(state_list[0], np.arange(4) + 1)
+        assert int(state_dict["pos"]) == 4
+
+    def test_cadence(self, tmp_path):
+        store = kv_store.KVStore(tmp_path, cadence=4)
+        assert store.maybe_snapshot(0, self.entries())
+        assert not store.maybe_snapshot(3, self.entries())
+        assert store.maybe_snapshot(4, self.entries())
+        assert store.latest() == 4
+
+    def test_crash_mid_write_keeps_previous(self, tmp_path, monkeypatch):
+        store = kv_store.KVStore(tmp_path, cadence=1)
+        store.snapshot(1, self.entries())
+        monkeypatch.setattr(os, "replace",
+                            lambda s, d: (_ for _ in ()).throw(OSError()))
+        with pytest.raises(OSError):
+            store.snapshot(2, self.entries())
+        monkeypatch.undo()
+        assert store.latest() == 1
+        assert set(store.restore()) == {0, 1}
+
+    def test_empty_store_restores_nothing(self, tmp_path):
+        store = kv_store.KVStore(tmp_path)
+        assert store.restore() == {}
+        assert store.latest() is None

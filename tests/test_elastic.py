@@ -1,0 +1,323 @@
+"""Elastic fleet: live host loss / join with checkpointed KV recovery.
+
+Three layers are pinned here:
+
+* **dynamic Topology** — components can leave and join the machine tree
+  live; cpu ids are append-only, dead names never resolve again, crossing
+  queries stay correct across the mutation, and a topology that is never
+  mutated behaves exactly as before (the goldens separately pin
+  byte-identical static behaviour);
+* **QueueHierarchy.sync** — queues survive for live components, detached
+  queues must be empty (tasks are re-homed *before* surgery);
+* **ServingEngine.kill_host / join_host** — the tentpole: a mid-flight
+  host loss orphans its residents, restores each from the checkpointed KV
+  store or re-prefills (whichever the bill model quotes cheaper), and the
+  surviving fleet re-deals; a join grows capacity live.  The stub
+  backend's hash-of-history output makes stream equality a full-integrity
+  check: every surviving request must finish with exactly the tokens an
+  undisturbed run produces.
+"""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import KVStore
+from repro.core import BubbleScheduler, bubble, thread
+from repro.core.scheduler import StealCostModel
+from repro.serving import (SERVE_COST, ServingEngine, StubModelBackend,
+                           slots_topology)
+
+
+def make_engine(**kw):
+    kw.setdefault("n_slots", 16)
+    kw.setdefault("hosts", 2)
+    kw.setdefault("cost_model", SERVE_COST)
+    return ServingEngine(None, None, backend=StubModelBackend(), **kw)
+
+
+def submit(eng, n, prompt_len=20, new_tokens=24, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    rids = [eng.submit(rng.integers(1, 200, prompt_len), new_tokens,
+                       prio=0, **kw) for _ in range(n)]
+    return rids
+
+
+def streams(eng):
+    return {r.rid: tuple(r.out_tokens) for r in eng.completed}
+
+
+# ---------------------------------------------------------------------------
+# dynamic Topology
+# ---------------------------------------------------------------------------
+
+class TestDynamicTopology:
+    def test_static_topology_is_inert(self):
+        topo = slots_topology(16, 4, hosts=2)
+        assert topo.version == 0
+        assert topo.dead_cpus == set()
+        assert topo.live_cpus() == list(range(16))
+
+    def test_remove_detaches_subtree(self):
+        topo = slots_topology(16, 4, hosts=2)
+        doomed = {leaf.cpu for leaf in topo.component("host1").leaves()}
+        removed = topo.remove_component("host1")
+        assert topo.version == 1
+        assert topo.dead_cpus == doomed
+        assert topo.live_cpus() == sorted(set(range(16)) - doomed)
+        assert topo.n_cpus == 16                 # ids never renumber
+        assert removed[0].name == "host1"
+        with pytest.raises(KeyError):
+            topo.component("host1")              # stale handle fails loudly
+        assert "host1" not in [h.name for h in topo.components("host")]
+        assert "(8 dead)" in topo.describe()
+
+    def test_remove_guards(self):
+        topo = slots_topology(16, 4, hosts=2)
+        with pytest.raises(AssertionError):
+            topo.remove_component("batch0")      # the root
+        topo.remove_component("host1")
+        with pytest.raises(AssertionError):
+            topo.remove_component("host0")       # the last host
+
+    def test_dead_leaf_path_still_prices(self):
+        """A migration away from a dead region must price as an outermost
+        crossing, not crash: detached components keep parent pointers."""
+        topo = slots_topology(16, 4, hosts=2)
+        topo.remove_component("host1")
+        dead = next(iter(topo.dead_cpus))
+        assert topo.distance_factor(0, dead) == 4.0     # host boundary
+        assert topo.levels_crossed(0, topo.cpus[dead]) > 0
+
+    def test_join_appends_fresh_ids_and_names(self):
+        topo = slots_topology(16, 4, hosts=2)
+        topo.remove_component("host1")
+        host = topo.add_component("host", (2, 4))
+        assert host.name == "host2"              # dead name never reused
+        assert [leaf.cpu for leaf in host.leaves()] == list(range(16, 24))
+        assert topo.version == 2
+        # crossing queries see the new boundary
+        assert topo.crossing_between(host, topo.component("host0")) == "host"
+        assert topo.levels_crossed(16, topo.component("page0")) == 3
+
+    def test_ragged_join(self):
+        topo = slots_topology(16, 4, hosts=2)
+        host = topo.add_component("host", (3, [2, 2, 1]))
+        sizes = [len(p.children) for p in host.children]
+        assert sizes == [2, 2, 1]
+        assert topo.n_cpus == 21
+
+    def test_fanout_arity_checked(self):
+        topo = slots_topology(16, 4, hosts=2)
+        with pytest.raises(AssertionError):
+            topo.add_component("host", (2, 4, 4))   # one entry too many
+
+
+# ---------------------------------------------------------------------------
+# QueueHierarchy.sync
+# ---------------------------------------------------------------------------
+
+class TestQueueSync:
+    def test_live_queues_survive_dead_queues_drop(self):
+        sched = BubbleScheduler(slots_topology(16, 4, hosts=2))
+        keep = sched.queues.queue_of(sched.topo.component("host0"))
+        b = bubble(thread(2.0))
+        keep.push(b)
+        sched.topo.remove_component("host1")
+        sched.queues.sync()
+        assert sched.queues.queue_of(sched.topo.component("host0")) is keep
+        assert list(keep.tasks) == [b]           # object identity survives
+        assert set(sched.queues._cover) == set(sched.topo.live_cpus())
+
+    def test_detached_queue_must_be_empty(self):
+        sched = BubbleScheduler(slots_topology(16, 4, hosts=2))
+        doomed = sched.queues.queue_of(sched.topo.component("host1"))
+        doomed.push(bubble(thread(2.0)))
+        sched.topo.remove_component("host1")
+        with pytest.raises(AssertionError):
+            sched.queues.sync()                  # caller forgot to re-home
+
+    def test_join_grows_fresh_queues(self):
+        sched = BubbleScheduler(slots_topology(16, 4, hosts=2))
+        host = sched.topo.add_component("host", (2, 4))
+        sched.queues.sync()
+        q = sched.queues.queue_of(host)
+        assert len(q) == 0
+        chain = sched.queues.covering(16)
+        assert [r.comp.level.name for r in chain] == \
+            ["slot", "page", "host", "batch"]
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine.kill_host — the failure path
+# ---------------------------------------------------------------------------
+
+class TestKillHost:
+    def run_with_kill(self, kill_at, tmp_path=None, cadence=4, restart=False,
+                      n=24, prompt_len=20, seed=0, **kw):
+        store = None if tmp_path is None else KVStore(tmp_path, cadence)
+        eng = make_engine(kv_store=store, **kw)
+        rids = submit(eng, n, prompt_len=prompt_len, seed=seed)
+        for _ in range(kill_at):
+            eng.step()
+        info = eng.kill_host("host1", restart=restart)
+        eng.run(max_steps=2000)
+        return eng, rids, info
+
+    def reference(self, n=24, prompt_len=20, seed=0, **kw):
+        eng = make_engine(**kw)
+        submit(eng, n, prompt_len=prompt_len, seed=seed)
+        eng.run(max_steps=2000)
+        return eng
+
+    def test_zero_loss_and_stream_equality(self, tmp_path):
+        """The hard gate: every request completes, and every stream is
+        token-for-token what the undisturbed fleet produces."""
+        ref = self.reference()
+        eng, rids, info = self.run_with_kill(10, tmp_path)
+        assert sorted(streams(eng)) == sorted(rids)      # zero request loss
+        assert streams(eng) == streams(ref)              # exact streams
+        assert info["orphaned"] > 0
+        assert eng.stats.kv_restores + eng.stats.reprefills \
+            == info["orphaned"]
+
+    def test_restore_wins_with_long_prompts(self, tmp_path):
+        """SERVE_COST host toll (3.125 steps) beats re-prefilling a 20-token
+        history — orphans must come back from the snapshot store."""
+        eng, _, info = self.run_with_kill(10, tmp_path)
+        assert info["restored"] > 0 and info["reprefilled"] == 0
+        assert eng.counters()["kv_restores"] == info["restored"]
+
+    def test_reprefill_wins_with_short_prompts(self, tmp_path):
+        """A 4-token prompt re-prefills for ~1.25 steps — cheaper than the
+        host-boundary restore toll; the quote must pick re-prefill even
+        though a snapshot exists."""
+        eng, rids, info = self.run_with_kill(6, tmp_path, prompt_len=4)
+        assert info["reprefilled"] > 0 and info["restored"] == 0
+        assert sorted(streams(eng)) == sorted(rids)
+
+    def test_no_store_reprefills(self):
+        ref = self.reference()
+        eng, rids, info = self.run_with_kill(10, tmp_path=None)
+        assert info["restored"] == 0
+        assert streams(eng) == streams(ref)
+
+    def test_stale_snapshot_replays_exactly(self, tmp_path):
+        """Kill between snapshots: the newest snapshot is several tokens
+        stale, so restore = transfer + teacher-forced replay of the gap.
+        Streams must still be exact."""
+        ref = self.reference()
+        eng, _, info = self.run_with_kill(11, tmp_path, cadence=8)
+        assert info["restored"] > 0
+        assert streams(eng) == streams(ref)
+
+    def test_dead_slots_never_readmit(self, tmp_path):
+        eng, _, _ = self.run_with_kill(10, tmp_path)
+        dead = eng._dead_slots
+        assert dead == set(range(8, 16))
+        for r in eng.completed:
+            pass                                  # engine drained fine
+        assert all(eng.slot_req[s] is None for s in dead)
+
+    def test_queued_work_folds_to_survivors(self, tmp_path):
+        """Requests homed on the dead host's list that never started must
+        fold one level up and still complete on survivors."""
+        eng = make_engine(kv_store=KVStore(tmp_path, 4))
+        rids = submit(eng, 8)
+        rng = np.random.default_rng(9)
+        # oversubscribe the doomed host: 12 requests homed on its list can
+        # occupy at most its 8 slots, so some are still queued at the kill
+        rids += [eng.submit(rng.integers(1, 200, 20), 8, prio=0,
+                            home="host1") for _ in range(12)]
+        eng.step()
+        info = eng.kill_host("host1")
+        assert info["queued_moved"] + info["requeued_pending"] > 0
+        eng.run(max_steps=2000)
+        assert sorted(streams(eng)) == sorted(rids)
+
+    def test_restart_baseline_loses_more_work(self, tmp_path):
+        """The drain-and-restart operator tears down every in-flight
+        request fleet-wide and ignores snapshots; it must re-prefill all of
+        them and take at least as many steps as the elastic path."""
+        ref = self.reference()
+        elastic, _, _ = self.run_with_kill(10, tmp_path)
+        base, rids, info = self.run_with_kill(10, tmp_path, restart=True)
+        assert info["restored"] == 0
+        assert info["orphaned"] >= 16            # the whole fleet, not a host
+        assert streams(base) == streams(ref)     # still zero loss...
+        assert base.steps >= elastic.steps       # ...but strictly more work
+
+    def test_kill_guards(self):
+        eng = make_engine()
+        with pytest.raises(KeyError):
+            eng.kill_host("host7")
+        with pytest.raises(AssertionError):
+            eng.kill_host("page0")               # not a host
+        eng.kill_host("host1")
+        with pytest.raises(AssertionError):
+            eng.kill_host("host0")               # the last host
+
+    def test_kv_store_needs_peek(self, tmp_path):
+        class NoPeek(StubModelBackend):
+            peek = None
+        with pytest.raises(AssertionError):
+            ServingEngine(None, None, n_slots=16, hosts=2, backend=NoPeek(),
+                          kv_store=KVStore(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine.join_host — the scale-out path
+# ---------------------------------------------------------------------------
+
+class TestJoinHost:
+    def test_join_grows_and_streams_match(self):
+        ref = make_engine()
+        submit(ref, 32, seed=1)
+        ref.run(max_steps=2000)
+        eng = make_engine()
+        rids = submit(eng, 32, seed=1)
+        for _ in range(6):
+            eng.step()
+        name = eng.join_host()
+        assert name == "host2"
+        assert eng.n_slots == 24
+        eng.run(max_steps=2000)
+        assert streams(eng) == streams(ref)
+        assert sorted(streams(eng)) == sorted(rids)
+        assert eng.stats.host_decode_steps[-1] > 0      # new host worked
+        assert eng.counters()["host_joins"] == 1
+
+    def test_join_after_kill_replaces_capacity(self, tmp_path):
+        ref = make_engine()
+        submit(ref, 24)
+        ref.run(max_steps=2000)
+        eng = make_engine(kv_store=KVStore(tmp_path, 4))
+        submit(eng, 24)
+        for _ in range(10):
+            eng.step()
+        eng.kill_host("host1")
+        name = eng.join_host()
+        assert name == "host2"                   # dead name stays dead
+        eng.run(max_steps=2000)
+        assert streams(eng) == streams(ref)
+
+    def test_slow_joiner_speed_credit(self):
+        eng = make_engine()
+        submit(eng, 32, seed=1)
+        eng.step()
+        eng.join_host(speed=0.5)
+        eng.run(max_steps=2000)
+        g = len(eng._exec_groups) - 1
+        # a 0.5-speed host decodes at most every other engine step
+        assert eng.stats.host_decode_steps[g] <= eng.steps // 2 + 1
+
+    def test_unattractive_join_skips_redeal(self):
+        """With nothing queued there is nothing to re-spread: the proactive
+        quote must not buy a rebalance (no spurious stalls)."""
+        eng = make_engine()
+        eng.join_host()
+        assert eng.sched.stats.rebalances == 0
+
+    def test_join_name_mismatch_caught(self):
+        eng = make_engine()
+        with pytest.raises(AssertionError):
+            eng.join_host("host9")

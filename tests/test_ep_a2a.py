@@ -9,6 +9,12 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
+# ~7 minutes of XLA compile on a shared runner: out of tier-1, into the
+# dedicated slow lane (Makefile PYTEST_ARGS / ci.yml "slow" job)
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 SCRIPT = textwrap.dedent("""
