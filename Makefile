@@ -11,8 +11,8 @@
 #   make bench-gate   bench-smoke + regression check against the committed
 #                     benchmarks/baseline_smoke.json (>10% speedup drop fails)
 #   make serve-gate   stub-model serving benchmarks alone (gang + open-loop
-#                     SLA rows; seconds, no jax) gated against the serve/
-#                     baseline rows
+#                     SLA + elastic + agentic rows; seconds, no jax) gated
+#                     against the serve/ baseline rows
 #   make jax-serve-gate  real-model serving lane: reduced zoo configs
 #                     behind the dense AND paged jax backends (streams
 #                     asserted identical, zero pool copies asserted);
@@ -46,12 +46,13 @@ bench-gate: bench-smoke
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_smoke.json
 
 # order matters: serve_gangs' merge replaces every serve/ row, so the
-# open-loop and elastic merges (which replace only their own rows) must
-# run after it
+# open-loop, elastic and agentic merges (which replace only their own
+# rows) must run after it
 serve-gate:
 	$(PYTHON) benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/serve_open_loop.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/serve_elastic.py --smoke --json BENCH_serve.json
+	$(PYTHON) benchmarks/serve_agentic.py --smoke --json BENCH_serve.json
 	$(PYTHON) benchmarks/check_regression.py benchmarks/baseline_smoke.json BENCH_serve.json --prefix serve/
 
 jax-serve-gate:

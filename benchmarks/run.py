@@ -61,16 +61,16 @@ def main() -> None:
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     json_path = _json_path(argv, smoke)
-    from benchmarks import (fig5_fibonacci, serve_elastic, serve_gangs,
-                            serve_open_loop, table2_conduction)
+    from benchmarks import (fig5_fibonacci, serve_agentic, serve_elastic,
+                            serve_gangs, serve_open_loop, table2_conduction)
 
     if smoke:
         mods = [table2_conduction, fig5_fibonacci, serve_gangs,
-                serve_open_loop, serve_elastic]
+                serve_open_loop, serve_elastic, serve_agentic]
     else:
         from benchmarks import roofline, table1_cost
         mods = [table1_cost, table2_conduction, fig5_fibonacci, roofline,
-                serve_gangs, serve_open_loop, serve_elastic]
+                serve_gangs, serve_open_loop, serve_elastic, serve_agentic]
 
     failed = 0
     out_rows = []

@@ -1,0 +1,154 @@
+"""Agentic serving benchmark: sleep-and-release vs hold-the-slot.
+
+Two gated rows, both replaying the same agentic trace (multi-turn chat
+sessions with heavy-tailed tool-call think gaps, a share of gang sessions
+sharing one schedule) against a contended 2-host fleet:
+
+* ``serve/agentic_slot_util_speedup`` — the **sleep** engine
+  (``agentic_sleep=True``) parks a session's KV at each tool call and
+  frees the slot for the backlog, waking it later near its home page
+  group (wake-affinity quote); the **hold** baseline
+  (``agentic_sleep=False``) keeps the slot occupied while the session
+  thinks.  The row is hold steps over sleep steps to drain the identical
+  trace (higher is better, kind ``speedup``) — under contention the
+  sleeping sessions are where all the capacity headroom lives.  Both
+  arms must complete every request with **token-identical streams**
+  (sleeping may never change what is decoded, only when) and the row
+  asserts the >= 1.2x acceptance floor.
+
+* ``serve/agentic_wake_latency`` — the p99 wake-to-token latency of the
+  sleep arm (tool response to first post-wake token, pooled over SLA
+  classes; lower is better, kind ``latency``).  Judged from the wake
+  ledger, which is distinct from TTFT — TTFT stays a first-admission
+  contract.
+
+Standalone entry point merges rows into the serve-gate JSON — run AFTER
+``serve_gangs.py`` (whose merge replaces every ``serve/`` row); like
+``serve_open_loop.py`` / ``serve_elastic.py`` it only replaces its own
+rows::
+
+    python benchmarks/serve_gangs.py --smoke --json BENCH_serve.json
+    python benchmarks/serve_open_loop.py --smoke --json BENCH_serve.json
+    python benchmarks/serve_elastic.py --smoke --json BENCH_serve.json
+    python benchmarks/serve_agentic.py --smoke --json BENCH_serve.json
+    python benchmarks/check_regression.py benchmarks/baseline_smoke.json \
+        BENCH_serve.json --prefix serve/
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.core.bubble import reset_ids
+from repro.serving import (SERVE_COST, ServingEngine, StubModelBackend,
+                           drive, make_agentic_trace, percentile)
+
+N_SLOTS = 16          # 2 hosts x 2 KV page groups x 4 slots
+TRACE = dict(steps=64, rate=1.1, seed=7, max_turns=4,
+             think=(2.2, 0.7, 4, 40), gang_share=0.3, gang_size=4)
+
+
+def _engine(**kw) -> ServingEngine:
+    reset_ids()
+    return ServingEngine(None, None, n_slots=N_SLOTS, group=4, hosts=2,
+                         backend=StubModelBackend(), cost_model=SERVE_COST,
+                         **kw)
+
+
+def _streams(eng: ServingEngine) -> dict:
+    return {r.rid: tuple(r.out_tokens) for r in eng.completed}
+
+
+def slot_util_row(trace) -> tuple[tuple, ServingEngine]:
+    sleep = drive(_engine(agentic_sleep=True), list(trace))
+    hold = drive(_engine(agentic_sleep=False), list(trace))
+    got_s, got_h = _streams(sleep), _streams(hold)
+    assert len(got_s) == len(trace), \
+        f"sleep arm lost requests ({len(got_s)}/{len(trace)})"
+    assert len(got_h) == len(trace), \
+        f"hold arm lost requests ({len(got_h)}/{len(trace)})"
+    assert got_s == got_h, "sleep and hold decode streams diverged"
+    cs, ch = sleep.counters(), hold.counters()
+    assert cs["sleeps"] > 0 and cs["wakes"] == cs["sleeps"], cs
+    assert ch["holds"] > 0 and ch["hold_slot_steps"] > 0, ch
+    ratio = hold.steps / sleep.steps
+    assert ratio >= 1.2, \
+        f"slot-util speedup {ratio:.3f} below the 1.2x acceptance floor"
+    c = dict(cs)
+    c["hold_steps"] = hold.steps
+    c["hold_slot_steps"] = ch["hold_slot_steps"]
+    row = ("serve/agentic_slot_util_speedup", ratio,
+           f"drain {hold.steps}->{sleep.steps} steps: {cs['sleeps']} sleeps "
+           f"freed slots the hold baseline idled for "
+           f"{ch['hold_slot_steps']} slot-steps "
+           f"({cs['wake_home']} home / {cs['wake_away']} away wakes), "
+           "streams identical", c, "speedup")
+    return row, sleep
+
+
+def wake_latency_row(sleep: ServingEngine) -> tuple:
+    lat = sleep.latency_summary()["classes"]
+    pooled = [w for rows in sleep._wake_lat.values() for w in rows]
+    assert pooled, "sleep arm recorded no wake-to-token samples"
+    p99 = percentile(pooled, 99)
+    per_cls = {f"wake_p99_{n}": r["wake_p99"] for n, r in lat.items()
+               if r["wakes"]}
+    per_cls["wake_samples"] = len(pooled)
+    per_cls["wake_p50"] = percentile(pooled, 50)
+    return ("serve/agentic_wake_latency", p99,
+            f"p99 wake-to-token {p99:.1f} steps over {len(pooled)} wakes "
+            f"(p50 {per_cls['wake_p50']:.1f})", per_cls, "latency")
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    trace = make_agentic_trace(**TRACE)
+    assert any(r.tool_calls for r in trace)
+    row, sleep = slot_util_row(trace)
+    return [row, wake_latency_row(sleep)]
+
+
+def merge_into_json(rows: list[tuple], path: str) -> None:
+    """Replace only this module's rows (``serve_gangs`` owns the wholesale
+    ``serve/`` replace; this must run after it)."""
+    doc = {"schema": 1, "suite": "smoke", "rows": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc.get("schema") == 1, doc.get("schema")
+        mine = {name for name, *_ in rows}
+        doc["rows"] = [r for r in doc["rows"] if r["name"] not in mine]
+    for name, v, d, counters, kind in rows:
+        doc["rows"].append({"name": name, "value": round(v, 6),
+                            "kind": kind, "derived": d,
+                            "counters": counters})
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# merged {len(rows)} agentic rows into {path}", file=sys.stderr)
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        json_path = argv[i + 1] if i + 1 < len(argv) and \
+            not argv[i + 1].startswith("-") else "BENCH_smoke.json"
+    elif smoke:
+        json_path = "BENCH_smoke.json"
+    rows = run(smoke=smoke)
+    for name, v, d, _, kind in rows:
+        print(f"{name},{v:.4f},{d}")
+    if json_path:
+        merge_into_json(rows, json_path)
+
+
+if __name__ == "__main__":
+    main()

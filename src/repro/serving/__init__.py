@@ -1,14 +1,16 @@
 from .engine import (BW_SERVE_COST, FLAT_SERVE_COST, SERVE_COST,
                      SERVE_FREE_LEVELS, EngineStats, JaxModelBackend,
                      PagedJaxModelBackend, Request, ServingEngine,
-                     StubModelBackend, slots_topology)
+                     SleepingLedger, StubModelBackend, slots_topology)
 from .workload import (SLA_CLASSES, OpenRequest, SLAClass, bursty_arrivals,
                        diurnal_arrivals, drive, goodput_under_sla,
-                       make_trace, percentile, poisson_arrivals)
+                       make_agentic_trace, make_trace, percentile,
+                       poisson_arrivals)
 
 __all__ = ["Request", "ServingEngine", "slots_topology", "SERVE_COST",
            "FLAT_SERVE_COST", "BW_SERVE_COST", "SERVE_FREE_LEVELS",
-           "EngineStats", "JaxModelBackend",
+           "EngineStats", "JaxModelBackend", "SleepingLedger",
            "PagedJaxModelBackend", "StubModelBackend", "SLAClass", "SLA_CLASSES", "OpenRequest",
            "poisson_arrivals", "bursty_arrivals", "diurnal_arrivals",
-           "make_trace", "drive", "goodput_under_sla", "percentile"]
+           "make_trace", "make_agentic_trace", "drive", "goodput_under_sla",
+           "percentile"]

@@ -152,6 +152,21 @@ class Request:
     first_token_step: Optional[int] = None   # step the prefill token landed
     last_token_step: Optional[int] = None    # step of the latest token
     finish_step: Optional[int] = None        # step the request completed
+    # -- agentic sessions (tool calls / multi-turn) --
+    # ``tool_calls`` is a tuple of ``(at_tokens, think_steps)`` markers:
+    # when the request's emitted-token count reaches ``at_tokens`` it
+    # blocks on an external event (a tool response) for ``think_steps``
+    # engine steps (``None`` = until the client calls ``engine.wake``).
+    # No tokens are injected on wake, so a request's stream is a pure
+    # function of its prompt — identical with or without the sleeps.
+    tool_calls: tuple = ()
+    next_call: int = 0                 # index of the next unfired marker
+    wake_step: Optional[int] = None    # step the latest tool response landed
+    # a resumed service interval: the first token after a park/sleep is
+    # not an inter-token gap (the request was not being served) — the
+    # latency ledger records wake-to-token instead when ``wake_step`` is
+    # set, and nothing otherwise
+    service_break: bool = False
 
 
 @dataclasses.dataclass
@@ -198,6 +213,16 @@ class EngineStats:
       live, resident requests whose KV died with a host, and how each
       orphan was brought back (snapshot restore + replay vs re-prefill
       from scratch — whichever the cost model quoted cheaper).
+    * the agentic ledger: ``sleeps`` counts tool-call slot releases
+      (sleep-and-release mode), ``holds`` tool calls that kept their slot
+      (the baseline) and ``hold_slot_steps`` the slot-steps those held
+      slots sat idle; ``wakes`` counts tool responses delivered, split
+      ``wake_home`` (spliced back under the session's old page group) vs
+      ``wake_away`` (the wake-affinity quote found somewhere cheaper and
+      billed the move); ``stale_evictions`` sessions whose parked KV was
+      dropped past ``session_ttl`` and ``wake_reprefills`` the wakes that
+      consequently had to rebuild their continuation from the full
+      history.
     """
 
     prefills: int = 0            # fresh REQUESTS prefilled (not calls)
@@ -224,6 +249,15 @@ class EngineStats:
     orphaned: int = 0            # residents whose KV died with a host
     kv_restores: int = 0         # orphans resumed from the KV snapshot store
     reprefills: int = 0          # orphans recomputed from scratch
+    # agentic ledger (tool-call sleep/wake)
+    sleeps: int = 0              # tool calls that released their slot
+    holds: int = 0               # tool calls that kept it (baseline)
+    hold_slot_steps: int = 0     # slot-steps held slots sat idle thinking
+    wakes: int = 0               # tool responses delivered
+    wake_home: int = 0           # ...spliced back under the home page group
+    wake_away: int = 0           # ...re-homed by the wake-affinity quote
+    wake_reprefills: int = 0     # wakes that rebuilt KV from history
+    stale_evictions: int = 0     # sleeping sessions whose KV hit session_ttl
     # per-host execution ledger (sized by the engine at construction)
     host_decode_steps: list = dataclasses.field(default_factory=list)
     host_active_slots: list = dataclasses.field(default_factory=list)
@@ -695,6 +729,20 @@ class PagedJaxModelBackend:
         shard.lengths[slot] = 0
         return shard
 
+    def drop(self, handle) -> None:
+        """Free a *parked* handle's pages back to their source pool
+        without ever splicing it in — stale-session eviction: the engine
+        lets go of a sleeping session's KV to reclaim the pages, and a
+        later wake rebuilds the continuation by re-prefill.  Fresh
+        (never-paged) handles own no pool pages and are a no-op."""
+        if not isinstance(handle, dict) or handle.get("kind") != "paged":
+            return
+        src = handle.get("shard")
+        pages = handle.get("pages") or []
+        if src is not None and pages:
+            src.free.extend(pages)
+        handle["pages"] = []
+
 
 class StubModelBackend:
     """Deterministic numpy decode/prefill stand-in — no jax, no jit.
@@ -767,6 +815,78 @@ class StubModelBackend:
             acc = self._fold(acc, tok)
             pos += 1
         return np.array([pos, acc], np.int64)
+
+
+# ---------------------------------------------------------------------------
+# agentic sessions: the sleeping ledger
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SleepEntry:
+    """One session blocked on an external event (a tool response).
+
+    In sleep-and-release mode the entry lives in the engine's
+    :class:`SleepingLedger` and the thread is held off every run queue;
+    in the hold-the-slot baseline the same record sits in
+    ``ServingEngine._thinking`` keyed by the slot it refuses to give up.
+    Either way ``state`` is the parked backend KV handle (``None`` once a
+    stale eviction dropped it), ``token`` the last emitted token the
+    resumed decode feeds on, and ``home_page`` the page-group component
+    the session slept under — the anchor of the wake-affinity quote."""
+
+    rid: int
+    thread: Thread
+    state: object
+    token: int
+    home_page: object
+    slept_step: int
+    wake_at: Optional[int]            # None: waits for engine.wake(rid)
+    retained: Optional[int] = None    # page-group index still holding the
+                                      # session's HBM reservation
+                                      # (``sleep_retain_hbm``)
+
+
+class SleepingLedger:
+    """rid-keyed registry of sessions asleep on external events.
+
+    Deliberately dumb — add/get/pop plus the two scans the engine's
+    per-step wake pass runs: ``due`` (tool responses that have landed)
+    and ``stale`` (KV parked longer than the session TTL, still worth
+    holding a handle for).  The engine is not drained while any entry
+    exists: a sleeping session owns no slot and sits on no queue, and
+    this ledger is the only thing keeping it alive."""
+
+    def __init__(self) -> None:
+        self._by_rid: dict[int, SleepEntry] = {}
+
+    def add(self, e: SleepEntry) -> None:
+        assert e.rid not in self._by_rid, f"rid {e.rid} already asleep"
+        self._by_rid[e.rid] = e
+
+    def get(self, rid: int) -> Optional[SleepEntry]:
+        return self._by_rid.get(rid)
+
+    def pop(self, rid: int) -> SleepEntry:
+        return self._by_rid.pop(rid)
+
+    def __len__(self) -> int:
+        return len(self._by_rid)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._by_rid
+
+    def entries(self) -> list[SleepEntry]:
+        return list(self._by_rid.values())
+
+    def due(self, now: float) -> list[SleepEntry]:
+        """Entries whose scheduled tool response has landed."""
+        return [e for e in self._by_rid.values()
+                if e.wake_at is not None and e.wake_at <= now]
+
+    def stale(self, now: float, ttl: int) -> list[SleepEntry]:
+        """Entries still holding KV that have slept past the TTL."""
+        return [e for e in self._by_rid.values()
+                if e.state is not None and now - e.slept_step >= ttl]
 
 
 # ---------------------------------------------------------------------------
@@ -856,7 +976,10 @@ class ServingEngine:
                  sla_classes: Optional[dict] = None, preempt: bool = False,
                  preempt_cooldown: int = 8,
                  kv_store=None, kv_restore_level: str = "host",
-                 reprefill_unit: float = 0.25):
+                 reprefill_unit: float = 0.25,
+                 agentic_sleep: bool = True, wake_quote: bool = True,
+                 sleep_retain_hbm: bool = False,
+                 session_ttl: Optional[int] = None):
         assert mode in ("runtime", "admission"), mode
         self.cfg = cfg
         self.params = params
@@ -1015,6 +1138,32 @@ class ServingEngine:
         self.kv_store = kv_store
         self.kv_restore_level = kv_restore_level
         self.reprefill_unit = reprefill_unit
+        # -- agentic sessions: tool-call sleep/wake --
+        # ``agentic_sleep`` (default): a request hitting a tool-call
+        # marker *sleeps* — KV parked, slot freed, thread held in the
+        # SleepingLedger until the tool response.  ``False`` is the
+        # hold-the-slot baseline: the request keeps its slot (and HBM
+        # reservation) idle through the think gap — the measurable
+        # contrast for ``serve/agentic_slot_util_speedup``.  Streams are
+        # identical either way: a sleep injects no tokens.
+        self.agentic_sleep = agentic_sleep
+        # ``wake_quote`` arbitrates wake placement (home page group vs
+        # the cheapest group under current queue/HBM pressure, the away
+        # move priced at cost-model belief and billed at bill-model
+        # truth); ``False`` pins every wake to its home group.
+        self.wake_quote = wake_quote
+        # ``sleep_retain_hbm``: keep the sleeper's KV bytes reserved in
+        # its home page group (guaranteed wake-home capacity, paid in
+        # admission headroom); default refunds the reservation — parked
+        # KV lives host-side, off the budget, like every other park.
+        self.sleep_retain_hbm = sleep_retain_hbm
+        # ``session_ttl``: engine steps a sleeping session's KV survives
+        # before the stale-eviction pass drops it (the wake then pays a
+        # full re-prefill).  ``None`` holds KV forever.
+        self.session_ttl = session_ttl
+        self._sleeping = SleepingLedger()
+        self._thinking: dict[int, SleepEntry] = {}   # hold-mode, by slot
+        self._wake_lat: dict[str, list] = {}         # wake-to-token ledger
         if kv_store is not None:
             assert mode == "runtime", "kv snapshots need the runtime engine"
             assert callable(getattr(self.backend, "peek", None)), \
@@ -1036,7 +1185,8 @@ class ServingEngine:
     # -- client API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
                prio: Optional[int] = None, gang: Optional[str] = None,
-               home: Optional[str] = None, sla: Optional[str] = None) -> int:
+               home: Optional[str] = None, sla: Optional[str] = None,
+               tool_calls: tuple = ()) -> int:
         """Queue one request.  ``home`` names a topology component
         (``"host1"``, ``"page3"``, ...) whose list receives the work — the
         cross-host admission path: a front-end that routes a gang to one
@@ -1053,7 +1203,23 @@ class ServingEngine:
         to the class's paper priority (§3.3.2) and the class rides the
         WDRR admission gate; without ``sla_classes`` the label is carried
         for measurement only (the FIFO baseline's requests are judged by
-        the same SLOs)."""
+        the same SLOs).
+
+        ``tool_calls`` marks the request agentic: a tuple of
+        ``(at_tokens, think_steps)`` markers, ordered by position — when
+        the emitted-token count reaches ``at_tokens`` the request blocks
+        on a tool response for ``think_steps`` engine steps
+        (``think_steps=None`` blocks until :meth:`wake`).  See
+        ``agentic_sleep`` for what blocking does to the slot."""
+        tool_calls = tuple((int(at), None if think is None else int(think))
+                           for at, think in tool_calls)
+        last_at = 1
+        for at, think in tool_calls:
+            assert 1 <= at < max_new_tokens, \
+                f"tool call at token {at} outside 1..{max_new_tokens - 1}"
+            assert at >= last_at, "tool calls must be ordered by position"
+            assert think is None or think >= 1, think
+            last_at = at
         if prio is None:
             prio = (self.sla_classes[sla].prio
                     if self.sla_classes and sla in self.sla_classes else 0)
@@ -1061,7 +1227,7 @@ class ServingEngine:
         self._next_rid += 1
         req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
                       prio=prio, gang=gang, sla=sla, tier=sla,
-                      submit_step=self.steps)
+                      submit_step=self.steps, tool_calls=tool_calls)
         self._reqs[rid] = req
         t = thread(float(max_new_tokens), name=f"req{rid}", prio=prio,
                    data=gang or f"req{rid}")
@@ -1329,9 +1495,25 @@ class ServingEngine:
 
     def _note_token(self, req: Request, now: float) -> None:
         """Record one decode token's inter-token gap (engine steps since
-        the previous token — >1 means the request sat out stalled or
-        parked steps)."""
-        if req.last_token_step is not None:
+        the previous token — >1 means the request sat out stalled steps).
+
+        A request with multiple service intervals (parked, preempted, or
+        asleep on a tool call, then spliced back) must NOT count the
+        break as an inter-token gap — the old ledger did, so one sleeping
+        session's think time double-counted as a monster token gap AND
+        sat in the percentiles of a class that was never being served.
+        The first token after a resume is flagged (``service_break``) and
+        recorded in the wake-to-token ledger instead when the break was a
+        wake (``wake_step`` set: tool response -> first token, the
+        latency an agentic user actually feels), or dropped entirely for
+        scheduler-imposed parks."""
+        if req.service_break:
+            req.service_break = False
+            if req.wake_step is not None:
+                self._wake_lat.setdefault(req.sla or "unclassed", []).append(
+                    int(now) - req.wake_step)
+                req.wake_step = None
+        elif req.last_token_step is not None:
             self._gaps.setdefault(req.sla or "unclassed", []).append(
                 int(now) - req.last_token_step)
         req.last_token_step = int(now)
@@ -1342,17 +1524,27 @@ class ServingEngine:
         TTFT and inter-token gaps are in engine steps, aggregated with the
         deterministic nearest-rank percentile; ``goodput`` counts completed
         requests whose TTFT met their contract class's SLO (see
-        :func:`repro.serving.workload.goodput_under_sla`)."""
+        :func:`repro.serving.workload.goodput_under_sla`).
+
+        TTFT is judged on the *first* admission only (``_note_first_token``
+        never re-stamps a resumed request); re-woken service intervals
+        report separately as ``wake_p50``/``wake_p99`` — tool response to
+        first post-wake token — with ``wakes`` the sample count."""
         out: dict = {"classes": {}}
-        for name in sorted(set(self._ttft) | set(self._gaps)):
+        for name in sorted(set(self._ttft) | set(self._gaps)
+                           | set(self._wake_lat)):
             t = self._ttft.get(name, [])
             g = self._gaps.get(name, [])
+            w = self._wake_lat.get(name, [])
             out["classes"][name] = {
                 "n": len(t),
                 "ttft_p50": percentile(t, 50),
                 "ttft_p99": percentile(t, 99),
                 "tok_p50": percentile(g, 50),
                 "tok_p99": percentile(g, 99),
+                "wakes": len(w),
+                "wake_p50": percentile(w, 50),
+                "wake_p99": percentile(w, 99),
             }
         if self.sla_classes:
             good, total = goodput_under_sla(self.completed, self.sla_classes)
@@ -1454,6 +1646,7 @@ class ServingEngine:
             if parked is not None:
                 st, tok = parked
                 self.tokens[slot, 0] = tok    # resume the continuation
+                req.service_break = True      # next token is not a gap
                 writes.append((slot, st))
             elif self.wave_prefill:
                 # defer: fresh prompts of one wave batch into one prefill
@@ -1583,8 +1776,8 @@ class ServingEngine:
         gang_slots: dict[str, list[int]] = {}
         for s in range(self.n_slots):
             req = self.slot_req[s]
-            if req is None or req.done:
-                continue
+            if req is None or req.done or s in self._thinking:
+                continue          # thinking slots hold no spliceable state
             cls = self.sla_classes.get(req.tier) if req.tier else None
             if cls is None or not cls.preemptible:
                 continue
@@ -1878,6 +2071,10 @@ class ServingEngine:
         self.steps += 1
         if self.kv_store is not None:
             self._maybe_snapshot_kv(int(now))
+        if self._sleeping or self._thinking:
+            # tool responses land before admission, so a woken session can
+            # re-enter a slot (and decode) in the very step it wakes
+            self._process_wakes(now)
         self._maybe_rebalance(now)
         self._maybe_preempt(now)
         self._admit(now)
@@ -1886,7 +2083,12 @@ class ServingEngine:
         # reservations the same wave's claims are about to take
         self._maybe_split_gang(now)
         active = [s for s in range(self.n_slots)
-                  if self.slot_req[s] is not None]
+                  if self.slot_req[s] is not None
+                  and s not in self._thinking]
+        if self._thinking:
+            # the hold-the-slot cost, in its own currency: occupied slots
+            # decoding nothing while their session waits on a tool
+            self.stats.hold_slot_steps += len(self._thinking)
         for s in range(self.n_slots):
             if self._stall[s] > 0:
                 self._stall[s] = max(0.0, self._stall[s] - 1.0)
@@ -1918,12 +2120,17 @@ class ServingEngine:
                 t.remaining -= 1.0
                 if len(req.out_tokens) >= req.max_new_tokens:
                     self._evict(s, now)
+                elif (req.next_call < len(req.tool_calls)
+                      and len(req.out_tokens)
+                      >= req.tool_calls[req.next_call][0]):
+                    self._tool_call(s, now)
                 else:
                     self._maybe_demote(req, t)
         return len(active)
 
     def _drained(self) -> bool:
         return (not any(self.slot_req) and not self._pending
+                and not self._sleeping and not self._thinking
                 and self.sched.queues.total_tasks() == 0
                 and not any(st > 0 for st in self._stall))
 
@@ -1972,6 +2179,23 @@ class ServingEngine:
             if req is not None and req.gang == gang and not req.done:
                 t = self.slot_thread.pop(s)
                 self.slot_req[s] = None
+                if s in self._thinking:
+                    # a hold-mode member mid-think: its KV is already
+                    # extracted into the thinking entry — converting it to
+                    # a ledger sleep (slot freed, wake deadline kept) is
+                    # the only move that neither double-extracts nor
+                    # collapses the pending tool response
+                    e = self._thinking.pop(s)
+                    self.tokens[s, 0] = 0
+                    self._refund(s)
+                    self.runtime.release(s, t, False, now)
+                    if t.parent is not None:
+                        t.parent.children.remove(t)
+                        t.parent = None
+                    self._sleeping.add(e)
+                    self.stats.sleeps += 1
+                    n += 1
+                    continue
                 g = self._group_of[s]
                 self._kv_park[req.rid] = (
                     self.backend.extract(self._states[g],
@@ -1985,6 +2209,221 @@ class ServingEngine:
                 n += 1
         self.sched.regenerate(b, running={})
         return n
+
+    # -- agentic sessions: tool-call sleep / wake ------------------------------
+    def _tool_call(self, slot: int, now: float) -> None:
+        """The resident request just hit its next tool-call marker: block
+        it on the external event — sleep-and-release or hold-the-slot,
+        per the engine's ``agentic_sleep`` knob."""
+        req = self.slot_req[slot]
+        _, think = req.tool_calls[req.next_call]
+        req.next_call += 1
+        wake_at = None if think is None else int(now) + int(think)
+        if self.agentic_sleep:
+            self._sleep_slot(slot, wake_at, now)
+        else:
+            self._hold_slot(slot, wake_at, now)
+
+    def _sleep_slot(self, slot: int, wake_at: Optional[int], now: float
+                    ) -> None:
+        """Park the slot's KV and free it: the session's thread leaves
+        every run queue (held in the SleepingLedger — a sleeping session
+        is not schedulable work) and, unless ``sleep_retain_hbm``, its
+        HBM reservation is refunded.  The freed slot admits someone else
+        in the next wave: under load, this is where the capacity headroom
+        comes from."""
+        req = self.slot_req[slot]
+        t = self.slot_thread.pop(slot)
+        self.slot_req[slot] = None
+        g = self._group_of[slot]
+        handle = self.backend.extract(self._states[g],
+                                      slot - self._exec_groups[g][0])
+        entry = SleepEntry(req.rid, t, handle, int(self.tokens[slot, 0]),
+                           self.topo.cpus[slot].path()[self._page_idx],
+                           int(now), wake_at)
+        self.tokens[slot, 0] = 0
+        if self.sleep_retain_hbm and self._slot_charged[slot]:
+            # keep the bytes reserved in the home group for the wake, but
+            # detach them from the slot (someone else's claim will charge
+            # it normally); released when the entry leaves the ledger
+            entry.retained = self._page_of[slot]
+            self._slot_charged[slot] = False
+        else:
+            self._refund(slot)
+        self.runtime.release(slot, t, False, now)
+        # detach a gang member from its bubble: a later burst of the
+        # (regenerated) gang would otherwise re-push the sleeping thread
+        # onto a run queue and double-schedule it on wake
+        if t.parent is not None:
+            t.parent.children.remove(t)
+            t.parent = None
+        self._sleeping.add(entry)
+        self.stats.sleeps += 1
+        self.stats.kv_parks += 1
+
+    def _hold_slot(self, slot: int, wake_at: Optional[int], now: float
+                   ) -> None:
+        """The baseline: keep the slot (and its HBM reservation) through
+        the think gap.  The KV is still extracted — the whole-host-batch
+        decode advances every resident state, so a thinking slot's state
+        must sit out host-side and be spliced back on wake or the
+        continuation would be corrupted — but the slot admits nobody."""
+        req = self.slot_req[slot]
+        g = self._group_of[slot]
+        handle = self.backend.extract(self._states[g],
+                                      slot - self._exec_groups[g][0])
+        self._thinking[slot] = SleepEntry(
+            req.rid, self.slot_thread[slot], handle,
+            int(self.tokens[slot, 0]),
+            self.topo.cpus[slot].path()[self._page_idx], int(now), wake_at)
+        self.tokens[slot, 0] = 0
+        self.stats.holds += 1
+
+    def _process_wakes(self, now: float) -> None:
+        """Deliver scheduled tool responses: splice thinking slots back in
+        place (hold mode), wake due ledger entries onto run queues (sleep
+        mode), then drop the KV of sessions sleeping past the TTL."""
+        for slot in sorted(self._thinking):
+            e = self._thinking[slot]
+            if e.wake_at is not None and e.wake_at <= now:
+                self._wake_hold(slot, now)
+        for e in self._sleeping.due(now):
+            self._wake_entry(e, now)
+        if self.session_ttl is not None:
+            for e in self._sleeping.stale(now, self.session_ttl):
+                self._evict_stale(e)
+
+    def _wake_hold(self, slot: int, now: float) -> None:
+        """Hold-mode wake: splice the held state back into the slot it
+        never gave up."""
+        e = self._thinking.pop(slot)
+        req = self.slot_req[slot]
+        g = self._group_of[slot]
+        self._states[g] = self.backend.splice(
+            self._states[g], [(slot - self._exec_groups[g][0], e.state)])
+        self.stats.kv_splices += 1
+        self.stats.kv_spliced_slots += 1
+        self.tokens[slot, 0] = e.token
+        req.wake_step = int(now)
+        req.service_break = True
+        self.stats.wakes += 1
+
+    def _queue_wait_quote(self, page_comp, depth: int) -> float:
+        """Expected wait (engine steps) before a page group can serve one
+        more request: its queued backlog spread over its slots, plus —
+        when the group is at its HBM budget — the time until residents
+        free one reservation on their own (``_split_wait_quote``)."""
+        w = depth / max(sum(1 for _ in page_comp.leaves()), 1)
+        if self.hbm_budget is not None:
+            need = self.kv_bytes - self._headroom(page_comp.index)
+            if need > 1e-9:
+                w += self._split_wait_quote(page_comp, need)
+        return w
+
+    def _wake_dest(self, entry: SleepEntry):
+        """The wake-affinity quote: where should this session resume?
+
+        Home is free (the KV handle splices back as a metadata edit on
+        the paged backend); any other page group pays the believed
+        transfer toll (``cost_model.rebalance_move_cost`` over the
+        boundary crossed, byte-priced under a bandwidth table) on top of
+        its queue/HBM wait.  The cheapest total wins, ties to home — so
+        an idle fleet always restores affinity, and only genuine pressure
+        at home (backlog, a full budget) buys the away move.  A home
+        group lost to ``kill_host`` quotes infinite and the live groups
+        compete on their own merits."""
+        pages = self.topo.components("page")
+        if not self.wake_quote:
+            return entry.home_page if any(
+                p is entry.home_page for p in pages) else pages[0]
+        depths = self._page_depths()
+        cm = self.sched.cost_model
+        ranked = sorted(zip(pages, depths),
+                        key=lambda pd: pd[0] is not entry.home_page)
+        best, best_q = None, None
+        for comp, depth in ranked:          # home first: wins ties
+            toll = 0.0 if comp is entry.home_page else \
+                cm.rebalance_move_cost(
+                    self.topo.crossing_between(entry.home_page, comp),
+                    self.kv_bytes)
+            q = self._queue_wait_quote(comp, depth) + toll
+            if best_q is None or q < best_q - 1e-9:
+                best, best_q = comp, q
+        return best
+
+    def _wake_entry(self, e: SleepEntry, now: float) -> None:
+        """Sleep-mode wake: the tool response landed.  Rebuild the
+        continuation if the KV was stale-evicted (full-history re-prefill,
+        billed at ``reprefill_unit`` per token like a kill_host orphan),
+        park it for the admission splice, and push the thread where the
+        wake-affinity quote says — an away move is billed at bill-model
+        prices as an admission stall and flags the thread ``stolen`` so
+        next-touch re-homes the session's KV data object."""
+        req = self._reqs[e.rid]
+        t = e.thread
+        self._sleeping.pop(e.rid)
+        if e.retained is not None:
+            self.hbm_used[e.retained] -= self.kv_bytes
+            e.retained = None
+        if e.state is None:
+            m = len(req.out_tokens)
+            hist = req.prompt if m == 1 else np.concatenate(
+                [req.prompt, np.asarray(req.out_tokens[:-1], np.int32)])
+            _, st = self.backend.prefill(hist)
+            tok = int(req.out_tokens[-1])
+            debt = (len(req.prompt) + m - 1) * self.reprefill_unit
+            if debt:
+                self._restore_debt[req.rid] = \
+                    self._restore_debt.get(req.rid, 0.0) + debt
+            self.stats.wake_reprefills += 1
+        else:
+            st, tok = e.state, e.token
+        self._kv_park[req.rid] = (st, tok)
+        dest = self._wake_dest(e)
+        if dest is e.home_page:
+            self.stats.wake_home += 1
+        else:
+            self.stats.wake_away += 1
+            bill = self.sched.bill_model.rebalance_move_cost(
+                self.topo.crossing_between(e.home_page, dest),
+                self.kv_bytes)
+            if bill:
+                self._restore_debt[req.rid] = \
+                    self._restore_debt.get(req.rid, 0.0) + bill
+            t.stolen = True          # next touch re-homes the KV data id
+        self.sched.queues.queue_of(dest).push(t)
+        req.wake_step = int(now)
+        self.stats.wakes += 1
+
+    def _evict_stale(self, e: SleepEntry) -> None:
+        """Drop a sleeping session's parked KV (its pages go back to the
+        pool on a paged backend); the entry survives — a later wake
+        re-prefills the continuation from the token history."""
+        drop = getattr(self.backend, "drop", None)
+        if drop is not None:
+            drop(e.state)
+        e.state = None
+        if e.retained is not None:
+            self.hbm_used[e.retained] -= self.kv_bytes
+            e.retained = None
+        self.stats.stale_evictions += 1
+
+    def wake(self, rid: int) -> bool:
+        """Deliver a tool response from the client side: wake session
+        ``rid`` now.  Markers submitted with ``think_steps=None`` wait
+        for exactly this call (``run()`` alone will not drain them);
+        scheduled markers wake themselves and need it only to wake
+        *early*.  Returns False when ``rid`` is not asleep."""
+        now = float(self.steps)
+        e = self._sleeping.get(rid)
+        if e is not None:
+            self._wake_entry(e, now)
+            return True
+        for slot, e in list(self._thinking.items()):
+            if e.rid == rid:
+                self._wake_hold(slot, now)
+                return True
+        return False
 
     # -- elastic fleet: live host loss / join ---------------------------------
     def _maybe_snapshot_kv(self, step: int) -> None:
@@ -2084,7 +2523,17 @@ class ServingEngine:
                 requeued += 1
 
         # 2. residents of doomed slots are orphans: pop the thread, free
-        #    the slot — their KV is gone, restoration is decided below
+        #    the slot — their KV is gone, restoration is decided below.
+        #    A thinking (hold-mode) resident's held handle counts as died
+        #    with its host too: drop it (freeing pool pages if the shard
+        #    survives a restart teardown) and let the orphan path rebuild
+        #    the continuation from history like any other resident.
+        drop = getattr(self.backend, "drop", None)
+        for s in list(self._thinking):
+            if restart or s in dead:
+                e = self._thinking.pop(s)
+                if drop is not None and s not in dead:
+                    drop(e.state)
         orphans: list[tuple] = []
         doomed = range(self.n_slots) if restart else sorted(dead)
         for s in doomed:
@@ -2314,5 +2763,18 @@ class ServingEngine:
                 "orphaned": self.stats.orphaned,
                 "kv_restores": self.stats.kv_restores,
                 "reprefills": self.stats.reprefills,
+            })
+        if self.stats.sleeps or self.stats.holds:
+            # agentic ledger: keyed only when a tool call actually fired,
+            # so every pre-agentic benchmark row stays bit-identical
+            out.update({
+                "sleeps": self.stats.sleeps,
+                "holds": self.stats.holds,
+                "hold_slot_steps": self.stats.hold_slot_steps,
+                "wakes": self.stats.wakes,
+                "wake_home": self.stats.wake_home,
+                "wake_away": self.stats.wake_away,
+                "wake_reprefills": self.stats.wake_reprefills,
+                "stale_evictions": self.stats.stale_evictions,
             })
         return out

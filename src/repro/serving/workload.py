@@ -58,8 +58,8 @@ from typing import Optional
 import numpy as np
 
 __all__ = ["SLAClass", "SLA_CLASSES", "OpenRequest", "poisson_arrivals",
-           "bursty_arrivals", "diurnal_arrivals", "make_trace", "drive",
-           "goodput_under_sla", "percentile"]
+           "bursty_arrivals", "diurnal_arrivals", "make_trace",
+           "make_agentic_trace", "drive", "goodput_under_sla", "percentile"]
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +120,7 @@ class OpenRequest:
     prompt: np.ndarray             # (S,) int32 token ids
     new_tokens: int                # decode length
     gang: Optional[str] = None     # prefix-affine group (batch tiers)
+    tool_calls: tuple = ()         # ((at_tokens, think_steps), ...) markers
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +205,54 @@ def make_trace(*, steps: int, rate: float, seed: int = 0,
     return trace
 
 
+def make_agentic_trace(*, steps: int, rate: float, seed: int = 0,
+                       vocab: int = 251, max_turns: int = 4,
+                       turn_len: tuple = (1.7, 0.5, 2, 12),
+                       think: tuple = (1.6, 0.8, 2, 24),
+                       prompt_len: tuple = (2.0, 0.5, 4, 24),
+                       gang_share: float = 0.35, gang_size: int = 4,
+                       sla: str = "standard",
+                       gang_sla: str = "batch") -> list[OpenRequest]:
+    """Generate an agentic/tool-calling trace: chat *sessions* that decode
+    a turn, hit a tool call, think for a heavy-tailed gap (clipped
+    lognormal — most tool round-trips are short, a fat tail is not), then
+    decode the next turn, for 1..``max_turns`` turns per session.  Each
+    session is one request whose ``tool_calls`` carries the per-session
+    turn chain ``((at_tokens, think_steps), ...)``; the engine sleeps the
+    request at each marker and wakes it after the gap.
+
+    A ``gang_share`` fraction of sessions arrive as prefix-affine gangs
+    (one shared prompt, one shared tool-call schedule), so the whole gang
+    sleeps and wakes together — the multi-agent shape where parked KV is
+    the steady-state resource.  Deterministic: same arguments, same trace.
+    """
+    assert 0.0 <= gang_share <= 1.0 and gang_size >= 1, (gang_share,
+                                                         gang_size)
+    rng = np.random.default_rng(seed)
+    counts = poisson_arrivals(rate, steps, rng)
+    trace: list[OpenRequest] = []
+    gno = 0
+    for step, n in enumerate(counts):
+        for _ in range(n):
+            turns = int(rng.integers(1, max_turns + 1))
+            lens = [_length(rng, *turn_len) for _ in range(turns)]
+            calls, at = [], 0
+            for length in lens[:-1]:
+                at += length
+                calls.append((at, _length(rng, *think)))
+            prompt = rng.integers(1, vocab, _length(rng, *prompt_len))
+            if gang_size > 1 and rng.random() < gang_share:
+                gang = f"ag{gno}"
+                gno += 1
+                for _ in range(gang_size):
+                    trace.append(OpenRequest(step, gang_sla, prompt,
+                                             sum(lens), gang, tuple(calls)))
+            else:
+                trace.append(OpenRequest(step, sla, prompt, sum(lens),
+                                         None, tuple(calls)))
+    return trace
+
+
 # ---------------------------------------------------------------------------
 # the open-loop driver + latency accounting helpers
 # ---------------------------------------------------------------------------
@@ -228,7 +277,7 @@ def drive(engine, trace: list[OpenRequest], *, max_steps: int = 20000,
             if prio_from_class is not None and r.sla in prio_from_class:
                 kw["prio"] = prio_from_class[r.sla].prio
             engine.submit(r.prompt, r.new_tokens, sla=r.sla, gang=r.gang,
-                          **kw)
+                          tool_calls=r.tool_calls, **kw)
         engine.step()
         if engine.steps > max_steps:
             raise RuntimeError(

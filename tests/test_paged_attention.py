@@ -23,6 +23,11 @@ Four layers, cheapest first:
   which the old ``ndim >= 2`` heuristic silently skipped on splice
   (resuming a request with another request's state had any model carried
   one).
+* **agentic prefix reuse** — a tool-calling session that sleeps
+  mid-decode and wakes with its prefix KV pages still resident resumes
+  as a block-table re-point (``table_splices > 0``, ``pool_copies == 0``,
+  no re-prefill), and its stream is bit-identical to a cold wake whose KV
+  was stale-evicted and re-prefilled from the token history.
 """
 
 import numpy as np
@@ -189,6 +194,43 @@ class TestEngineZeroCopy:
         assert pb.stats["table_splices"] > 0      # resumes were metadata
         assert pb.stats["pool_copies"] == 0       # ... and ONLY metadata
         assert pb.stats["pool_page_writes"] > 0   # prefills did page in
+
+
+class TestAgenticPrefixReuse:
+    @staticmethod
+    def _session_run(cfg, params, **kw):
+        pb = PagedJaxModelBackend(cfg, params, 32, page_size=PS)
+        eng = ServingEngine(cfg, params, n_slots=4, cache_len=32,
+                            backend=pb, **kw)
+        rng = np.random.default_rng(3)
+        # prompt 6 + turn 1's 4 tokens cross the PS=8 page boundary, so
+        # the parked handle spans two pages when the session sleeps
+        eng.submit(rng.integers(1, 97, 6), 10, tool_calls=((4, 5),))
+        eng.run(max_steps=500)
+        assert len(eng.completed) == 1
+        return eng, pb, tuple(eng.completed[0].out_tokens)
+
+    def test_warm_wake_is_table_repoint_cold_wake_is_bit_identical(self):
+        """A woken session whose prefix KV pages are still resident skips
+        prefill entirely: the resume is a block-table re-point with zero
+        pool copies.  Forcing the same session through a stale eviction
+        (``session_ttl`` shorter than the think gap) rebuilds its KV from
+        the token history — and must produce the bit-identical stream."""
+        cfg = get_config("yi-6b").reduced(vocab=97)
+        params = api.init(cfg, jax.random.PRNGKey(0))
+        warm_eng, warm_pb, warm = self._session_run(cfg, params)
+        c = warm_eng.counters()
+        assert c["sleeps"] == c["wakes"] == 1
+        assert c["wake_reprefills"] == 0          # prefix pages were resident
+        assert warm_eng.stats.prefills == 1       # the one fresh prefill
+        assert warm_pb.stats["table_splices"] > 0  # wake was metadata
+        assert warm_pb.stats["pool_copies"] == 0   # ... and ONLY metadata
+        cold_eng, cold_pb, cold = self._session_run(cfg, params,
+                                                    session_ttl=2)
+        cc = cold_eng.counters()
+        assert cc["stale_evictions"] == 1          # KV dropped past the TTL
+        assert cc["wake_reprefills"] == 1          # wake rebuilt it
+        assert cold == warm                        # bit-identical stream
 
 
 class TestBatchAxisSpec:

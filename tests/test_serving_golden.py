@@ -25,7 +25,16 @@ ledger — per engine mode and topology, single-host and multi-host:
   arrivals, heavy-tailed lengths, interactive/standard/batch classes) on
   8 slots x 2 hosts: ``fifo`` holds slots in arrival order, ``sla`` runs
   WDRR admission + multilevel-feedback demotion + batch-gang preemption
-  (the snapshot additionally pins the preemption/demotion counters).
+  (the snapshot additionally pins the preemption/demotion counters);
+* ``agentic_tool`` — tool calls mid-decode on a single host (agentic
+  singles, an agentic gang, plain backlog): ``sleep`` parks KV and frees
+  the slot at each marker, ``hold`` keeps the slot through the think gap
+  — the snapshot pins the sleep/wake/affinity counters and the shared
+  digest proves blocking policy never changes tokens;
+* ``agentic_paged`` — a multi-turn session on the paged jax backend: the
+  woken session's prefix KV pages are still resident, so every wake is a
+  block-table re-point (``table_splices``) with **zero** pool copies and
+  no re-prefill.
 
 Each snapshot records the engine step count, a digest of every completed
 request's full decode stream (the stub backend hashes token history, so
@@ -168,6 +177,56 @@ def simulate(case: str, variant: str) -> dict:
         snap.update({k: c[k] for k in ("preemptions", "preempt_parks",
                                        "demotions")})
         return snap
+    if case == "agentic_tool":
+        # tool calls mid-decode, single host: agentic singles, one agentic
+        # gang (members share the schedule, so it sleeps/wakes together),
+        # plain backlog that inherits the freed slots under ``sleep``
+        eng = ServingEngine(None, None, n_slots=8,
+                            backend=StubModelBackend(),
+                            agentic_sleep=(variant == "sleep"))
+        rng = np.random.default_rng(5)
+        n = 0
+        for _ in range(4):
+            eng.submit(rng.integers(1, 250, 8), 12,
+                       tool_calls=((4, 6), (8, 3)))
+            n += 1
+        for _ in range(2):
+            eng.submit(rng.integers(1, 250, 8), 12, gang="ag",
+                       tool_calls=((6, 8),))
+            n += 1
+        for _ in range(8):
+            eng.submit(rng.integers(1, 250, 8), 10)
+            n += 1
+        snap = _drive(eng, n)
+        c = eng.counters()
+        snap.update({k: c[k] for k in ("sleeps", "holds", "wakes",
+                                       "wake_home", "wake_away",
+                                       "wake_reprefills")})
+        return snap
+    if case == "agentic_paged":
+        # a multi-turn session through the paged backend: both wakes find
+        # the prefix KV pages resident — block-table re-points, zero pool
+        # copies, no re-prefill
+        import jax
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.serving import PagedJaxModelBackend
+        cfg = get_config("yi-6b").reduced(vocab=97)
+        params = api.init(cfg, jax.random.PRNGKey(0))
+        pb = PagedJaxModelBackend(cfg, params, 32, page_size=8)
+        eng = ServingEngine(cfg, params, n_slots=4, cache_len=32,
+                            backend=pb)
+        rng = np.random.default_rng(7)
+        eng.submit(rng.integers(1, 97, 6), 10, tool_calls=((3, 4), (6, 3)))
+        eng.submit(rng.integers(1, 97, 5), 6)
+        snap = _drive(eng, 2)
+        c = eng.counters()
+        snap.update({k: c[k] for k in ("sleeps", "wakes",
+                                       "wake_reprefills")})
+        snap["pool_copies"] = pb.stats["pool_copies"]
+        snap["table_splices"] = pb.stats["table_splices"]
+        assert snap["pool_copies"] == 0 and snap["wake_reprefills"] == 0
+        return snap
     eng, spec, regen = build(case, variant)
     n = _submit(eng, spec)
     return _drive(eng, n, regen)
@@ -178,7 +237,9 @@ CASES = [("single_skew", "admission"), ("single_skew", "runtime"),
          ("multihost_skew", "naive"), ("multihost_skew", "dcn"),
          ("hbm_pressure", "blind"), ("hbm_pressure", "aware"),
          ("dcn_rebalance", "flat"), ("dcn_rebalance", "local"),
-         ("open_loop", "fifo"), ("open_loop", "sla")]
+         ("open_loop", "fifo"), ("open_loop", "sla"),
+         ("agentic_tool", "hold"), ("agentic_tool", "sleep"),
+         ("agentic_paged", "paged")]
 
 
 # ---------------------------------------------------------------------------
@@ -197,6 +258,9 @@ GOLDEN = {
     ('dcn_rebalance', 'local'): {'steps': 39, 'streams': '90b7d19ba0bb5e62', 'steals': 19, 'steal_refusals': 0, 'rebalances': 1, 'kv_migrations': 36, 'kv_page_moves': 5, 'kv_host_moves': 4, 'kv_parks': 0, 'prefills': 76, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 298.5},
     ('open_loop', 'fifo'): {'steps': 125, 'streams': '76c37afcead250e6', 'steals': 0, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 0, 'kv_page_moves': 0, 'kv_host_moves': 0, 'kv_parks': 0, 'prefills': 54, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 0.0, 'preemptions': 0, 'preempt_parks': 0, 'demotions': 0},
     ('open_loop', 'sla'): {'steps': 112, 'streams': '76c37afcead250e6', 'steals': 3, 'steal_refusals': 0, 'rebalances': 2, 'kv_migrations': 6, 'kv_page_moves': 3, 'kv_host_moves': 2, 'kv_parks': 6, 'prefills': 54, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 29.375, 'preemptions': 4, 'preempt_parks': 6, 'demotions': 0},
+    ('agentic_tool', 'hold'): {'steps': 36, 'streams': 'db5874ed0bb3a591', 'steals': 0, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 0, 'kv_page_moves': 0, 'kv_host_moves': 0, 'kv_parks': 0, 'prefills': 14, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 0.0, 'sleeps': 0, 'holds': 10, 'wakes': 10, 'wake_home': 0, 'wake_away': 0, 'wake_reprefills': 0},
+    ('agentic_tool', 'sleep'): {'steps': 28, 'streams': 'db5874ed0bb3a591', 'steals': 2, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 6, 'kv_page_moves': 5, 'kv_host_moves': 0, 'kv_parks': 10, 'prefills': 14, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 2.875, 'sleeps': 10, 'holds': 0, 'wakes': 10, 'wake_home': 5, 'wake_away': 5, 'wake_reprefills': 0},
+    ('agentic_paged', 'paged'): {'steps': 14, 'streams': '38499d22f18a0589', 'steals': 0, 'steal_refusals': 0, 'rebalances': 0, 'kv_migrations': 0, 'kv_page_moves': 0, 'kv_host_moves': 0, 'kv_parks': 2, 'prefills': 2, 'hbm_slot_waits': 0, 'hbm_refusals': 0, 'stall_steps': 0.0, 'sleeps': 2, 'wakes': 2, 'wake_reprefills': 0, 'pool_copies': 0, 'table_splices': 2},
 }
 
 
